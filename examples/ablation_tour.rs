@@ -1,0 +1,108 @@
+//! Ablation tour: walk every design decision of PCR and show what it
+//! buys, on one fixed workload — a guided version of the paper's §6.3
+//! and §6.4 for people reading the code.
+//!
+//!     cargo run --release --example ablation_tour
+
+use pcr::bench::scenario::{paper_config, Scale};
+use pcr::bench::Table;
+use pcr::cache::policy::PolicyKind;
+use pcr::serve::engine;
+use pcr::serve::system::SystemSpec;
+use pcr::serve::workload::Workload;
+use pcr::sim::pipeline::OverlapMode;
+use pcr::util::fmt_secs;
+
+fn main() {
+    let cfg = paper_config("llama2-7b", "a6000", true, 0.9, Scale::Lite);
+    let wl = Workload::build(&cfg);
+    println!(
+        "fixed workload: llama2-7b @ 0.9 req/s, {} requests, {:.0}% repetition\n",
+        wl.len(),
+        wl.repetition_ratio * 100.0
+    );
+    let run = |spec: SystemSpec| engine::run(&cfg, &spec, &wl);
+
+    println!("1) storage tiers — why GPU memory alone is not enough");
+    let mut t = Table::new(&["tiers", "ttft-mean", "hit%", "reuse%"]);
+    for name in ["vllm", "ccache", "sccache"] {
+        let out = run(SystemSpec::named(name, 0).unwrap());
+        t.row(&[
+            match name {
+                "vllm" => "GPU only".to_string(),
+                "ccache" => "GPU+DRAM".to_string(),
+                _ => "GPU+DRAM+SSD".to_string(),
+            },
+            fmt_secs(out.report.ttft.mean),
+            format!("{:.1}", out.cache.hit_ratio() * 100.0),
+            format!("{:.1}", out.report.mean_reuse_ratio * 100.0),
+        ]);
+    }
+    t.print();
+
+    println!("\n2) layer-wise overlapping — hiding the PCIe traffic (§4.3)");
+    let mut t = Table::new(&["overlap", "ttft-mean", "vs sync"]);
+    let sync = run(SystemSpec::pcr_with_overlap(OverlapMode::Sync))
+        .report
+        .ttft
+        .mean;
+    for mode in [
+        OverlapMode::Sync,
+        OverlapMode::OnlyUp,
+        OverlapMode::OnlyDown,
+        OverlapMode::UpDown,
+    ] {
+        let out = run(SystemSpec::pcr_with_overlap(mode));
+        t.row(&[
+            format!("{mode:?}"),
+            fmt_secs(out.report.ttft.mean),
+            format!("-{:.1}%", 100.0 * (1.0 - out.report.ttft.mean / sync)),
+        ]);
+    }
+    t.print();
+
+    println!("\n3) queue-based prefetch — hiding the SSD (§4.4)");
+    let mut t = Table::new(&["window", "ttft-mean", "prefetches", "ssd-wait(total)"]);
+    for window in [0usize, 2, 4, 6] {
+        let out = run(SystemSpec::named("pcr", window).unwrap());
+        t.row(&[
+            window.to_string(),
+            fmt_secs(out.report.ttft.mean),
+            out.prefetch_completed.to_string(),
+            fmt_secs(out.breakdown.ssd_wait),
+        ]);
+    }
+    t.print();
+
+    println!("\n4) look-ahead LRU — eviction that reads the queue (§4.2)");
+    let mut t = Table::new(&["policy", "ttft-mean", "hit%"]);
+    for (label, policy, lookahead) in [
+        ("plain LRU", PolicyKind::Lru, false),
+        ("FIFO", PolicyKind::Fifo, false),
+        ("PGDSF (RAGCache)", PolicyKind::Pgdsf, false),
+        ("look-ahead LRU", PolicyKind::LookaheadLru, true),
+    ] {
+        let mut spec = SystemSpec::named("pcr", 4).unwrap();
+        spec.policy = policy;
+        spec.lookahead_lru = lookahead;
+        let out = run(spec);
+        t.row(&[
+            label.to_string(),
+            fmt_secs(out.report.ttft.mean),
+            format!("{:.1}", out.cache.hit_ratio() * 100.0),
+        ]);
+    }
+    t.print();
+
+    println!("\n5) batched chunk copies — cudaMemcpyBatchAsync (Fig 13)");
+    let mut t = Table::new(&["copies", "ttft-mean"]);
+    for (label, batch) in [("block-by-block", false), ("batch-async", true)] {
+        let mut spec = SystemSpec::named("pcr", 4).unwrap();
+        spec.batch_async = batch;
+        let out = run(spec);
+        t.row(&[label.to_string(), fmt_secs(out.report.ttft.mean)]);
+    }
+    t.print();
+
+    println!("\nfull PCR = tiers + up-down overlap + prefetch + look-ahead LRU + batched copies");
+}

@@ -1,0 +1,93 @@
+//! Serve the real model over HTTP and fire a small closed-loop load at
+//! it from client threads — the deployable face of the system.
+//!
+//!     make artifacts && cargo run --release --example http_server
+
+use pcr::rag::corpus::{Corpus, CorpusConfig};
+use pcr::rag::retriever::Retriever;
+use pcr::rag::tokenizer::Tokenizer;
+use pcr::runtime::executor::{ExecutorHandle, PjrtExecutor};
+use pcr::runtime::manifest::{default_artifacts_dir, Manifest};
+use pcr::serve::server::{http_request, HttpServer, ServerState};
+use pcr::util::json::Json;
+use pcr::util::stats::Samples;
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let vocab = manifest.vocab as u32;
+    let spill = std::env::temp_dir().join("pcr-http-example-spill");
+    let executor = ExecutorHandle::spawn(move || {
+        PjrtExecutor::new(manifest, 24, 256, Some(&spill))
+    })?;
+
+    let corpus = Corpus::generate(CorpusConfig {
+        n_docs: 300,
+        n_topics: 16,
+        vocab,
+        mean_doc_tokens: 330,
+        doc_tokens_jitter: 0.15,
+        seed: 5,
+    });
+    let retriever = Retriever::build(corpus, 2);
+
+    let state = ServerState {
+        executor,
+        retriever: Some(retriever),
+        tokenizer: Tokenizer::new(vocab),
+        ttft: Mutex::new(Samples::new()),
+        requests: Mutex::new(0),
+    };
+    let server = HttpServer::bind("127.0.0.1:0", state)?;
+    let addr = server.local_addr()?.to_string();
+    let stop = server.stop_handle();
+    println!("serving on http://{addr}");
+    let handle = std::thread::spawn(move || server.serve(4));
+
+    // --- closed-loop clients replaying a handful of hot queries ---
+    let queries = [
+        "how does the prefix tree cache kv chunks",
+        "what is layer wise overlapping in pcr",
+        "queue based prefetching from ssd to dram",
+        "how does the prefix tree cache kv chunks", // repeat: reuse!
+        "what is layer wise overlapping in pcr",
+    ];
+    let mut client_threads = Vec::new();
+    for (c, chunk) in queries.chunks(2).enumerate() {
+        let addr = addr.clone();
+        let mine: Vec<String> = chunk.iter().map(|s| s.to_string()).collect();
+        client_threads.push(std::thread::spawn(move || -> anyhow::Result<Vec<Json>> {
+            let mut out = Vec::new();
+            for q in mine {
+                let body = Json::from_pairs(vec![("query", q.as_str().into())]).dump();
+                let (code, j) = http_request(&addr, "POST", "/rag", &body)?;
+                anyhow::ensure!(code == 200, "client {c}: {j}");
+                out.push(j);
+            }
+            Ok(out)
+        }));
+    }
+    let mut total_reused = 0usize;
+    for t in client_threads {
+        for j in t.join().unwrap()? {
+            println!(
+                "  first_token={} prefill={:.3}s reused={} docs={}",
+                j.get("first_token").unwrap(),
+                j.get("prefill_s").unwrap().as_f64().unwrap(),
+                j.get("reused_tokens").unwrap(),
+                j.get("doc_ids").unwrap()
+            );
+            total_reused += j.get("reused_tokens").unwrap().as_usize().unwrap();
+        }
+    }
+
+    let (_, stats) = http_request(&addr, "GET", "/stats", "")?;
+    println!("\n/stats: {stats}");
+    println!("total reused tokens across clients: {total_reused}");
+
+    stop.store(true, Ordering::SeqCst);
+    handle.join().unwrap()?;
+    println!("server stopped cleanly");
+    Ok(())
+}

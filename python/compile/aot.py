@@ -1,0 +1,130 @@
+"""AOT export: lower the L2 model (with the L1 Pallas kernel inlined) to
+HLO *text* artifacts the rust runtime loads via PJRT.
+
+Run once at build time (``make artifacts``); Python is never on the
+request path. Interchange is HLO text, NOT ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (``artifacts/``):
+  manifest.json                 model config, param table, bucket table
+  weights.bin                   all parameters, f32 LE, concatenated in
+                                the param-table order
+  prefill_p{P}_n{N}.hlo.txt     one per (past, new) shape bucket
+  decode_s{S}.hlo.txt           padded decode step
+
+HLO parameter ABI (the rust side reconstructs this from the manifest):
+  prefill: [*weights, past_k[L,Hkv,P,D], past_v, tokens[N] i32,
+            past_len i32[], new_len i32[]] -> tuple(logits[V], new_k, new_v)
+  decode:  [*weights, k_cache[L,Hkv,S,D], v_cache, token i32[],
+            cur_len i32[]] -> tuple(logits[V], k_cache', v_cache')
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.model import (ModelConfig, init_params, make_decode_fn,
+                           make_prefill_fn, param_names, param_shapes)
+
+# (past, new) shape buckets. past_len=0..P and new_len=1..N are dynamic
+# within a bucket; the rust runtime picks the smallest bucket that fits.
+# 128 is also the cache-engine chunk size (tokens), so P covers 1..4
+# reused chunks and N covers 1..4 computed chunks per step.
+PREFILL_BUCKETS = [(128, 128), (128, 256), (128, 512),
+                   (256, 128), (256, 256), (256, 512),
+                   (512, 128), (512, 256), (512, 512)]
+DECODE_MAX_LEN = 1024
+CHUNK_TOKENS = 128
+SEED = 20260710
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def export(out_dir: str, cfg: ModelConfig, *, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    params = init_params(cfg, seed=SEED)
+    names = param_names(cfg)
+    shapes = param_shapes(cfg)
+
+    # weights.bin — flat f32 little-endian in param-table order.
+    weights_path = os.path.join(out_dir, "weights.bin")
+    with open(weights_path, "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype="<f4").tobytes())
+
+    artifacts = []
+    for (p, n) in PREFILL_BUCKETS:
+        t0 = time.time()
+        fn, example = make_prefill_fn(cfg, p, n)
+        text = to_hlo_text(jax.jit(fn).lower(*example))
+        name = f"prefill_p{p}_n{n}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        artifacts.append({"kind": "prefill", "past": p, "new": n, "file": name})
+        if verbose:
+            print(f"  lowered {name} ({len(text)} chars, {time.time()-t0:.1f}s)",
+                  file=sys.stderr)
+
+    t0 = time.time()
+    fn, example = make_decode_fn(cfg, DECODE_MAX_LEN)
+    text = to_hlo_text(jax.jit(fn).lower(*example))
+    decode_name = f"decode_s{DECODE_MAX_LEN}.hlo.txt"
+    with open(os.path.join(out_dir, decode_name), "w") as f:
+        f.write(text)
+    artifacts.append({"kind": "decode", "max_len": DECODE_MAX_LEN,
+                      "file": decode_name})
+    if verbose:
+        print(f"  lowered {decode_name} ({len(text)} chars, {time.time()-t0:.1f}s)",
+              file=sys.stderr)
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff, "rope_theta": cfg.rope_theta,
+        },
+        "dtype": "f32",
+        "seed": SEED,
+        "chunk_tokens": CHUNK_TOKENS,
+        "params": [{"name": nm, "shape": list(sh)}
+                   for nm, sh in zip(names, shapes)],
+        "weights_file": "weights.bin",
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    cfg = ModelConfig()
+    manifest = export(args.out_dir, cfg, verbose=not args.quiet)
+    n_params = sum(int(np.prod(p["shape"])) for p in manifest["params"])
+    print(f"exported {len(manifest['artifacts'])} artifacts, "
+          f"{n_params} params -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

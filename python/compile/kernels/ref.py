@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the prefill-attention Pallas kernel.
+
+Same contract as :func:`prefill_attention` (see that module's docstring),
+written as straight-line dense attention with explicit masks. pytest
+compares the Pallas kernel against this across shape/dtype/length sweeps
+— this file is the correctness ground truth of the whole L1 layer, keep
+it boring.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def prefill_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                          past_len, new_len) -> jax.Array:
+    """Dense reference attention over ``[past KV ‖ new KV]``.
+
+    q: [H, N, D]; k, v: [Hkv, P+N, D]; returns [H, N, D].
+    """
+    h, n, d = q.shape
+    h_kv, s_total, _ = k.shape
+    p = s_total - n
+    group = h // h_kv
+
+    past_len = jnp.asarray(past_len, jnp.int32).reshape(())
+    new_len = jnp.asarray(new_len, jnp.int32).reshape(())
+
+    # Expand KV heads to match query heads (GQA share pattern).
+    kk = jnp.repeat(k, group, axis=0)  # [H, S, D]
+    vv = jnp.repeat(v, group, axis=0)
+
+    scores = jnp.einsum("hnd,hsd->hns", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / math.sqrt(d)
+
+    i = jnp.arange(n)[:, None]       # query new-token index [N, 1]
+    j = jnp.arange(s_total)[None, :]  # absolute key slot     [1, S]
+    jn = j - p
+    visible = jnp.where(j < p, j < past_len,
+                        (jn <= i) & (jn < new_len) & (jn >= 0))  # [N, S]
+    scores = jnp.where(visible[None, :, :], scores, NEG_INF)
+
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hns,hsd->hnd", probs, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,279 @@
+"""L2 — the generator being served: a small GQA transformer in JAX.
+
+This is the "LLM executor" of the PCR paper, shrunk to a size the CPU
+PJRT client can serve while keeping every structural property the paper's
+evaluation leans on:
+
+  * GQA (``n_kv_heads < n_heads``) — the Qwen2.5/Llama3 KV layout; set
+    ``n_kv_heads == n_heads`` for the Llama2-style MHA layout. The KV
+    bytes/token ratio between the two drives half the paper's contrasts.
+  * position-dependent KV (rotary embeddings) — the reason PCR restricts
+    itself to *exact prefix* reuse.
+  * a prefill entrypoint that accepts a reused prefix KV cache
+    (``past_k/past_v`` + ``past_len``) and returns the KV produced for
+    the new tokens, which the rust cache engine chunks and stores.
+
+Attention runs through the L1 Pallas kernel
+(:mod:`compile.kernels.prefill_attention`), so the kernel lowers into the
+same HLO module exported by :mod:`compile.aot`.
+
+The invariant that makes KV reuse *lossless* (the paper's accuracy claim)
+is tested in ``python/tests/test_model.py``::
+
+    prefill(tokens[:m] ++ tokens[m:])  ==  prefill(tokens[m:], past=KV(tokens[:m]))
+
+Everything is f32 and single-sequence; batching is the rust scheduler's
+job (continuous batching interleaves sequences across steps).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.prefill_attention import prefill_attention
+from compile.kernels.ref import prefill_attention_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters of the served model."""
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 512
+    rope_theta: float = 10000.0
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        """f32 bytes of KV cache one token occupies across all layers."""
+        return self.n_layers * 2 * self.n_kv_heads * self.head_dim * 4
+
+
+# Parameter order is the ABI between aot.py and the rust runtime: the HLO
+# parameter list is [*weights (this order), past_k, past_v, tokens,
+# past_len, new_len]. Never reorder without regenerating artifacts.
+def param_names(cfg: ModelConfig) -> List[str]:
+    names = ["embed"]
+    for l in range(cfg.n_layers):
+        names += [
+            f"l{l}.attn_norm", f"l{l}.wq", f"l{l}.wk", f"l{l}.wv", f"l{l}.wo",
+            f"l{l}.mlp_norm", f"l{l}.w_gate", f"l{l}.w_up", f"l{l}.w_down",
+        ]
+    names += ["final_norm", "lm_head"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> List[Tuple[int, ...]]:
+    shapes = [(cfg.vocab, cfg.d_model)]
+    qd = cfg.n_heads * cfg.head_dim
+    kd = cfg.n_kv_heads * cfg.head_dim
+    for _ in range(cfg.n_layers):
+        shapes += [
+            (cfg.d_model,), (cfg.d_model, qd), (cfg.d_model, kd),
+            (cfg.d_model, kd), (qd, cfg.d_model),
+            (cfg.d_model,), (cfg.d_model, cfg.d_ff), (cfg.d_model, cfg.d_ff),
+            (cfg.d_ff, cfg.d_model),
+        ]
+    shapes += [(cfg.d_model,), (cfg.d_model, cfg.vocab)]
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Deterministic small-scale init (truncated-normal-ish, f32)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            params.append(jnp.ones(shape, jnp.float32))  # norm gains
+        else:
+            fan_in = shape[0]
+            scale = 1.0 / jnp.sqrt(jnp.float32(fan_in))
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) * scale)
+    return params
+
+
+def _rms_norm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def _rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [H, N, D]; positions: [N] int32."""
+    h, n, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [N, half]
+    cos = jnp.cos(angles)[None, :, :]
+    sin = jnp.sin(angles)[None, :, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _unflatten(cfg: ModelConfig, params: List[jax.Array]):
+    """Split the flat param list into (embed, per-layer tuples, final, head)."""
+    embed = params[0]
+    layers = []
+    idx = 1
+    for _ in range(cfg.n_layers):
+        layers.append(tuple(params[idx:idx + 9]))
+        idx += 9
+    final_norm, lm_head = params[idx], params[idx + 1]
+    return embed, layers, final_norm, lm_head
+
+
+def prefill(cfg: ModelConfig, params: List[jax.Array],
+            past_k: jax.Array, past_v: jax.Array, tokens: jax.Array,
+            past_len: jax.Array, new_len: jax.Array,
+            *, use_pallas: bool = True,
+            block_q: int = 64, block_k: int = 128):
+    """Prefill ``tokens`` on top of a reused prefix KV cache.
+
+    Args:
+      past_k/past_v: ``[L, Hkv, P, D]`` prefix KV (post-rotary); only the
+        first ``past_len`` slots are valid, the rest is bucket padding.
+      tokens: ``[N]`` int32; only the first ``new_len`` are valid.
+      past_len/new_len: int32 scalars.
+
+    Returns:
+      ``(logits, new_k, new_v)`` — ``logits: [vocab]`` for the *last
+      valid* token (the first generated token's distribution, i.e. what
+      TTFT waits for), and ``new_k/new_v: [L, Hkv, N, D]`` the KV of the
+      new-token slots (garbage beyond ``new_len``; the cache engine only
+      stores whole valid chunks).
+    """
+    embed, layers, final_norm, lm_head = _unflatten(cfg, params)
+    n = tokens.shape[0]
+    p = past_k.shape[2]
+    past_len = jnp.asarray(past_len, jnp.int32).reshape(())
+    new_len = jnp.asarray(new_len, jnp.int32).reshape(())
+    positions = past_len + jnp.arange(n, dtype=jnp.int32)
+
+    x = embed[tokens]  # [N, d]
+    new_ks, new_vs = [], []
+    for l, (a_norm, wq, wk, wv, wo, m_norm, w_gate, w_up, w_down) in enumerate(layers):
+        h = _rms_norm(x, a_norm)
+        q = (h @ wq).reshape(n, cfg.n_heads, cfg.head_dim).transpose(1, 0, 2)
+        k = (h @ wk).reshape(n, cfg.n_kv_heads, cfg.head_dim).transpose(1, 0, 2)
+        v = (h @ wv).reshape(n, cfg.n_kv_heads, cfg.head_dim).transpose(1, 0, 2)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+
+        k_all = jnp.concatenate([past_k[l], k], axis=1)  # [Hkv, P+N, D]
+        v_all = jnp.concatenate([past_v[l], v], axis=1)
+        if use_pallas:
+            attn = prefill_attention(q, k_all, v_all, past_len, new_len,
+                                     block_q=min(block_q, n),
+                                     block_k=min(block_k, p + n))
+        else:
+            attn = prefill_attention_ref(q, k_all, v_all, past_len, new_len)
+        attn = attn.transpose(1, 0, 2).reshape(n, cfg.n_heads * cfg.head_dim)
+        x = x + attn @ wo
+
+        h2 = _rms_norm(x, m_norm)
+        x = x + (jax.nn.silu(h2 @ w_gate) * (h2 @ w_up)) @ w_down
+        new_ks.append(k)
+        new_vs.append(v)
+
+    x = _rms_norm(x, final_norm)
+    last = jnp.clip(new_len - 1, 0, n - 1)
+    logits = x[last] @ lm_head  # [vocab]
+    new_k = jnp.stack(new_ks)  # [L, Hkv, N, D]
+    new_v = jnp.stack(new_vs)
+    return logits, new_k, new_v
+
+
+def decode_step(cfg: ModelConfig, params: List[jax.Array],
+                k_cache: jax.Array, v_cache: jax.Array,
+                token: jax.Array, cur_len: jax.Array):
+    """One decode step against a padded KV cache.
+
+    k_cache/v_cache: ``[L, Hkv, S_max, D]``; ``cur_len`` valid entries.
+    Returns ``(logits, k_cache', v_cache')`` with the new token's KV
+    written at slot ``cur_len``. Decode is memory-bound, not the paper's
+    hot-spot, so it uses the dense reference attention.
+    """
+    embed, layers, final_norm, lm_head = _unflatten(cfg, params)
+    cur_len = jnp.asarray(cur_len, jnp.int32).reshape(())
+    positions = cur_len[None]
+
+    x = embed[jnp.asarray(token, jnp.int32).reshape((1,))]  # [1, d]
+    k_out, v_out = [], []
+    for l, (a_norm, wq, wk, wv, wo, m_norm, w_gate, w_up, w_down) in enumerate(layers):
+        h = _rms_norm(x, a_norm)
+        q = (h @ wq).reshape(1, cfg.n_heads, cfg.head_dim).transpose(1, 0, 2)
+        k = (h @ wk).reshape(1, cfg.n_kv_heads, cfg.head_dim).transpose(1, 0, 2)
+        v = (h @ wv).reshape(1, cfg.n_kv_heads, cfg.head_dim).transpose(1, 0, 2)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+
+        kc = jax.lax.dynamic_update_slice(k_cache[l], k, (0, cur_len, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[l], v, (0, cur_len, 0))
+        k_out.append(kc)
+        v_out.append(vc)
+
+        # Single query attending over cur_len+1 valid slots: past window
+        # is the padded cache, new window is this one token.
+        attn = prefill_attention_ref(
+            q, jnp.concatenate([kc, k], axis=1),
+            jnp.concatenate([vc, v], axis=1),
+            cur_len, jnp.int32(1))
+        attn = attn.transpose(1, 0, 2).reshape(1, cfg.n_heads * cfg.head_dim)
+        x = x + attn @ wo
+        h2 = _rms_norm(x, m_norm)
+        x = x + (jax.nn.silu(h2 @ w_gate) * (h2 @ w_up)) @ w_down
+
+    x = _rms_norm(x, final_norm)
+    logits = x[0] @ lm_head
+    return logits, jnp.stack(k_out), jnp.stack(v_out)
+
+
+def make_prefill_fn(cfg: ModelConfig, p: int, n: int, *, use_pallas: bool = True):
+    """Close over the config for a fixed (past=P, new=N) shape bucket."""
+    n_params = len(param_names(cfg))
+
+    def fn(*args):
+        params = list(args[:n_params])
+        past_k, past_v, tokens, past_len, new_len = args[n_params:]
+        return prefill(cfg, params, past_k, past_v, tokens, past_len, new_len,
+                       use_pallas=use_pallas)
+
+    example = tuple(
+        jax.ShapeDtypeStruct(s, jnp.float32) for s in param_shapes(cfg)
+    ) + (
+        jax.ShapeDtypeStruct((cfg.n_layers, cfg.n_kv_heads, p, cfg.head_dim), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n_layers, cfg.n_kv_heads, p, cfg.head_dim), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return fn, example
+
+
+def make_decode_fn(cfg: ModelConfig, s_max: int):
+    """Close over the config for the padded decode bucket."""
+    n_params = len(param_names(cfg))
+
+    def fn(*args):
+        params = list(args[:n_params])
+        k_cache, v_cache, token, cur_len = args[n_params:]
+        return decode_step(cfg, params, k_cache, v_cache, token, cur_len)
+
+    example = tuple(
+        jax.ShapeDtypeStruct(s, jnp.float32) for s in param_shapes(cfg)
+    ) + (
+        jax.ShapeDtypeStruct((cfg.n_layers, cfg.n_kv_heads, s_max, cfg.head_dim), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n_layers, cfg.n_kv_heads, s_max, cfg.head_dim), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return fn, example

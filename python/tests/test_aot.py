@@ -1,0 +1,95 @@
+"""AOT export contract tests: manifest/weights/HLO artifacts the rust
+runtime depends on. Uses a tiny config + 2 buckets to stay fast."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import compile.aot as aot
+from compile.model import ModelConfig, init_params, param_shapes
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory, monkeypatch_module=None):
+    out = tmp_path_factory.mktemp("artifacts")
+    cfg = ModelConfig(vocab=64, d_model=32, n_layers=2, n_heads=2,
+                      n_kv_heads=1, head_dim=16, d_ff=64)
+    # shrink the bucket/decode tables for the test export
+    orig_buckets, orig_decode = aot.PREFILL_BUCKETS, aot.DECODE_MAX_LEN
+    aot.PREFILL_BUCKETS = [(32, 32), (64, 32)]
+    aot.DECODE_MAX_LEN = 128
+    try:
+        manifest = aot.export(str(out), cfg, verbose=False)
+    finally:
+        aot.PREFILL_BUCKETS, aot.DECODE_MAX_LEN = orig_buckets, orig_decode
+    return str(out), cfg, manifest
+
+
+def test_manifest_round_trips(exported):
+    out, cfg, manifest = exported
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    assert on_disk["model"]["n_kv_heads"] == cfg.n_kv_heads
+    assert on_disk["dtype"] == "f32"
+
+
+def test_weights_bin_size_matches_param_table(exported):
+    out, cfg, manifest = exported
+    expect = sum(int(np.prod(p["shape"])) for p in manifest["params"]) * 4
+    assert os.path.getsize(os.path.join(out, manifest["weights_file"])) == expect
+
+
+def test_weights_bin_contents_match_init(exported):
+    out, cfg, manifest = exported
+    params = init_params(cfg, seed=aot.SEED)
+    blob = np.fromfile(os.path.join(out, manifest["weights_file"]),
+                       dtype="<f4")
+    off = 0
+    for p in params:
+        flat = np.asarray(p).ravel()
+        np.testing.assert_array_equal(blob[off:off + flat.size], flat)
+        off += flat.size
+    assert off == blob.size
+
+
+def test_artifact_files_exist_and_are_hlo(exported):
+    out, cfg, manifest = exported
+    assert len(manifest["artifacts"]) == 3  # 2 prefill + 1 decode
+    for art in manifest["artifacts"]:
+        path = os.path.join(out, art["file"])
+        assert os.path.exists(path)
+        head = open(path).read(200)
+        assert "HloModule" in head
+
+
+def test_prefill_artifact_declares_bucket_shapes(exported):
+    out, cfg, manifest = exported
+    art = [a for a in manifest["artifacts"] if a["kind"] == "prefill"][1]
+    text = open(os.path.join(out, art["file"])).read()
+    p, n = art["past"], art["new"]
+    shape = f"f32[{cfg.n_layers},{cfg.n_kv_heads},{p},{cfg.head_dim}]"
+    assert shape in text
+    assert f"s32[{n}]" in text
+
+
+def test_decode_artifact_declares_max_len(exported):
+    out, cfg, manifest = exported
+    art = [a for a in manifest["artifacts"] if a["kind"] == "decode"][0]
+    assert art["max_len"] == 128
+    text = open(os.path.join(out, art["file"])).read()
+    assert f"f32[{cfg.n_layers},{cfg.n_kv_heads},128,{cfg.head_dim}]" in text
+
+
+def test_param_order_is_stable_abi(exported):
+    out, cfg, manifest = exported
+    names = [p["name"] for p in manifest["params"]]
+    assert names[0] == "embed"
+    assert names[-1] == "lm_head"
+    assert names[1:10] == [
+        "l0.attn_norm", "l0.wq", "l0.wk", "l0.wv", "l0.wo",
+        "l0.mlp_norm", "l0.w_gate", "l0.w_up", "l0.w_down"]
+    shapes = [tuple(p["shape"]) for p in manifest["params"]]
+    assert shapes == param_shapes(cfg)

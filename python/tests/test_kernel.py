@@ -1,0 +1,166 @@
+"""L1 correctness: Pallas prefill-attention kernel vs the pure-jnp oracle.
+
+hypothesis sweeps head counts, GQA group sizes, bucket shapes, tile sizes
+and valid lengths; every case asserts allclose on the *valid* region
+(rows beyond new_len are bucket padding with unspecified contents).
+"""
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.prefill_attention import prefill_attention
+from compile.kernels.ref import prefill_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+def _check(h, h_kv, p, n, d, past_len, new_len, *, block_q=32, block_k=32,
+           seed=0, atol=2e-5):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (h, n, d))
+    k = _rand(rng, (h_kv, p + n, d))
+    v = _rand(rng, (h_kv, p + n, d))
+    got = prefill_attention(q, k, v, past_len, new_len,
+                            block_q=block_q, block_k=block_k)
+    want = prefill_attention_ref(q, k, v, past_len, new_len)
+    np.testing.assert_allclose(
+        np.asarray(got)[:, :new_len], np.asarray(want)[:, :new_len],
+        atol=atol, rtol=1e-4)
+    return got
+
+
+class TestBasic:
+    def test_no_past(self):
+        _check(h=4, h_kv=2, p=0, n=32, d=16, past_len=0, new_len=32)
+
+    def test_full_past(self):
+        _check(h=4, h_kv=2, p=64, n=32, d=16, past_len=64, new_len=32)
+
+    def test_partial_past(self):
+        _check(h=4, h_kv=2, p=64, n=32, d=16, past_len=37, new_len=32)
+
+    def test_partial_new(self):
+        _check(h=4, h_kv=2, p=64, n=32, d=16, past_len=64, new_len=13)
+
+    def test_single_new_token(self):
+        _check(h=4, h_kv=2, p=64, n=32, d=16, past_len=64, new_len=1)
+
+    def test_mha_layout(self):
+        # n_kv_heads == n_heads is the Llama2-style MHA layout.
+        _check(h=4, h_kv=4, p=32, n=32, d=16, past_len=32, new_len=32)
+
+    def test_extreme_gqa(self):
+        _check(h=8, h_kv=1, p=32, n=32, d=16, past_len=16, new_len=32)
+
+    def test_zero_past_len_with_padded_past(self):
+        # Fresh request run through a past-padded bucket: every past slot
+        # must be masked out even though the buffer holds garbage.
+        rng = np.random.default_rng(7)
+        h, h_kv, p, n, d = 4, 2, 64, 32, 16
+        q = _rand(rng, (h, n, d))
+        k = _rand(rng, (h_kv, p + n, d))
+        v = _rand(rng, (h_kv, p + n, d))
+        got = prefill_attention(q, k, v, 0, n, block_q=32, block_k=32)
+        # Same new KV, totally different past contents -> same output.
+        k2 = k.at[:, :p].set(_rand(rng, (h_kv, p, d)) * 100.0)
+        v2 = v.at[:, :p].set(_rand(rng, (h_kv, p, d)) * 100.0)
+        got2 = prefill_attention(q, k2, v2, 0, n, block_q=32, block_k=32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(got2),
+                                   atol=1e-6)
+
+    def test_causality_within_new(self):
+        # Query i must not see new key j > i: perturbing the tail tokens
+        # cannot change earlier rows.
+        rng = np.random.default_rng(8)
+        h, h_kv, p, n, d = 2, 2, 0, 32, 16
+        q = _rand(rng, (h, n, d))
+        k = _rand(rng, (h_kv, n, d))
+        v = _rand(rng, (h_kv, n, d))
+        got = prefill_attention(q, k, v, 0, n, block_q=16, block_k=16)
+        k2 = k.at[:, 16:].set(_rand(rng, (h_kv, 16, d)) * 50)
+        v2 = v.at[:, 16:].set(_rand(rng, (h_kv, 16, d)) * 50)
+        got2 = prefill_attention(q, k2, v2, 0, n, block_q=16, block_k=16)
+        np.testing.assert_allclose(np.asarray(got)[:, :16],
+                                   np.asarray(got2)[:, :16], atol=1e-6)
+
+    def test_padding_rows_are_finite(self):
+        got = _check(h=2, h_kv=2, p=32, n=32, d=8, past_len=5, new_len=3)
+        assert np.all(np.isfinite(np.asarray(got)))
+
+    def test_rejects_bad_group(self):
+        rng = np.random.default_rng(0)
+        with pytest.raises(ValueError):
+            prefill_attention(_rand(rng, (3, 8, 8)), _rand(rng, (2, 8, 8)),
+                              _rand(rng, (2, 8, 8)), 0, 8)
+
+    def test_rejects_short_window(self):
+        rng = np.random.default_rng(0)
+        with pytest.raises(ValueError):
+            prefill_attention(_rand(rng, (2, 16, 8)), _rand(rng, (2, 8, 8)),
+                              _rand(rng, (2, 8, 8)), 0, 8)
+
+    def test_rejects_misaligned_block_q(self):
+        rng = np.random.default_rng(0)
+        with pytest.raises(ValueError):
+            prefill_attention(_rand(rng, (2, 24, 8)), _rand(rng, (2, 24, 8)),
+                              _rand(rng, (2, 24, 8)), 0, 24, block_q=16)
+
+
+class TestNumerics:
+    def test_softmax_scale_invariance_of_uniform_values(self):
+        # If V rows are identical, output equals that row regardless of
+        # the score distribution — a strong sanity check on the online
+        # softmax normalization.
+        rng = np.random.default_rng(3)
+        h, h_kv, p, n, d = 2, 1, 32, 16, 8
+        q = _rand(rng, (h, n, d)) * 3.0
+        k = _rand(rng, (h_kv, p + n, d))
+        row = rng.normal(size=(1, 1, d)).astype(np.float32)
+        v = jnp.asarray(np.broadcast_to(row, (h_kv, p + n, d)))
+        got = prefill_attention(q, k, v, p, n, block_q=16, block_k=16)
+        want = np.broadcast_to(row, (h, n, d))
+        np.testing.assert_allclose(np.asarray(got), want, atol=2e-5, rtol=1e-4)
+
+    def test_large_logits_stable(self):
+        rng = np.random.default_rng(4)
+        h, h_kv, p, n, d = 2, 2, 32, 16, 8
+        q = _rand(rng, (h, n, d)) * 30.0
+        k = _rand(rng, (h_kv, p + n, d)) * 30.0
+        v = _rand(rng, (h_kv, p + n, d))
+        got = prefill_attention(q, k, v, p, n, block_q=16, block_k=16)
+        want = prefill_attention_ref(q, k, v, p, n)
+        assert np.all(np.isfinite(np.asarray(got)))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-4, rtol=1e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    h_kv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    p_blocks=st.integers(0, 3),
+    n_blocks=st.integers(1, 3),
+    d=st.sampled_from([8, 16, 32]),
+    data=st.data(),
+)
+def test_kernel_matches_ref_sweep(h_kv, group, p_blocks, n_blocks, d, data):
+    """Property sweep: kernel == oracle across shapes and valid lengths."""
+    block = 16
+    p = p_blocks * block
+    n = n_blocks * block
+    h = h_kv * group
+    past_len = data.draw(st.integers(0, p), label="past_len")
+    new_len = data.draw(st.integers(1, n), label="new_len")
+    block_k = data.draw(st.sampled_from([8, 16, 48]), label="block_k")
+    seed = data.draw(st.integers(0, 2**16), label="seed")
+    _check(h=h, h_kv=h_kv, p=p, n=n, d=d, past_len=past_len,
+           new_len=new_len, block_q=block, block_k=block_k, seed=seed)

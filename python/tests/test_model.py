@@ -1,0 +1,195 @@
+"""L2 correctness: the served transformer.
+
+Key invariant (the paper's accuracy claim): exact-prefix KV reuse is
+*lossless* — prefilling tokens on top of a cached prefix KV reproduces
+the full-recompute logits up to blocked-softmax reassociation (~1e-6;
+different past/new bucket shapes partition the online softmax loop
+differently, so bit-exactness only holds when partitions coincide).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.model import (ModelConfig, decode_step, init_params,
+                           make_decode_fn, make_prefill_fn, param_names,
+                           param_shapes, prefill)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig(vocab=128, d_model=64, n_layers=2, n_heads=4,
+                  n_kv_heads=2, head_dim=16, d_ff=128)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=1)
+
+
+def _tokens(rng, n):
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=n), jnp.int32)
+
+
+def _zero_past(p):
+    shape = (CFG.n_layers, CFG.n_kv_heads, p, CFG.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+class TestShapes:
+    def test_param_table_consistent(self):
+        assert len(param_names(CFG)) == len(param_shapes(CFG))
+        assert param_names(CFG)[0] == "embed"
+        assert param_shapes(CFG)[0] == (CFG.vocab, CFG.d_model)
+
+    def test_prefill_output_shapes(self, params):
+        rng = np.random.default_rng(0)
+        zk, zv = _zero_past(32)
+        logits, nk, nv = prefill(CFG, params, zk, zv, _tokens(rng, 32), 0, 32,
+                                 block_q=16, block_k=16)
+        assert logits.shape == (CFG.vocab,)
+        assert nk.shape == (CFG.n_layers, CFG.n_kv_heads, 32, CFG.head_dim)
+        assert nv.shape == nk.shape
+
+    def test_kv_bytes_per_token(self):
+        assert CFG.kv_bytes_per_token == 2 * 2 * 2 * 16 * 4
+
+    def test_make_prefill_fn_example_args(self):
+        fn, example = make_prefill_fn(CFG, 32, 16)
+        assert len(example) == len(param_names(CFG)) + 5
+        assert example[-3].shape == (16,)
+
+    def test_make_decode_fn_example_args(self):
+        fn, example = make_decode_fn(CFG, 64)
+        assert len(example) == len(param_names(CFG)) + 4
+
+
+class TestReuseLossless:
+    def test_split_prefill_matches_full(self, params):
+        """prefill(full) == prefill(rest | KV(prefix)) exactly."""
+        rng = np.random.default_rng(2)
+        toks = _tokens(rng, 96)
+        zk, zv = _zero_past(32)
+        full, nk, nv = prefill(CFG, params, zk, zv, toks, 0, 96,
+                               block_q=32, block_k=32)
+
+        lg1, k1, v1 = prefill(CFG, params, zk, zv,
+                              jnp.pad(toks[:32], (0, 64)), 0, 32,
+                              block_q=32, block_k=32)
+        lg2, k2, v2 = prefill(CFG, params, k1[:, :, :32], v1[:, :, :32],
+                              jnp.pad(toks[32:], (0, 32)), 32, 64,
+                              block_q=32, block_k=32)
+        np.testing.assert_array_equal(np.asarray(full), np.asarray(lg2))
+        np.testing.assert_array_equal(np.asarray(nk[:, :, 32:96]),
+                                      np.asarray(k2[:, :, :64]))
+
+    def test_three_way_split(self, params):
+        rng = np.random.default_rng(3)
+        toks = _tokens(rng, 96)
+        zk, zv = _zero_past(64)
+        full, _, _ = prefill(CFG, params, zk, zv,
+                             jnp.pad(toks, (0, 0)), 0, 96,
+                             block_q=32, block_k=32)
+        # chunk 1
+        _, k1, v1 = prefill(CFG, params, zk, zv,
+                            jnp.pad(toks[:32], (0, 0)), 0, 32,
+                            block_q=32, block_k=32)
+        # chunk 2 on top of chunk 1
+        _, k2, v2 = prefill(CFG, params,
+                            jnp.pad(k1, ((0, 0), (0, 0), (0, 32), (0, 0))),
+                            jnp.pad(v1, ((0, 0), (0, 0), (0, 32), (0, 0))),
+                            jnp.pad(toks[32:64], (0, 0)), 32, 32,
+                            block_q=32, block_k=32)
+        past_k = jnp.concatenate([k1, k2], axis=2)
+        past_v = jnp.concatenate([v1, v2], axis=2)
+        lg3, _, _ = prefill(CFG, params, past_k, past_v,
+                            toks[64:], 64, 32, block_q=32, block_k=32)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(lg3),
+                                   atol=1e-5, rtol=1e-3)
+
+    def test_bucket_padding_does_not_leak(self, params):
+        """Padded past slots / padded tokens must not change the logits."""
+        rng = np.random.default_rng(4)
+        toks = _tokens(rng, 32)
+        zk, zv = _zero_past(32)
+        base, _, _ = prefill(CFG, params, zk, zv, toks, 0, 32,
+                             block_q=32, block_k=32)
+        # garbage in the padded past
+        gk = zk + 37.0
+        gv = zv - 11.0
+        alt, _, _ = prefill(CFG, params, gk, gv, toks, 0, 32,
+                            block_q=32, block_k=32)
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(alt))
+        # extra garbage tokens beyond new_len
+        toks2 = jnp.concatenate([toks, _tokens(rng, 32)])
+        alt2, _, _ = prefill(CFG, params, zk, zv, toks2, 0, 32,
+                             block_q=32, block_k=32)
+        # different N bucket -> different online-softmax partitioning,
+        # so equality holds only up to float reassociation
+        np.testing.assert_allclose(np.asarray(base), np.asarray(alt2),
+                                   atol=1e-5, rtol=1e-3)
+
+    def test_pallas_matches_dense_path(self, params):
+        rng = np.random.default_rng(5)
+        toks = _tokens(rng, 64)
+        zk, zv = _zero_past(32)
+        a, ka, va = prefill(CFG, params, zk, zv, toks, 0, 64,
+                            use_pallas=True, block_q=32, block_k=32)
+        b, kb, vb = prefill(CFG, params, zk, zv, toks, 0, 64,
+                            use_pallas=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(ka), np.asarray(kb), atol=1e-5)
+
+
+class TestDecode:
+    def test_decode_matches_prefill_continuation(self, params):
+        """Decoding token t on a prefilled cache == prefilling [..., t]."""
+        rng = np.random.default_rng(6)
+        toks = _tokens(rng, 33)
+        s_max = 64
+        zk, zv = _zero_past(0)
+        # prefill first 32 via the dense path, pad cache to s_max
+        _, k1, v1 = prefill(CFG, params, zk, zv, toks[:32], 0, 32,
+                            use_pallas=False)
+        kc = jnp.pad(k1, ((0, 0), (0, 0), (0, s_max - 32), (0, 0)))
+        vc = jnp.pad(v1, ((0, 0), (0, 0), (0, s_max - 32), (0, 0)))
+        lg_dec, kc2, vc2 = decode_step(CFG, params, kc, vc, toks[32], 32)
+
+        lg_full, nk, nv = prefill(CFG, params, zk, zv, toks, 0, 33,
+                                  use_pallas=False)
+        np.testing.assert_allclose(np.asarray(lg_dec), np.asarray(lg_full),
+                                   atol=1e-4, rtol=1e-4)
+        # the cache slot 32 was filled with the new token's KV
+        np.testing.assert_allclose(np.asarray(kc2[:, :, 32]),
+                                   np.asarray(nk[:, :, 32]), atol=1e-5)
+
+    def test_decode_cache_untouched_elsewhere(self, params):
+        rng = np.random.default_rng(7)
+        s_max = 64
+        kc = jnp.asarray(rng.normal(size=(CFG.n_layers, CFG.n_kv_heads,
+                                          s_max, CFG.head_dim)), jnp.float32)
+        vc = jnp.asarray(rng.normal(size=kc.shape), jnp.float32)
+        _, kc2, vc2 = decode_step(CFG, params, kc, vc, 5, 10)
+        np.testing.assert_array_equal(np.asarray(kc2[:, :, :10]),
+                                      np.asarray(kc[:, :, :10]))
+        np.testing.assert_array_equal(np.asarray(kc2[:, :, 11:]),
+                                      np.asarray(kc[:, :, 11:]))
+
+
+class TestDeterminism:
+    def test_init_params_deterministic(self):
+        a = init_params(CFG, seed=9)
+        b = init_params(CFG, seed=9)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_prefill_deterministic(self, params):
+        rng = np.random.default_rng(8)
+        toks = _tokens(rng, 32)
+        zk, zv = _zero_past(32)
+        a, _, _ = prefill(CFG, params, zk, zv, toks, 0, 32,
+                          block_q=16, block_k=16)
+        b, _, _ = prefill(CFG, params, zk, zv, toks, 0, 32,
+                          block_q=16, block_k=16)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

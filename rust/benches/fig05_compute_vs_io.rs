@@ -1,0 +1,57 @@
+//! Fig 5 — latency of computation vs IO for Qwen2.5-14B and Llama2-13B.
+//!
+//! Paper's crossovers: CPU-load < compute always (reuse from DRAM beats
+//! recompute); SSD-load < compute in most cases (SSD is a viable
+//! fallback) but by a much smaller margin; offload (D2H write) stays
+//! below compute at equal token counts; SSD *write* is the slowest.
+
+use pcr::bench::{section, Table};
+use pcr::hw::gpu::GpuCostModel;
+use pcr::hw::spec::{model_spec, platform_spec};
+use pcr::hw::transfer::TransferFabric;
+
+fn main() {
+    section("Fig 5: computation vs IO latency");
+    let platform = platform_spec("a6000").unwrap();
+    for name in ["qwen2.5-14b", "llama2-13b"] {
+        let model = model_spec(name).unwrap();
+        let gpu = GpuCostModel::new(&model, &platform);
+        let fabric = TransferFabric::new(&platform);
+        println!("\nmodel = {name} (KV {} KiB/token)",
+                 model.kv_bytes_per_token() / 1024);
+        let mut t = Table::new(&[
+            "tokens", "compute", "cpu-load", "ssd-load", "offload", "ssd-write",
+        ]);
+        for tokens in [1024u64, 2048, 4096, 8192] {
+            let bytes = model.kv_bytes_per_token() * tokens;
+            let compute = gpu.prefill_time(0, tokens);
+            let cpu_load = fabric.h2d.copy_time(bytes);
+            let ssd_load = fabric.ssd_read.copy_time(bytes);
+            let offload = fabric.d2h.copy_time(bytes);
+            let ssd_write = fabric.ssd_write.copy_time(bytes);
+            t.row(&[
+                tokens.to_string(),
+                format!("{compute:.3} s"),
+                format!("{cpu_load:.3} s"),
+                format!("{ssd_load:.3} s"),
+                format!("{offload:.3} s"),
+                format!("{ssd_write:.3} s"),
+            ]);
+            assert!(cpu_load < compute, "CPU load must beat recompute");
+            assert!(offload < compute, "offload must fit under compute");
+        }
+        t.print();
+        // the paper's 8k example: ~2s compute vs ~0.5s transfer for
+        // Llama2-13B => ~25% sync overhead
+        if name == "llama2-13b" {
+            let bytes = model.kv_bytes_per_token() * 8192;
+            let c2 = gpu.prefill_time(0, 8192);
+            let c1 = fabric.h2d.copy_time(bytes);
+            println!(
+                "8k tokens: compute {c2:.2} s, transfer {c1:.2} s -> sync reuse \
+                 overhead ≈ {:.0}% of compute (paper: ~25%)",
+                100.0 * c1 / c2
+            );
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! Fig 13 — chunk KV copy: block-by-block vs cudaMemcpyBatchAsync.
+//!
+//! Paper measures one layer of a 256-token Llama2-13B chunk scattered
+//! into 16-token vLLM blocks over 32 GB/s PCIe: 0.671 ms block-by-block
+//! vs 0.261 ms batched (~2.6x). We reproduce the model-level numbers
+//! and also *measure* the analogous effect on this machine: scattered
+//! small memcpys vs one bulk memcpy of the same bytes.
+
+use pcr::bench::{black_box, section, Bench, Table};
+use pcr::hw::spec::model_spec;
+use pcr::hw::transfer::{chunk_copy_time, Channel, CopyMode};
+
+fn main() {
+    section("Fig 13: chunk copy — block-by-block vs BatchAsync (cost model)");
+    let model = model_spec("llama2-13b").unwrap();
+    // the paper's jetty: per-call driver cost on a 32 GB/s link
+    let ch = Channel::new("pcie-32", 32.0, 12e-6);
+    let mut t = Table::new(&["chunk-tokens", "block-by-block", "batch-async", "speedup"]);
+    for chunk in [64u64, 128, 256, 512, 1024] {
+        let slow = chunk_copy_time(&ch, &model, chunk, 16, CopyMode::BlockByBlock);
+        let fast = chunk_copy_time(&ch, &model, chunk, 16, CopyMode::BatchAsync);
+        t.row(&[
+            chunk.to_string(),
+            format!("{:.3} ms", slow * 1e3),
+            format!("{:.3} ms", fast * 1e3),
+            format!("{:.2}x", slow / fast),
+        ]);
+    }
+    t.print();
+    let slow = chunk_copy_time(&ch, &model, 256, 16, CopyMode::BlockByBlock);
+    let fast = chunk_copy_time(&ch, &model, 256, 16, CopyMode::BatchAsync);
+    println!(
+        "\n256-token chunk, one layer: {:.3} ms vs {:.3} ms (paper: 0.671 vs 0.261 ms)",
+        slow * 1e3,
+        fast * 1e3
+    );
+
+    section("Fig 13 (measured): scattered vs bulk memcpy on this host");
+    // One layer of a 256-token Llama2-13B chunk = 2*40heads*128dim*2B*256
+    let layer_bytes = model.kv_bytes_per_layer(256) as usize;
+    let blocks = 2 * (256 / 16); // K and V per 16-token block
+    let block_bytes = layer_bytes / blocks;
+    let src = vec![7u8; layer_bytes];
+    let mut dst = vec![0u8; layer_bytes];
+
+    let bulk = Bench::new("bulk copy (1 call)").min_time(0.3).run(|| {
+        dst.copy_from_slice(black_box(&src));
+        black_box(dst[0])
+    });
+    let mut dst2 = vec![0u8; layer_bytes];
+    let scattered = Bench::new(format!("scattered copy ({blocks} calls)"))
+        .min_time(0.3)
+        .run(|| {
+            for b in 0..blocks {
+                let off = b * block_bytes;
+                dst2[off..off + block_bytes]
+                    .copy_from_slice(black_box(&src[off..off + block_bytes]));
+            }
+            black_box(dst2[0])
+        });
+    println!("{}", bulk.line());
+    println!("{}", scattered.line());
+    println!(
+        "host-memcpy batching effect: {:.2}x (per-call overhead amortized; the\nGPU case adds ~4µs launch latency per call, hence the paper's larger gap)",
+        scattered.mean_ns / bulk.mean_ns
+    );
+}

@@ -1,0 +1,171 @@
+//! §Perf — hot-path microbenchmarks of the L3 coordinator.
+//!
+//! These are the before/after probes for the optimization pass recorded
+//! in EXPERIMENTS.md §Perf: prefix-tree matching, eviction-candidate
+//! scans, movement planning, pipeline makespan, a full engine step, and
+//! the substrate hot spots (HNSW search, JSON, PRNG).
+
+use pcr::bench::{black_box, section, Bench};
+use pcr::cache::chunk::{chain_hash, ChunkKey, ChunkedSeq};
+use pcr::cache::engine::{CacheConfig, CacheEngine};
+use pcr::cache::policy::PolicyKind;
+use pcr::cache::tier::Tier;
+use pcr::sim::pipeline::{makespan, LayerTimings, OverlapMode};
+use pcr::util::rng::Rng;
+
+fn build_cache(chains: usize, depth: usize) -> (CacheEngine, Vec<Vec<ChunkKey>>) {
+    let mut cache = CacheEngine::new(CacheConfig {
+        chunk_tokens: 256,
+        gpu_capacity: u64::MAX / 4,
+        dram_capacity: u64::MAX / 4,
+        ssd_capacity: u64::MAX / 4,
+        policy: PolicyKind::LookaheadLru,
+    });
+    let mut all = Vec::new();
+    for c in 0..chains {
+        let mut keys = Vec::new();
+        let mut parent_key = ChunkKey::ROOT;
+        let mut parent = None;
+        for i in 0..depth {
+            let k = chain_hash(parent_key, &[c as u32, i as u32]);
+            parent = cache.insert(parent, k, 1_000_000, Tier::Dram);
+            keys.push(k);
+            parent_key = k;
+        }
+        all.push(keys);
+    }
+    (cache, all)
+}
+
+fn main() {
+    section("perf: prefix-tree hot path");
+    {
+        let (cache, chains) = build_cache(2000, 26); // 52k nodes
+        let mut i = 0;
+        let r = Bench::new("match_chain (26 chunks, 52k-node tree)").run(|| {
+            i = (i + 1) % chains.len();
+            black_box(cache.tree.match_chain(&chains[i]))
+        });
+        println!("{}", r.line());
+    }
+    {
+        let (cache, _) = build_cache(2000, 26);
+        let r = Bench::new("eviction_candidates scan (52k nodes)")
+            .min_time(1.0)
+            .run(|| black_box(cache.tree.eviction_candidates(Tier::Dram).len()));
+        println!("{}", r.line());
+    }
+    {
+        let r = Bench::new("evict_one under pressure (5k leaves)").min_time(1.0).run_setup();
+        println!("{}", r.line());
+    }
+    {
+        let (mut cache, chains) = build_cache(500, 26);
+        let mut i = 0;
+        let r = Bench::new("lookup+touch (500x26 chunks)").run(|| {
+            i = (i + 1) % chains.len();
+            black_box(cache.lookup(&chains[i]).matched_chunks())
+        });
+        println!("{}", r.line());
+    }
+
+    section("perf: chunking + hashing");
+    {
+        let tokens: Vec<u32> = (0..6800).collect();
+        let r = Bench::new("ChunkedSeq::new (6.8k tokens, 256-chunks)").run(|| {
+            black_box(ChunkedSeq::new(&tokens, 256).n_chunks())
+        });
+        println!("{}", r.line());
+    }
+
+    section("perf: pipeline makespan");
+    {
+        let t = LayerTimings::uniform(40, 0.4, 2.0, 0.8, 1e-4);
+        let r = Bench::new("makespan up-down (40 layers)").run(|| {
+            black_box(makespan(&t, OverlapMode::UpDown))
+        });
+        println!("{}", r.line());
+    }
+
+    section("perf: full engine step throughput");
+    {
+        use pcr::bench::scenario::{paper_config, Scale};
+        use pcr::serve::system::SystemSpec;
+        use pcr::serve::workload::Workload;
+        let cfg = paper_config("llama3.1-8b", "a6000", true, 1.0, Scale::Lite);
+        let wl = Workload::build(&cfg);
+        let spec = SystemSpec::named("pcr", 4).unwrap();
+        let r = Bench::new(format!("engine::run ({} requests end-to-end)", wl.len()))
+            .min_time(2.0)
+            .max_iters(50)
+            .run(|| black_box(pcr::serve::engine::run(&cfg, &spec, &wl).report.finished));
+        println!("{}", r.line());
+        println!(
+            "  -> {:.0} simulated requests per host-second",
+            wl.len() as f64 / (r.mean_ns / 1e9)
+        );
+    }
+
+    section("perf: substrates");
+    {
+        let mut rng = Rng::new(1);
+        let vectors: Vec<Vec<f32>> = (0..2000)
+            .map(|_| (0..128).map(|_| rng.f32()).collect())
+            .collect();
+        let mut index = pcr::rag::hnsw::Hnsw::new(12, 64, 2);
+        for v in &vectors {
+            index.insert(v.clone());
+        }
+        let mut i = 0;
+        let r = Bench::new("hnsw search top-2 (2k docs, ef=96)").run(|| {
+            i = (i + 1) % vectors.len();
+            black_box(index.search(&vectors[i], 2, 96).len())
+        });
+        println!("{}", r.line());
+    }
+    {
+        let text = r#"{"model":{"layers":32,"heads":[1,2,3]},"ok":true,"x":1.5}"#;
+        let r = Bench::new("json parse (small object)").run(|| {
+            black_box(pcr::util::json::Json::parse(text).unwrap())
+        });
+        println!("{}", r.line());
+    }
+    {
+        let mut rng = Rng::new(7);
+        let r = Bench::new("rng exponential").run(|| black_box(rng.exponential(0.8)));
+        println!("{}", r.line());
+    }
+}
+
+/// Helper: eviction benchmark needs per-iteration setup (each eviction
+/// consumes a leaf), so it rebuilds in amortized batches.
+trait RunSetup {
+    fn run_setup(&self) -> pcr::bench::BenchResult;
+}
+
+impl RunSetup for Bench {
+    fn run_setup(&self) -> pcr::bench::BenchResult {
+        // rebuild a 5k-leaf cache, then time draining 4k evictions
+        let mut samples = Vec::new();
+        let mut total_iters = 0u64;
+        let t_start = std::time::Instant::now();
+        while t_start.elapsed().as_secs_f64() < 1.0 {
+            let (mut cache, _) = build_cache(5000, 1);
+            let t0 = std::time::Instant::now();
+            for _ in 0..4000 {
+                black_box(cache.evict_one(Tier::Dram));
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            samples.push(dt / 4000.0);
+            total_iters += 4000;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        pcr::bench::BenchResult {
+            name: "evict_one under pressure (5k leaves)".into(),
+            iters: total_iters,
+            mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+            p50_ns: samples[samples.len() / 2],
+            min_ns: samples[0],
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Micro-benchmark harness (no `criterion` offline).
+//!
+//! `Bench::new("name").run(..)` measures a closure with warmup, adaptive
+//! iteration count, and reports mean/p50/min per iteration. The paper
+//! benches (`rust/benches/*.rs`, `harness = false`) use `Table` to print
+//! the same rows/series the paper's tables and figures report.
+
+use std::time::Instant;
+
+/// Result of one measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.min_ns)
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Adaptive micro-benchmark runner.
+pub struct Bench {
+    name: String,
+    min_time_s: f64,
+    warmup_s: f64,
+    max_iters: u64,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench {
+            name: name.into(),
+            min_time_s: 0.5,
+            warmup_s: 0.1,
+            max_iters: 10_000_000,
+        }
+    }
+
+    pub fn min_time(mut self, s: f64) -> Self {
+        self.min_time_s = s;
+        self
+    }
+
+    pub fn max_iters(mut self, n: u64) -> Self {
+        self.max_iters = n;
+        self
+    }
+
+    /// Measure `f`, which should perform ONE unit of work and return a
+    /// value (black-boxed to defeat dead-code elimination).
+    pub fn run<T, F: FnMut() -> T>(&self, mut f: F) -> BenchResult {
+        // warmup
+        let start = Instant::now();
+        while start.elapsed().as_secs_f64() < self.warmup_s {
+            black_box(f());
+        }
+        // measure in batches, collecting per-batch mean
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mut total_iters: u64 = 0;
+        let measure_start = Instant::now();
+        let mut batch: u64 = 1;
+        while measure_start.elapsed().as_secs_f64() < self.min_time_s
+            && total_iters < self.max_iters
+        {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64;
+            samples_ns.push(dt / batch as f64);
+            total_iters += batch;
+            // grow batches until each takes ~1ms
+            if dt < 1_000_000.0 {
+                batch = (batch * 2).min(1 << 20);
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples_ns.iter().sum::<f64>() / samples_ns.len() as f64;
+        let p50 = samples_ns[samples_ns.len() / 2];
+        let min = samples_ns[0];
+        BenchResult {
+            name: self.name.clone(),
+            iters: total_iters,
+            mean_ns: mean,
+            p50_ns: p50,
+            min_ns: min,
+        }
+    }
+}
+
+/// Identity function the optimizer must assume has side effects.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Fixed-width table printer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            widths: headers.iter().map(|h| h.len().max(8)).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        for (i, c) in cells.iter().enumerate() {
+            self.widths[i] = self.widths[i].max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let cells: Vec<String> = cells.iter().map(|c| format!("{c}")).collect();
+        self.row(&cells);
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("{c:>w$}  ", w = w));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers, &self.widths);
+        let sep: Vec<String> = self.widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep, &self.widths);
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+/// Print a standard bench section header so bench outputs are greppable.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = Bench::new("noop").min_time(0.05).run(|| 1 + 1);
+        assert!(r.iters > 100);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.min_ns <= r.mean_ns * 2.0 + 1.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("µs"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn table_alignment_grows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["longer-cell".into(), "1".into()]);
+        t.print(); // must not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}
+
+pub mod scenario;

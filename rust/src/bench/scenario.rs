@@ -1,0 +1,124 @@
+//! Shared experiment scenarios for the paper benches.
+//!
+//! The paper's full scale (Wikipedia corpus, 2000 requests of ~6.8k
+//! tokens) replays here at a reduced-but-pressured scale: the tier
+//! capacities are shrunk with the corpus so the GPU < DRAM < SSD
+//! hierarchy stays under the same relative pressure (GPU holds a few
+//! requests' KV, DRAM a fraction of the distinct working set, SSD all
+//! of it). `PCR_BENCH_SCALE=full` switches to paper-scale numbers
+//! (slower; used for the recorded EXPERIMENTS.md runs).
+
+use crate::config::ExperimentConfig;
+use crate::hw::spec::model_spec;
+use crate::serve::workload::Workload;
+
+/// Bench scale knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Fast CI scale (default): ~400 requests, ~3.4k-token inputs.
+    Lite,
+    /// Paper scale: 2000 requests, ~6.8k-token inputs.
+    Full,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("PCR_BENCH_SCALE").as_deref() {
+            Ok("full") => Scale::Full,
+            _ => Scale::Lite,
+        }
+    }
+}
+
+/// The paper's workload-1 / workload-2 experiment config for `model` on
+/// `platform`, with tier pressure matched to the model's KV size.
+pub fn paper_config(model: &str, platform: &str, workload1: bool,
+                    rate: f64, scale: Scale) -> ExperimentConfig {
+    let spec = model_spec(model).expect("model");
+    let kv_per_token = spec.kv_bytes_per_token();
+    let (n_inputs, n_requests, mean_doc, n_docs) = match scale {
+        // paper: W1 = 1000 inputs oversampled to 2000; W2 = 2000 inputs
+        Scale::Full => (
+            if workload1 { 1000 } else { 2000 },
+            2000,
+            3368,
+            4000,
+        ),
+        Scale::Lite => (
+            if workload1 { 200 } else { 400 },
+            400,
+            1650,
+            1200,
+        ),
+    };
+    // Mean input ≈ 2·doc + 64 query tokens.
+    let mean_input = 2 * mean_doc + 64;
+    // Distinct working set ≈ n_inputs · mean_input tokens (shared doc
+    // prefixes reduce it; this is the upper bound used for sizing).
+    let distinct_tokens = n_inputs as u64 * mean_input as u64;
+    // Tier pressure mirroring §6.1: GPU ≈ 3% of the distinct set,
+    // DRAM ≈ 25%, SSD ≈ 150% (holds everything).
+    let gpu_bytes = distinct_tokens * kv_per_token * 3 / 100;
+    let dram_bytes = distinct_tokens * kv_per_token / 4;
+    let ssd_bytes = distinct_tokens * kv_per_token * 3 / 2;
+    ExperimentConfig {
+        model: model.into(),
+        platform: platform.into(),
+        n_inputs,
+        n_requests,
+        oversample: workload1,
+        rate,
+        mean_doc_tokens: mean_doc,
+        n_docs,
+        n_topics: 96,
+        gpu_bytes,
+        dram_bytes,
+        ssd_bytes,
+        ..Default::default()
+    }
+}
+
+/// Build a workload once per (model-class, workload, rate) — reused
+/// across all system variants for a fair comparison.
+pub fn build_workload(cfg: &ExperimentConfig) -> Workload {
+    Workload::build(cfg)
+}
+
+/// Models the paper's main grid uses, smallest-first (bench runtime).
+pub fn paper_models(scale: Scale) -> Vec<&'static str> {
+    match scale {
+        Scale::Full => vec![
+            "llama3.2-3b", "llama2-7b", "qwen2.5-7b",
+            "llama3.1-8b", "llama2-13b", "qwen2.5-14b",
+        ],
+        Scale::Lite => vec!["llama3.1-8b", "llama2-7b", "qwen2.5-7b", "llama2-13b"],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configs_validate() {
+        for scale in [Scale::Lite, Scale::Full] {
+            for model in paper_models(scale) {
+                for w1 in [true, false] {
+                    let cfg = paper_config(model, "a6000", w1, 0.75, scale);
+                    cfg.validate().unwrap();
+                    assert!(cfg.gpu_bytes > 0 && cfg.gpu_bytes < cfg.dram_bytes);
+                    assert!(cfg.dram_bytes < cfg.ssd_bytes);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tier_pressure_scales_with_kv_size() {
+        let l2 = paper_config("llama2-7b", "a6000", true, 0.5, Scale::Lite);
+        let qw = paper_config("qwen2.5-7b", "a6000", true, 0.5, Scale::Lite);
+        // MHA model (bigger KV/token) gets proportionally bigger tiers,
+        // keeping *relative* pressure constant
+        assert!(l2.dram_bytes > 4 * qw.dram_bytes);
+    }
+}

@@ -1,0 +1,150 @@
+//! Chunk identity: fixed-size token chunks addressed by a *prefix-chain
+//! hash* (paper §4.2 / Algorithm 1's `HashPrefix(chunk, parent)`).
+//!
+//! KV caches are position-dependent, so a chunk's identity must encode
+//! its entire prefix: two chunks with identical token ids but different
+//! parents hash to different keys (the paper's C6 vs C8 example). The
+//! chain hash gives exactly that: `key_i = H(key_{i-1} ‖ tokens_i)`.
+
+use crate::util::rng::splitmix64;
+
+/// Identity of one KV chunk (prefix-chain hash).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChunkKey(pub u64);
+
+impl ChunkKey {
+    /// The root of every chain (empty prefix).
+    pub const ROOT: ChunkKey = ChunkKey(0x9E37_79B9_7F4A_7C15);
+}
+
+/// FNV-1a-then-mix over the parent key and the chunk's token ids.
+/// splitmix finalization keeps avalanche good enough for tree fanout.
+pub fn chain_hash(parent: ChunkKey, tokens: &[u32]) -> ChunkKey {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325 ^ parent.0.rotate_left(17);
+    for &t in tokens {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x1000_0000_01B3);
+    }
+    let mut s = h;
+    ChunkKey(splitmix64(&mut s))
+}
+
+/// A request's token sequence split into chunk-granularity pieces, with
+/// chain keys precomputed (Algorithm 1's `Chunkify`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkedSeq {
+    /// Chain key of each *full* chunk, in order.
+    pub keys: Vec<ChunkKey>,
+    /// Tokens per chunk (all `chunk_size` — the trailing partial chunk
+    /// is NOT cacheable and is excluded; see `tail_tokens`).
+    pub chunk_tokens: usize,
+    /// Number of tokens beyond the last full chunk (computed fresh each
+    /// time, never cached — matches vLLM block-aligned prefix caching).
+    pub tail_tokens: usize,
+    /// Total tokens in the original sequence.
+    pub total_tokens: usize,
+}
+
+impl ChunkedSeq {
+    /// Split `tokens` into `chunk_size`-token chunks, chaining hashes.
+    pub fn new(tokens: &[u32], chunk_size: usize) -> ChunkedSeq {
+        assert!(chunk_size > 0);
+        let full = tokens.len() / chunk_size;
+        let mut keys = Vec::with_capacity(full);
+        let mut parent = ChunkKey::ROOT;
+        for c in 0..full {
+            let key = chain_hash(parent, &tokens[c * chunk_size..(c + 1) * chunk_size]);
+            keys.push(key);
+            parent = key;
+        }
+        ChunkedSeq {
+            keys,
+            chunk_tokens: chunk_size,
+            tail_tokens: tokens.len() - full * chunk_size,
+            total_tokens: tokens.len(),
+        }
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// Tokens covered by the first `n` chunks.
+    pub fn tokens_in(&self, n: usize) -> usize {
+        n.min(self.keys.len()) * self.chunk_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_hash_depends_on_parent() {
+        // Same token ids, different prefix -> different identity
+        // (paper's C6 vs C8).
+        let toks = [1u32, 2, 3, 4];
+        let a = chain_hash(ChunkKey::ROOT, &toks);
+        let b = chain_hash(a, &toks);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn chain_hash_deterministic() {
+        let toks = [9u32, 8, 7];
+        assert_eq!(chain_hash(ChunkKey::ROOT, &toks),
+                   chain_hash(ChunkKey::ROOT, &toks));
+    }
+
+    #[test]
+    fn chain_hash_sensitive_to_each_token() {
+        let a = chain_hash(ChunkKey::ROOT, &[1, 2, 3]);
+        let b = chain_hash(ChunkKey::ROOT, &[1, 2, 4]);
+        let c = chain_hash(ChunkKey::ROOT, &[0, 2, 3]);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+    }
+
+    #[test]
+    fn chunkify_splits_and_chains() {
+        let tokens: Vec<u32> = (0..10).collect();
+        let cs = ChunkedSeq::new(&tokens, 4);
+        assert_eq!(cs.n_chunks(), 2);
+        assert_eq!(cs.tail_tokens, 2);
+        assert_eq!(cs.total_tokens, 10);
+        // chain property: prefix determines keys
+        let cs2 = ChunkedSeq::new(&(0..8).collect::<Vec<u32>>(), 4);
+        assert_eq!(cs.keys, cs2.keys);
+    }
+
+    #[test]
+    fn shared_prefix_shares_keys() {
+        // [doc1:doc2] vs [doc1:doc3] share exactly doc1's chunks.
+        let mut a: Vec<u32> = (0..8).collect();
+        a.extend(100..108);
+        let mut b: Vec<u32> = (0..8).collect();
+        b.extend(200..208);
+        let ca = ChunkedSeq::new(&a, 4);
+        let cb = ChunkedSeq::new(&b, 4);
+        assert_eq!(ca.keys[..2], cb.keys[..2]);
+        assert_ne!(ca.keys[2], cb.keys[2]);
+        assert_ne!(ca.keys[3], cb.keys[3]); // divergence propagates
+    }
+
+    #[test]
+    fn tokens_in_clamps() {
+        let cs = ChunkedSeq::new(&(0..16).collect::<Vec<u32>>(), 4);
+        assert_eq!(cs.tokens_in(2), 8);
+        assert_eq!(cs.tokens_in(99), 16);
+    }
+
+    #[test]
+    fn empty_and_short_sequences() {
+        let cs = ChunkedSeq::new(&[], 4);
+        assert_eq!(cs.n_chunks(), 0);
+        let cs = ChunkedSeq::new(&[1, 2], 4);
+        assert_eq!(cs.n_chunks(), 0);
+        assert_eq!(cs.tail_tokens, 2);
+    }
+}

@@ -1,0 +1,532 @@
+//! The Cache Engine (paper Fig 6): multi-tier KV-chunk cache built on
+//! the prefix tree, with policy-driven eviction, look-ahead protection,
+//! and prefetch target selection. This is pure metadata/accounting —
+//! byte movement is the serving layer's job (simulated via
+//! `hw::transfer` channels, real via `cache::store` + `runtime`).
+
+use crate::cache::chunk::ChunkKey;
+use crate::cache::policy::PolicyKind;
+use crate::cache::prefix_tree::{NodeId, PrefixTree};
+use crate::cache::tier::{Tier, TierUsage};
+
+/// Capacity/policy configuration of one cache engine instance. A tier
+/// with zero capacity is disabled (e.g. the vLLM baseline has DRAM=0,
+/// SSD=0; CCache has SSD=0).
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    pub chunk_tokens: usize,
+    pub gpu_capacity: u64,
+    pub dram_capacity: u64,
+    pub ssd_capacity: u64,
+    pub policy: PolicyKind,
+}
+
+impl CacheConfig {
+    pub fn capacity(&self, tier: Tier) -> u64 {
+        match tier {
+            Tier::Gpu => self.gpu_capacity,
+            Tier::Dram => self.dram_capacity,
+            Tier::Ssd => self.ssd_capacity,
+        }
+    }
+
+    pub fn tier_enabled(&self, tier: Tier) -> bool {
+        self.capacity(tier) > 0
+    }
+}
+
+/// Hit/miss/eviction counters (chunks and bytes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    pub lookups: u64,
+    /// Chunks served per tier (fastest residency at lookup time).
+    pub hit_chunks: [u64; 3],
+    pub hit_bytes: [u64; 3],
+    pub missed_chunks: u64,
+    pub evicted_chunks: [u64; 3],
+    pub inserted_chunks: [u64; 3],
+    /// Inserts refused because eviction could not make room.
+    pub rejected_inserts: u64,
+}
+
+impl CacheStats {
+    pub fn total_hits(&self) -> u64 {
+        self.hit_chunks.iter().sum()
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        let h = self.total_hits();
+        let t = h + self.missed_chunks;
+        if t == 0 {
+            0.0
+        } else {
+            h as f64 / t as f64
+        }
+    }
+}
+
+/// Result of matching one request's chunk chain against the cache.
+#[derive(Clone, Debug, Default)]
+pub struct Lookup {
+    /// Matched prefix nodes, in chain order.
+    pub nodes: Vec<NodeId>,
+    /// Fastest tier each matched node is resident in.
+    pub tiers: Vec<Tier>,
+    /// Chunks counted per source tier.
+    pub from: [u64; 3],
+}
+
+impl Lookup {
+    pub fn matched_chunks(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// Multi-tier KV-cache engine.
+#[derive(Debug)]
+pub struct CacheEngine {
+    pub tree: PrefixTree,
+    pub usage: [TierUsage; 3],
+    pub config: CacheConfig,
+    pub stats: CacheStats,
+    sweep_countdown: u32,
+}
+
+impl CacheEngine {
+    pub fn new(config: CacheConfig) -> Self {
+        CacheEngine {
+            tree: PrefixTree::new(),
+            usage: [
+                TierUsage::new(config.gpu_capacity),
+                TierUsage::new(config.dram_capacity),
+                TierUsage::new(config.ssd_capacity),
+            ],
+            config,
+            stats: CacheStats::default(),
+            sweep_countdown: SWEEP_PERIOD,
+        }
+    }
+
+    /// Match `chain` against the tree, touching hits (recency+freq) and
+    /// recording per-tier hit stats. `total_chunks` is the request's
+    /// full chain length (for miss accounting).
+    pub fn lookup(&mut self, chain: &[ChunkKey]) -> Lookup {
+        self.stats.lookups += 1;
+        let nodes = self.tree.match_chain(chain);
+        let mut out = Lookup::default();
+        for id in nodes {
+            let tier = self
+                .tree
+                .node(id)
+                .tiers
+                .fastest()
+                .expect("matched node must be resident");
+            self.tree.touch(id);
+            out.from[tier.idx()] += 1;
+            self.stats.hit_chunks[tier.idx()] += 1;
+            self.stats.hit_bytes[tier.idx()] += self.tree.node(id).bytes;
+            out.tiers.push(tier);
+            out.nodes.push(id);
+        }
+        self.stats.missed_chunks += (chain.len() - out.nodes.len()) as u64;
+        out
+    }
+
+    /// Evict until `bytes` fit in `tier`. Returns false if impossible
+    /// (all candidates pinned/locked or capacity simply too small).
+    pub fn reserve(&mut self, tier: Tier, bytes: u64) -> bool {
+        if bytes > self.usage[tier.idx()].capacity {
+            return false;
+        }
+        while !self.usage[tier.idx()].fits(bytes) {
+            if self.evict_one(tier).is_none() {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Evict one chunk from `tier` per the configured policy. Returns
+    /// the evicted node. Uses the fused allocation-free victim scan
+    /// (EXPERIMENTS.md §Perf iteration 1).
+    pub fn evict_one(&mut self, tier: Tier) -> Option<NodeId> {
+        let victim = self.config.policy.pick_victim_fused(&self.tree, tier)?;
+        let bytes = self.tree.node(victim).bytes;
+        let fully_gone = self.tree.remove_residency(victim, tier);
+        self.usage[tier.idx()].sub(bytes);
+        self.stats.evicted_chunks[tier.idx()] += 1;
+        if fully_gone {
+            self.maybe_sweep();
+        }
+        Some(victim)
+    }
+
+    /// Insert-or-promote `key` (child of `parent`) into `tier`,
+    /// evicting as needed. Returns the node id, or None if room could
+    /// not be made.
+    pub fn insert(
+        &mut self,
+        parent: Option<NodeId>,
+        key: ChunkKey,
+        bytes: u64,
+        tier: Tier,
+    ) -> Option<NodeId> {
+        if !self.config.tier_enabled(tier) {
+            return None;
+        }
+        if let Some(id) = self.tree.get(key) {
+            if self.tree.node(id).tiers.contains(tier) {
+                return Some(id); // already resident here
+            }
+        }
+        // The parent may itself be an evictable leaf right now — pin it
+        // so making room for the child cannot evict its own prefix.
+        if let Some(p) = parent {
+            self.tree.pin(p);
+        }
+        let ok = self.reserve(tier, bytes);
+        if let Some(p) = parent {
+            self.tree.unpin(p);
+        }
+        if !ok {
+            self.stats.rejected_inserts += 1;
+            return None;
+        }
+        let id = self.tree.ensure(parent, key, bytes);
+        self.tree.add_residency(id, tier);
+        self.usage[tier.idx()].add(bytes);
+        self.stats.inserted_chunks[tier.idx()] += 1;
+        Some(id)
+    }
+
+    /// Promote an existing node into a (faster) tier — e.g. the
+    /// prefetcher copying SSD→DRAM. No-op if already there.
+    pub fn promote(&mut self, id: NodeId, tier: Tier) -> bool {
+        if self.tree.node(id).tiers.contains(tier) {
+            return true;
+        }
+        if !self.config.tier_enabled(tier) {
+            return false;
+        }
+        // chain presence across tiers is inherited: the parent is
+        // present somewhere (invariant), which is all reuse requires.
+        let bytes = self.tree.node(id).bytes;
+        if !self.reserve(tier, bytes) {
+            return false;
+        }
+        self.tree.add_residency(id, tier);
+        self.usage[tier.idx()].add(bytes);
+        self.stats.inserted_chunks[tier.idx()] += 1;
+        true
+    }
+
+    /// Drop one node's copy in `tier` (explicit demotion, not policy
+    /// eviction). Respects the leaf-only rule via debug assertions.
+    pub fn demote(&mut self, id: NodeId, tier: Tier) {
+        if !self.tree.node(id).tiers.contains(tier) {
+            return;
+        }
+        let bytes = self.tree.node(id).bytes;
+        self.tree.remove_residency(id, tier);
+        self.usage[tier.idx()].sub(bytes);
+    }
+
+    /// Look-ahead update (paper §4.2): walk a queued request's chain and
+    /// protect matched chunks from eviction until `horizon` ticks from
+    /// now. Also used by Algorithm 1's `BumpPriority`.
+    pub fn boost_chain(&mut self, chain: &[ChunkKey], horizon: u64) -> usize {
+        let nodes = self.tree.match_chain(chain);
+        let until = self.tree.now() + horizon;
+        let n = nodes.len();
+        for id in nodes {
+            self.tree.boost(id, until);
+        }
+        n
+    }
+
+    /// Chunks of `chain` that are on SSD but not yet in DRAM/GPU — the
+    /// prefetcher's SSD→DRAM work list (Algorithm 1's
+    /// `SubmitSSDToCPULoad`).
+    pub fn prefetch_targets(&self, chain: &[ChunkKey]) -> Vec<NodeId> {
+        self.tree
+            .match_chain(chain)
+            .into_iter()
+            .filter(|id| {
+                let t = self.tree.node(*id).tiers;
+                t.contains(Tier::Ssd) && !t.contains(Tier::Dram) && !t.contains(Tier::Gpu)
+            })
+            .collect()
+    }
+
+    pub fn used(&self, tier: Tier) -> u64 {
+        self.usage[tier.idx()].used
+    }
+
+    /// Cross-check running byte counters against the tree (tests).
+    pub fn check_accounting(&self) -> Result<(), String> {
+        self.tree.check_invariants()?;
+        for t in Tier::ALL {
+            let actual = self.tree.resident_bytes(t);
+            if actual != self.usage[t.idx()].used {
+                return Err(format!(
+                    "{} usage mismatch: counter {} tree {}",
+                    t.name(),
+                    self.usage[t.idx()].used,
+                    actual
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn maybe_sweep(&mut self) {
+        self.sweep_countdown -= 1;
+        if self.sweep_countdown == 0 {
+            self.tree.sweep_absent();
+            self.sweep_countdown = SWEEP_PERIOD;
+        }
+    }
+}
+
+const SWEEP_PERIOD: u32 = 256;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::chunk::{chain_hash, ChunkKey};
+    use crate::util::proptest::{check, forall};
+    use crate::util::rng::Rng;
+
+    const CHUNK_BYTES: u64 = 100;
+
+    fn cfg(gpu: u64, dram: u64, ssd: u64) -> CacheConfig {
+        CacheConfig {
+            chunk_tokens: 4,
+            gpu_capacity: gpu,
+            dram_capacity: dram,
+            ssd_capacity: ssd,
+            policy: PolicyKind::LookaheadLru,
+        }
+    }
+
+    fn chain_of(tag: u32, n: usize) -> Vec<ChunkKey> {
+        let mut keys = Vec::new();
+        let mut parent = ChunkKey::ROOT;
+        for i in 0..n {
+            let k = chain_hash(parent, &[tag, i as u32]);
+            keys.push(k);
+            parent = k;
+        }
+        keys
+    }
+
+    fn insert_chain(e: &mut CacheEngine, chain: &[ChunkKey], tier: Tier) -> Vec<NodeId> {
+        let mut parent = None;
+        let mut out = Vec::new();
+        for k in chain {
+            match e.insert(parent, *k, CHUNK_BYTES, tier) {
+                Some(id) => {
+                    out.push(id);
+                    parent = Some(id);
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn lookup_hit_and_miss_accounting() {
+        let mut e = CacheEngine::new(cfg(0, 1000, 0));
+        let c = chain_of(1, 3);
+        insert_chain(&mut e, &c, Tier::Dram);
+        let l = e.lookup(&c);
+        assert_eq!(l.matched_chunks(), 3);
+        assert_eq!(l.from[Tier::Dram.idx()], 3);
+        let c2 = chain_of(2, 2);
+        let l2 = e.lookup(&c2);
+        assert_eq!(l2.matched_chunks(), 0);
+        assert_eq!(e.stats.missed_chunks, 2);
+        assert!((e.stats.hit_ratio() - 0.6).abs() < 1e-12);
+        e.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn eviction_makes_room_leaf_first() {
+        // capacity for 3 chunks; inserting a 4th evicts the LRU leaf
+        let mut e = CacheEngine::new(cfg(0, 300, 0));
+        let a = chain_of(1, 2); // chain a1 -> a2
+        let b = chain_of(2, 1); // independent b1
+        insert_chain(&mut e, &a, Tier::Dram);
+        insert_chain(&mut e, &b, Tier::Dram);
+        assert_eq!(e.used(Tier::Dram), 300);
+        let c = chain_of(3, 1);
+        let got = insert_chain(&mut e, &c, Tier::Dram);
+        assert_eq!(got.len(), 1);
+        assert_eq!(e.used(Tier::Dram), 300);
+        assert_eq!(e.stats.evicted_chunks[Tier::Dram.idx()], 1);
+        // a1 (a non-leaf) must still be present
+        assert!(e.tree.get(a[0]).map(|id| !e.tree.node(id).tiers.is_empty()).unwrap_or(false));
+        e.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn lookahead_protects_queued_chunks() {
+        let mut e = CacheEngine::new(cfg(0, 200, 0));
+        let a = chain_of(1, 1);
+        let b = chain_of(2, 1);
+        insert_chain(&mut e, &a, Tier::Dram); // oldest
+        insert_chain(&mut e, &b, Tier::Dram);
+        // a queued request references chain a: protect it
+        e.boost_chain(&a, 1000);
+        let c = chain_of(3, 1);
+        insert_chain(&mut e, &c, Tier::Dram);
+        // b (second-oldest) was evicted instead of a
+        let a_alive = !e.tree.node(e.tree.get(a[0]).unwrap()).tiers.is_empty();
+        assert!(a_alive);
+        assert!(e.tree.get(b[0]).map(|id| e.tree.node(id).tiers.is_empty()).unwrap_or(true));
+    }
+
+    #[test]
+    fn disabled_tier_rejects_insert() {
+        let mut e = CacheEngine::new(cfg(0, 1000, 0));
+        let c = chain_of(1, 1);
+        assert!(e.insert(None, c[0], CHUNK_BYTES, Tier::Ssd).is_none());
+    }
+
+    #[test]
+    fn oversized_insert_rejected() {
+        let mut e = CacheEngine::new(cfg(0, 150, 0));
+        let c = chain_of(1, 2);
+        let got = insert_chain(&mut e, &c, Tier::Dram);
+        assert_eq!(got.len(), 1); // second chunk cannot fit (parent locked)
+        assert_eq!(e.stats.rejected_inserts, 1);
+        e.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn promote_ssd_to_dram() {
+        let mut e = CacheEngine::new(cfg(0, 100, 1000));
+        let c = chain_of(1, 3);
+        let ids = insert_chain(&mut e, &c, Tier::Ssd);
+        assert_eq!(ids.len(), 3);
+        assert!(e.promote(ids[0], Tier::Dram));
+        assert_eq!(e.used(Tier::Dram), 100);
+        // DRAM full: promoting another evicts the first from DRAM (it
+        // still has its SSD copy, so dropping the DRAM copy is legal
+        // even though it has children).
+        assert!(e.promote(ids[1], Tier::Dram));
+        assert_eq!(e.used(Tier::Dram), 100);
+        let t0 = e.tree.node(ids[0]).tiers;
+        assert!(t0.contains(Tier::Ssd));
+        e.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn prefetch_targets_are_ssd_only_chunks() {
+        let mut e = CacheEngine::new(cfg(0, 100, 1000));
+        let c = chain_of(1, 3);
+        let ids = insert_chain(&mut e, &c, Tier::Ssd);
+        e.promote(ids[0], Tier::Dram);
+        let targets = e.prefetch_targets(&c);
+        assert_eq!(targets, vec![ids[1], ids[2]]);
+    }
+
+    #[test]
+    fn pinned_chunks_survive_pressure() {
+        let mut e = CacheEngine::new(cfg(0, 200, 0));
+        let a = chain_of(1, 1);
+        let b = chain_of(2, 1);
+        let ia = insert_chain(&mut e, &a, Tier::Dram)[0];
+        insert_chain(&mut e, &b, Tier::Dram);
+        e.tree.pin(ia);
+        let c = chain_of(3, 1);
+        insert_chain(&mut e, &c, Tier::Dram);
+        assert!(!e.tree.node(ia).tiers.is_empty(), "pinned chunk evicted");
+        e.tree.unpin(ia);
+        e.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn reserve_fails_when_everything_pinned() {
+        let mut e = CacheEngine::new(cfg(0, 100, 0));
+        let a = chain_of(1, 1);
+        let ia = insert_chain(&mut e, &a, Tier::Dram)[0];
+        e.tree.pin(ia);
+        assert!(!e.reserve(Tier::Dram, 100));
+        e.tree.unpin(ia);
+        assert!(e.reserve(Tier::Dram, 100));
+    }
+
+    #[test]
+    fn demote_then_reinsert() {
+        let mut e = CacheEngine::new(cfg(0, 1000, 0));
+        let c = chain_of(1, 2);
+        let ids = insert_chain(&mut e, &c, Tier::Dram);
+        e.demote(ids[1], Tier::Dram);
+        assert_eq!(e.used(Tier::Dram), 100);
+        let l = e.lookup(&c);
+        assert_eq!(l.matched_chunks(), 1);
+        // reinsert the dropped chunk
+        let id2 = e.insert(Some(ids[0]), c[1], CHUNK_BYTES, Tier::Dram);
+        assert!(id2.is_some());
+        e.check_accounting().unwrap();
+    }
+
+    /// Property: after an arbitrary interleaving of inserts, lookups,
+    /// promotions and reserve-pressure, all structural invariants and
+    /// byte accounting hold, and no tier exceeds capacity.
+    #[test]
+    fn prop_engine_invariants_under_random_ops() {
+        forall(
+            0xC0FFEE,
+            60,
+            |rng: &mut Rng| {
+                let n = 3 + rng.below(40) as usize;
+                (0..n).map(|_| rng.next_u64()).collect::<Vec<u64>>()
+            },
+            |ops| {
+                let mut e = CacheEngine::new(CacheConfig {
+                    chunk_tokens: 4,
+                    gpu_capacity: 300,
+                    dram_capacity: 500,
+                    ssd_capacity: 800,
+                    policy: PolicyKind::LookaheadLru,
+                });
+                let chains: Vec<Vec<ChunkKey>> =
+                    (0..6).map(|t| chain_of(t, 1 + (t as usize % 4))).collect();
+                for op in ops {
+                    let chain = &chains[(op % 6) as usize];
+                    match (op >> 8) % 5 {
+                        0 => {
+                            insert_chain(&mut e, chain, Tier::Dram);
+                        }
+                        1 => {
+                            insert_chain(&mut e, chain, Tier::Ssd);
+                        }
+                        2 => {
+                            e.lookup(chain);
+                        }
+                        3 => {
+                            e.boost_chain(chain, (op >> 16) % 64);
+                        }
+                        _ => {
+                            for id in e.prefetch_targets(chain) {
+                                e.promote(id, Tier::Dram);
+                            }
+                        }
+                    }
+                    if let Err(m) = e.check_accounting() {
+                        return Err(m);
+                    }
+                    for t in Tier::ALL {
+                        if e.usage[t.idx()].used > e.usage[t.idx()].capacity {
+                            return Err(format!("{} over capacity", t.name()));
+                        }
+                    }
+                }
+                check(true, "")
+            },
+        );
+    }
+}

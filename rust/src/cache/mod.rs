@@ -1,0 +1,19 @@
+//! The Cache Engine — the paper's core contribution (§4.2, Fig 6/7).
+//!
+//! * [`chunk`] — prefix-chain hashed chunk identity (`HashPrefix`).
+//! * [`prefix_tree`] — the chunk tree with per-tier residency and the
+//!   chain-presence / leaf-only-eviction invariants.
+//! * [`policy`] — LRU, **look-ahead LRU** (the contribution), FIFO and
+//!   PGDSF (RAGCache-baseline) eviction.
+//! * [`tier`] — GPU/DRAM/SSD tiers and byte accounting.
+//! * [`engine`] — lookup/insert/promote/evict + prefetch target
+//!   selection over the tree.
+//! * [`store`] — actual chunk byte storage for the real PJRT path
+//!   (memory + spill-directory backends).
+
+pub mod chunk;
+pub mod engine;
+pub mod policy;
+pub mod prefix_tree;
+pub mod store;
+pub mod tier;

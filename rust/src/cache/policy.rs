@@ -1,0 +1,259 @@
+//! Eviction policies over the prefix tree's per-tier leaf candidates.
+//!
+//! * [`PolicyKind::Lru`] — plain least-recently-used over leaves (what
+//!   vLLM's prefix cache and the CCache/SCCache baselines run).
+//! * [`PolicyKind::LookaheadLru`] — the paper's contribution (§4.2):
+//!   LRU that *skips* leaves whose chunks appear in pending requests in
+//!   the waiting queue (their `boost_until` is ahead of the clock),
+//!   falling back to plain LRU when every candidate is protected.
+//! * [`PolicyKind::Fifo`] — insertion-order baseline.
+//! * [`PolicyKind::Pgdsf`] — greedy-dual-size-frequency (the RAGCache
+//!   baseline's eviction strategy), priority = freq·cost/size.
+
+use crate::cache::prefix_tree::{NodeId, PrefixTree};
+use crate::cache::tier::Tier;
+
+/// Which eviction policy a cache engine runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Lru,
+    LookaheadLru,
+    Fifo,
+    Pgdsf,
+}
+
+impl PolicyKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Lru => "lru",
+            PolicyKind::LookaheadLru => "lookahead-lru",
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Pgdsf => "pgdsf",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "lru" => Some(PolicyKind::Lru),
+            "lookahead-lru" | "lookahead" => Some(PolicyKind::LookaheadLru),
+            "fifo" => Some(PolicyKind::Fifo),
+            "pgdsf" => Some(PolicyKind::Pgdsf),
+            _ => None,
+        }
+    }
+
+    /// Pick the victim among `candidates` (all evictable from `tier`).
+    /// Returns None iff `candidates` is empty.
+    pub fn pick_victim(
+        self,
+        tree: &PrefixTree,
+        _tier: Tier,
+        candidates: &[NodeId],
+    ) -> Option<NodeId> {
+        if candidates.is_empty() {
+            return None;
+        }
+        let now = tree.now();
+        match self {
+            PolicyKind::Lru => candidates
+                .iter()
+                .copied()
+                .min_by_key(|id| tree.node(*id).last_access),
+            PolicyKind::LookaheadLru => {
+                // Prefer unprotected leaves; the paper's example evicts
+                // the second-oldest leaf C4 because the oldest, C2, is
+                // referenced by a queued request.
+                let unprotected = candidates
+                    .iter()
+                    .copied()
+                    .filter(|id| tree.node(*id).boost_until <= now)
+                    .min_by_key(|id| tree.node(*id).last_access);
+                unprotected.or_else(|| {
+                    // everything protected: fall back to plain LRU
+                    candidates
+                        .iter()
+                        .copied()
+                        .min_by_key(|id| tree.node(*id).last_access)
+                })
+            }
+            PolicyKind::Fifo => candidates
+                .iter()
+                .copied()
+                .min_by_key(|id| tree.node(*id).inserted_at),
+            PolicyKind::Pgdsf => {
+                // priority = freq * cost / size; cost ~ bytes (the KV
+                // recompute cost is proportional to the chunk's tokens,
+                // which is proportional to bytes at fixed chunk size),
+                // so priority reduces to freq, tie-broken by recency.
+                candidates.iter().copied().min_by(|a, b| {
+                    let na = tree.node(*a);
+                    let nb = tree.node(*b);
+                    let pa = (na.freq + 1) as f64 / na.bytes.max(1) as f64;
+                    let pb = (nb.freq + 1) as f64 / nb.bytes.max(1) as f64;
+                    pa.partial_cmp(&pb)
+                        .unwrap()
+                        .then(na.last_access.cmp(&nb.last_access))
+                })
+            }
+        }
+    }
+}
+
+impl PolicyKind {
+    /// Fused victim selection: a single allocation-free pass over the
+    /// tree that filters evictability and tracks the policy minimum
+    /// inline (§Perf iteration 1 — replaces collect-then-scan on the
+    /// eviction hot path; `pick_victim` remains for candidate lists
+    /// produced elsewhere).
+    pub fn pick_victim_fused(self, tree: &PrefixTree, tier: Tier) -> Option<NodeId> {
+        let now = tree.now();
+        match self {
+            PolicyKind::Lru => tree
+                .ids_slab()
+                .filter(|id| tree.evictable_from(*id, tier))
+                .min_by_key(|id| tree.node(*id).last_access),
+            PolicyKind::Fifo => tree
+                .ids_slab()
+                .filter(|id| tree.evictable_from(*id, tier))
+                .min_by_key(|id| tree.node(*id).inserted_at),
+            PolicyKind::Pgdsf => tree
+                .ids_slab()
+                .filter(|id| tree.evictable_from(*id, tier))
+                .min_by(|a, b| {
+                    let na = tree.node(*a);
+                    let nb = tree.node(*b);
+                    let pa = (na.freq + 1) as f64 / na.bytes.max(1) as f64;
+                    let pb = (nb.freq + 1) as f64 / nb.bytes.max(1) as f64;
+                    pa.partial_cmp(&pb)
+                        .unwrap()
+                        .then(na.last_access.cmp(&nb.last_access))
+                }),
+            PolicyKind::LookaheadLru => {
+                // one pass, two minima: prefer the oldest unprotected
+                // leaf, falling back to the oldest overall
+                let mut best_unprot: Option<(u64, NodeId)> = None;
+                let mut best_any: Option<(u64, NodeId)> = None;
+                for id in tree.ids_slab() {
+                    if !tree.evictable_from(id, tier) {
+                        continue;
+                    }
+                    let n = tree.node(id);
+                    let key = (n.last_access, id);
+                    if best_any.map(|b| key < b).unwrap_or(true) {
+                        best_any = Some(key);
+                    }
+                    if n.boost_until <= now
+                        && best_unprot.map(|b| key < b).unwrap_or(true)
+                    {
+                        best_unprot = Some(key);
+                    }
+                }
+                best_unprot.or(best_any).map(|(_, id)| id)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::chunk::{chain_hash, ChunkKey};
+
+    /// Three independent root-level leaves with controlled recency.
+    fn three_leaves(tree: &mut PrefixTree) -> Vec<NodeId> {
+        let mut ids = Vec::new();
+        for i in 0..3u32 {
+            let k = chain_hash(ChunkKey::ROOT, &[i]);
+            let id = tree.ensure(None, k, 100);
+            tree.add_residency(id, Tier::Dram);
+            ids.push(id);
+        }
+        // recency order: ids[0] oldest, ids[2] newest
+        for id in &ids {
+            tree.touch(*id);
+        }
+        ids
+    }
+
+    #[test]
+    fn lru_picks_oldest() {
+        let mut t = PrefixTree::new();
+        let ids = three_leaves(&mut t);
+        let v = PolicyKind::Lru.pick_victim(&t, Tier::Dram, &ids);
+        assert_eq!(v, Some(ids[0]));
+    }
+
+    #[test]
+    fn lookahead_skips_boosted_oldest() {
+        // The Fig 7 walk-through: C2 (oldest) is boosted by the queue,
+        // so the second-oldest C4 goes instead.
+        let mut t = PrefixTree::new();
+        let ids = three_leaves(&mut t);
+        let until = t.now() + 100;
+        t.boost(ids[0], until);
+        let v = PolicyKind::LookaheadLru.pick_victim(&t, Tier::Dram, &ids);
+        assert_eq!(v, Some(ids[1]));
+        // plain LRU would have evicted the boosted one
+        let v = PolicyKind::Lru.pick_victim(&t, Tier::Dram, &ids);
+        assert_eq!(v, Some(ids[0]));
+    }
+
+    #[test]
+    fn lookahead_falls_back_when_all_protected() {
+        let mut t = PrefixTree::new();
+        let ids = three_leaves(&mut t);
+        let until = t.now() + 100;
+        for id in &ids {
+            t.boost(*id, until);
+        }
+        let v = PolicyKind::LookaheadLru.pick_victim(&t, Tier::Dram, &ids);
+        assert_eq!(v, Some(ids[0])); // oldest overall
+    }
+
+    #[test]
+    fn expired_boost_no_longer_protects() {
+        let mut t = PrefixTree::new();
+        let ids = three_leaves(&mut t);
+        let until = t.now() + 1;
+        t.boost(ids[0], until);
+        t.tick();
+        t.tick(); // clock passes the boost horizon
+        let v = PolicyKind::LookaheadLru.pick_victim(&t, Tier::Dram, &ids);
+        assert_eq!(v, Some(ids[0]));
+    }
+
+    #[test]
+    fn fifo_ignores_recency() {
+        let mut t = PrefixTree::new();
+        let ids = three_leaves(&mut t);
+        t.touch(ids[0]); // make the first-inserted the most recent
+        let v = PolicyKind::Fifo.pick_victim(&t, Tier::Dram, &ids);
+        assert_eq!(v, Some(ids[0]));
+        let v = PolicyKind::Lru.pick_victim(&t, Tier::Dram, &ids);
+        assert_eq!(v, Some(ids[1]));
+    }
+
+    #[test]
+    fn pgdsf_prefers_cold_low_frequency() {
+        let mut t = PrefixTree::new();
+        let ids = three_leaves(&mut t);
+        t.touch(ids[0]);
+        t.touch(ids[0]); // hot
+        let v = PolicyKind::Pgdsf.pick_victim(&t, Tier::Dram, &ids);
+        assert_ne!(v, Some(ids[0]));
+    }
+
+    #[test]
+    fn empty_candidates_is_none() {
+        let t = PrefixTree::new();
+        assert_eq!(PolicyKind::Lru.pick_victim(&t, Tier::Dram, &[]), None);
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for k in [PolicyKind::Lru, PolicyKind::LookaheadLru, PolicyKind::Fifo, PolicyKind::Pgdsf] {
+            assert_eq!(PolicyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PolicyKind::parse("bogus"), None);
+    }
+}

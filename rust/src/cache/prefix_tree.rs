@@ -1,0 +1,505 @@
+//! The prefix tree of KV chunks (paper §4.2, Fig 7).
+//!
+//! Each node is one chunk's KV cache, keyed by its prefix-chain hash;
+//! children extend the parent's token prefix. Residency across the
+//! GPU/DRAM/SSD tiers is tracked per node, with two structural
+//! invariants the eviction machinery preserves (property-tested in
+//! `cache::engine`):
+//!
+//!   1. **Chain presence** — a node resident in any tier has its parent
+//!      resident in some tier (a chunk's KV is useless without its full
+//!      prefix; paper: "each child node depends on its parent").
+//!   2. **Leaf-only removal** — a node may lose its *last* tier copy
+//!      only if no descendant is present (paper: "eviction is
+//!      restricted to the leaf nodes").
+
+use crate::cache::chunk::ChunkKey;
+use crate::cache::tier::{Tier, TierSet};
+use crate::util::fxhash::FxHashMap;
+
+/// Slab index of a tree node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+/// One KV chunk's metadata.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub key: ChunkKey,
+    pub parent: Option<NodeId>,
+    /// Bytes of this chunk's KV cache (all layers).
+    pub bytes: u64,
+    pub tiers: TierSet,
+    /// Children with non-empty residency.
+    pub present_children: u32,
+    /// In-flight uses (pinned chunks are not evictable).
+    pub pins: u32,
+    /// Recency clock value of the last touch (LRU).
+    pub last_access: u64,
+    /// Clock value at insert (FIFO).
+    pub inserted_at: u64,
+    /// Touch count (PGDSF frequency term).
+    pub freq: u64,
+    /// Look-ahead protection: leaf is skipped by look-ahead LRU while
+    /// `boost_until > now` (scheduler bumps this from the waiting queue).
+    pub boost_until: u64,
+}
+
+/// The prefix tree + global key index.
+#[derive(Debug, Default)]
+pub struct PrefixTree {
+    nodes: Vec<Node>,
+    free: Vec<u32>,
+    /// Liveness bitmap parallel to `nodes` (slab slots in `free` are
+    /// dead). Lets hot scans iterate the slab contiguously instead of
+    /// hashing through `index` (§Perf iteration 2).
+    live: Vec<bool>,
+    index: FxHashMap<ChunkKey, NodeId>,
+    /// Children adjacency (node -> child ids). Parallel to `nodes`.
+    children: Vec<Vec<NodeId>>,
+    clock: u64,
+}
+
+impl PrefixTree {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.0 as usize]
+    }
+
+    pub fn get(&self, key: ChunkKey) -> Option<NodeId> {
+        self.index.get(&key).copied()
+    }
+
+    /// Advance and return the recency clock.
+    pub fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    pub fn now(&self) -> u64 {
+        self.clock
+    }
+
+    /// Longest prefix of `chain` whose nodes are all *present*
+    /// (resident somewhere). Returns the matched node ids in order.
+    pub fn match_chain(&self, chain: &[ChunkKey]) -> Vec<NodeId> {
+        let mut out = Vec::with_capacity(chain.len());
+        for key in chain {
+            match self.index.get(key) {
+                Some(&id) if !self.node(id).tiers.is_empty() => out.push(id),
+                _ => break,
+            }
+        }
+        out
+    }
+
+    /// Insert-or-get the node for `key` whose parent is the last element
+    /// of the already-present chain (None = root-level chunk). The new
+    /// node starts with empty residency; callers make it resident via
+    /// [`PrefixTree::add_residency`].
+    pub fn ensure(&mut self, parent: Option<NodeId>, key: ChunkKey, bytes: u64) -> NodeId {
+        if let Some(&id) = self.index.get(&key) {
+            return id;
+        }
+        if let Some(p) = parent {
+            debug_assert!(
+                !self.node(p).tiers.is_empty(),
+                "parent must be present before inserting a child"
+            );
+        }
+        let now = self.tick();
+        let node = Node {
+            key,
+            parent,
+            bytes,
+            tiers: TierSet::EMPTY,
+            present_children: 0,
+            pins: 0,
+            last_access: now,
+            inserted_at: now,
+            freq: 0,
+            boost_until: 0,
+        };
+        let id = match self.free.pop() {
+            Some(slot) => {
+                self.nodes[slot as usize] = node;
+                self.children[slot as usize].clear();
+                self.live[slot as usize] = true;
+                NodeId(slot)
+            }
+            None => {
+                self.nodes.push(node);
+                self.children.push(Vec::new());
+                self.live.push(true);
+                NodeId(self.nodes.len() as u32 - 1)
+            }
+        };
+        if let Some(p) = parent {
+            self.children[p.0 as usize].push(id);
+        }
+        self.index.insert(key, id);
+        id
+    }
+
+    /// Make `id` resident in `tier`. Maintains the chain-presence
+    /// invariant bookkeeping (parent's present_children).
+    pub fn add_residency(&mut self, id: NodeId, tier: Tier) {
+        let was_present = !self.node(id).tiers.is_empty();
+        if self.node(id).tiers.contains(tier) {
+            return;
+        }
+        if !was_present {
+            if let Some(p) = self.node(id).parent {
+                debug_assert!(
+                    !self.node(p).tiers.is_empty(),
+                    "chain-presence violated: parent absent"
+                );
+                self.node_mut(p).present_children += 1;
+            }
+        }
+        self.node_mut(id).tiers.insert(tier);
+    }
+
+    /// Drop `id`'s copy in `tier`. Returns true if the node is now
+    /// absent everywhere (fully evicted). Enforces leaf-only removal:
+    /// panics (debug) if the last copy of a node with present children
+    /// is dropped.
+    pub fn remove_residency(&mut self, id: NodeId, tier: Tier) -> bool {
+        if !self.node(id).tiers.contains(tier) {
+            return self.node(id).tiers.is_empty();
+        }
+        self.node_mut(id).tiers.remove(tier);
+        if self.node(id).tiers.is_empty() {
+            debug_assert_eq!(
+                self.node(id).present_children, 0,
+                "leaf-only removal violated"
+            );
+            if let Some(p) = self.node(id).parent {
+                self.node_mut(p).present_children -= 1;
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Remove a fully-absent node from the tree entirely (frees the
+    /// slab slot). Only valid for nodes with no children in the tree.
+    pub fn erase(&mut self, id: NodeId) {
+        assert!(self.node(id).tiers.is_empty(), "erase of resident node");
+        assert!(
+            self.children[id.0 as usize].is_empty(),
+            "erase of node with children"
+        );
+        if let Some(p) = self.node(id).parent {
+            self.children[p.0 as usize].retain(|c| *c != id);
+        }
+        let key = self.node(id).key;
+        self.index.remove(&key);
+        self.free.push(id.0);
+        self.live[id.0 as usize] = false;
+    }
+
+    /// Garbage-collect absent childless nodes. Erasing a leaf can make
+    /// its (absent) parent childless, so sweep to a fixpoint.
+    pub fn sweep_absent(&mut self) {
+        loop {
+            let ids: Vec<NodeId> = self
+                .index
+                .values()
+                .copied()
+                .filter(|id| {
+                    self.node(*id).tiers.is_empty()
+                        && self.children[id.0 as usize].is_empty()
+                })
+                .collect();
+            if ids.is_empty() {
+                break;
+            }
+            for id in ids {
+                self.erase(id);
+            }
+        }
+    }
+
+    /// Touch for recency + frequency (on every reuse hit).
+    pub fn touch(&mut self, id: NodeId) {
+        let now = self.tick();
+        let n = self.node_mut(id);
+        n.last_access = now;
+        n.freq += 1;
+    }
+
+    /// Look-ahead protection: the look-ahead LRU policy will avoid
+    /// evicting this node while `now < until`.
+    pub fn boost(&mut self, id: NodeId, until: u64) {
+        let n = self.node_mut(id);
+        n.boost_until = n.boost_until.max(until);
+    }
+
+    pub fn pin(&mut self, id: NodeId) {
+        self.node_mut(id).pins += 1;
+    }
+
+    pub fn unpin(&mut self, id: NodeId) {
+        let n = self.node_mut(id);
+        assert!(n.pins > 0, "unpin without pin");
+        n.pins -= 1;
+    }
+
+    /// Whether dropping `id` from `tier` is allowed right now:
+    /// resident there, unpinned, and (copy elsewhere OR no present
+    /// descendants).
+    pub fn evictable_from(&self, id: NodeId, tier: Tier) -> bool {
+        let n = self.node(id);
+        n.tiers.contains(tier)
+            && n.pins == 0
+            && (n.tiers.count() > 1 || n.present_children == 0)
+    }
+
+    /// All nodes currently evictable from `tier` (the policy's
+    /// candidate set). O(nodes) scan — see EXPERIMENTS.md §Perf for the
+    /// indexed variant used on the hot path.
+    pub fn eviction_candidates(&self, tier: Tier) -> Vec<NodeId> {
+        self.index
+            .values()
+            .copied()
+            .filter(|id| self.evictable_from(*id, tier))
+            .collect()
+    }
+
+    /// Resident bytes per tier (for invariant checks; the engine keeps
+    /// its own running counters).
+    pub fn resident_bytes(&self, tier: Tier) -> u64 {
+        self.index
+            .values()
+            .filter(|id| self.node(**id).tiers.contains(tier))
+            .map(|id| self.node(*id).bytes)
+            .sum()
+    }
+
+    /// Iterate all live node ids (hash-map order; stable given the
+    /// same op sequence).
+    pub fn ids(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.index.values().copied()
+    }
+
+    /// Iterate live node ids in slab order — contiguous memory walk for
+    /// hot scans (eviction victim selection).
+    pub fn ids_slab(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.live
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| **l)
+            .map(|(i, _)| NodeId(i as u32))
+    }
+
+    /// Validate structural invariants; returns an error string on the
+    /// first violation. Used by tests and the mini-proptest harness.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for (&key, &id) in &self.index {
+            let n = self.node(id);
+            if n.key != key {
+                return Err(format!("index key mismatch for {key:?}"));
+            }
+            // chain presence
+            if !n.tiers.is_empty() {
+                if let Some(p) = n.parent {
+                    if self.node(p).tiers.is_empty() {
+                        return Err(format!(
+                            "chain-presence violated: {:?} present, parent absent",
+                            n.key
+                        ));
+                    }
+                }
+            }
+            // present_children consistency
+            let actual = self.children[id.0 as usize]
+                .iter()
+                .filter(|c| !self.node(**c).tiers.is_empty())
+                .count() as u32;
+            if actual != n.present_children {
+                return Err(format!(
+                    "present_children mismatch at {:?}: stored {} actual {}",
+                    n.key, n.present_children, actual
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::chunk::{chain_hash, ChunkKey};
+
+    fn chain(n: usize) -> Vec<ChunkKey> {
+        let mut keys = Vec::new();
+        let mut parent = ChunkKey::ROOT;
+        for i in 0..n {
+            let k = chain_hash(parent, &[i as u32]);
+            keys.push(k);
+            parent = k;
+        }
+        keys
+    }
+
+    fn insert_chain(t: &mut PrefixTree, keys: &[ChunkKey], tier: Tier) -> Vec<NodeId> {
+        let mut parent = None;
+        let mut ids = Vec::new();
+        for k in keys {
+            let id = t.ensure(parent, *k, 100);
+            t.add_residency(id, tier);
+            ids.push(id);
+            parent = Some(id);
+        }
+        ids
+    }
+
+    #[test]
+    fn match_stops_at_first_absent() {
+        let mut t = PrefixTree::new();
+        let keys = chain(4);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        assert_eq!(t.match_chain(&keys).len(), 4);
+        // drop residency of chunk 2 -> match stops there
+        t.remove_residency(ids[3], Tier::Dram);
+        t.remove_residency(ids[2], Tier::Dram);
+        assert_eq!(t.match_chain(&keys).len(), 2);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_prefix_single_nodes() {
+        let mut t = PrefixTree::new();
+        let a = chain(3);
+        let mut b = a[..2].to_vec();
+        b.push(chain_hash(a[1], &[99]));
+        insert_chain(&mut t, &a, Tier::Dram);
+        insert_chain(&mut t, &b, Tier::Dram);
+        assert_eq!(t.len(), 4); // 2 shared + 2 distinct tails
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evictable_semantics() {
+        let mut t = PrefixTree::new();
+        let keys = chain(3);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        // middle node with DRAM-only copy and a present child: locked
+        assert!(!t.evictable_from(ids[1], Tier::Dram));
+        // leaf: evictable
+        assert!(t.evictable_from(ids[2], Tier::Dram));
+        // give middle node an SSD copy too: now its DRAM copy can go
+        t.add_residency(ids[1], Tier::Ssd);
+        assert!(t.evictable_from(ids[1], Tier::Dram));
+        // ...and (symmetrically) so can the SSD copy while DRAM holds it
+        assert!(t.evictable_from(ids[1], Tier::Ssd));
+        // but once the DRAM copy is gone, the SSD copy is the last one
+        // and the present child locks it in place
+        t.remove_residency(ids[1], Tier::Dram);
+        assert!(!t.evictable_from(ids[1], Tier::Ssd));
+        // pinned leaf: not evictable
+        t.pin(ids[2]);
+        assert!(!t.evictable_from(ids[2], Tier::Dram));
+        t.unpin(ids[2]);
+        assert!(t.evictable_from(ids[2], Tier::Dram));
+    }
+
+    #[test]
+    fn leaf_eviction_unlocks_parent() {
+        // paper: "when C4 is evicted, its parent becomes a new leaf"
+        let mut t = PrefixTree::new();
+        let keys = chain(2);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        assert!(!t.evictable_from(ids[0], Tier::Dram));
+        let gone = t.remove_residency(ids[1], Tier::Dram);
+        assert!(gone);
+        assert!(t.evictable_from(ids[0], Tier::Dram));
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_candidates_only_leaves() {
+        let mut t = PrefixTree::new();
+        let keys = chain(4);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        let cands = t.eviction_candidates(Tier::Dram);
+        assert_eq!(cands, vec![ids[3]]);
+    }
+
+    #[test]
+    fn erase_and_slot_reuse() {
+        let mut t = PrefixTree::new();
+        let keys = chain(2);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        t.remove_residency(ids[1], Tier::Dram);
+        t.erase(ids[1]);
+        assert_eq!(t.len(), 1);
+        assert!(t.get(keys[1]).is_none());
+        // slot gets reused
+        let k2 = chain_hash(keys[0], &[7]);
+        let id2 = t.ensure(Some(ids[0]), k2, 50);
+        assert_eq!(id2.0, ids[1].0);
+        t.add_residency(id2, Tier::Dram);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sweep_absent_collects_garbage() {
+        let mut t = PrefixTree::new();
+        let keys = chain(3);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        for id in ids.iter().rev() {
+            t.remove_residency(*id, Tier::Dram);
+        }
+        t.sweep_absent();
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn touch_updates_recency_and_freq() {
+        let mut t = PrefixTree::new();
+        let keys = chain(1);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        let before = t.node(ids[0]).last_access;
+        t.touch(ids[0]);
+        let n = t.node(ids[0]);
+        assert!(n.last_access > before);
+        assert_eq!(n.freq, 1);
+    }
+
+    #[test]
+    fn boost_is_monotone() {
+        let mut t = PrefixTree::new();
+        let keys = chain(1);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        t.boost(ids[0], 10);
+        t.boost(ids[0], 5); // lower boost must not shrink protection
+        assert_eq!(t.node(ids[0]).boost_until, 10);
+    }
+
+    #[test]
+    fn resident_bytes_sums() {
+        let mut t = PrefixTree::new();
+        let keys = chain(3);
+        insert_chain(&mut t, &keys, Tier::Dram);
+        assert_eq!(t.resident_bytes(Tier::Dram), 300);
+        assert_eq!(t.resident_bytes(Tier::Ssd), 0);
+    }
+}

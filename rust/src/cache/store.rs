@@ -1,0 +1,196 @@
+//! Chunk *data* stores for the real (PJRT) serving path: the metadata
+//! engine decides placement; these hold the actual KV bytes.
+//!
+//! * [`MemStore`] — DRAM tier: an in-process byte map.
+//! * [`FileStore`] — SSD tier: one file per chunk under a spill
+//!   directory (the e2e example uses a real directory, giving real
+//!   read/write latency on the test machine's disk).
+
+use crate::cache::chunk::ChunkKey;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+
+/// Uniform interface over chunk-byte storage backends.
+pub trait ChunkStore: Send {
+    fn put(&mut self, key: ChunkKey, data: &[u8]) -> Result<()>;
+    fn get(&self, key: ChunkKey) -> Result<Option<Vec<u8>>>;
+    fn delete(&mut self, key: ChunkKey) -> Result<()>;
+    fn contains(&self, key: ChunkKey) -> bool;
+    fn bytes_used(&self) -> u64;
+}
+
+/// In-memory store (the DRAM tier of the real path).
+#[derive(Debug, Default)]
+pub struct MemStore {
+    map: HashMap<ChunkKey, Vec<u8>>,
+    bytes: u64,
+}
+
+impl MemStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ChunkStore for MemStore {
+    fn put(&mut self, key: ChunkKey, data: &[u8]) -> Result<()> {
+        if let Some(old) = self.map.insert(key, data.to_vec()) {
+            self.bytes -= old.len() as u64;
+        }
+        self.bytes += data.len() as u64;
+        Ok(())
+    }
+
+    fn get(&self, key: ChunkKey) -> Result<Option<Vec<u8>>> {
+        Ok(self.map.get(&key).cloned())
+    }
+
+    fn delete(&mut self, key: ChunkKey) -> Result<()> {
+        if let Some(old) = self.map.remove(&key) {
+            self.bytes -= old.len() as u64;
+        }
+        Ok(())
+    }
+
+    fn contains(&self, key: ChunkKey) -> bool {
+        self.map.contains_key(&key)
+    }
+
+    fn bytes_used(&self) -> u64 {
+        self.bytes
+    }
+}
+
+/// One-file-per-chunk store (the SSD tier of the real path).
+#[derive(Debug)]
+pub struct FileStore {
+    dir: PathBuf,
+    index: HashMap<ChunkKey, u64>, // key -> byte length
+    bytes: u64,
+}
+
+impl FileStore {
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating spill dir {dir:?}"))?;
+        Ok(FileStore {
+            dir,
+            index: HashMap::new(),
+            bytes: 0,
+        })
+    }
+
+    fn path(&self, key: ChunkKey) -> PathBuf {
+        self.dir.join(format!("{:016x}.kv", key.0))
+    }
+}
+
+impl ChunkStore for FileStore {
+    fn put(&mut self, key: ChunkKey, data: &[u8]) -> Result<()> {
+        let path = self.path(key);
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("creating {path:?}"))?;
+        f.write_all(data)?;
+        if let Some(old) = self.index.insert(key, data.len() as u64) {
+            self.bytes -= old;
+        }
+        self.bytes += data.len() as u64;
+        Ok(())
+    }
+
+    fn get(&self, key: ChunkKey) -> Result<Option<Vec<u8>>> {
+        if !self.index.contains_key(&key) {
+            return Ok(None);
+        }
+        let path = self.path(key);
+        let mut f = std::fs::File::open(&path)
+            .with_context(|| format!("opening {path:?}"))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        Ok(Some(buf))
+    }
+
+    fn delete(&mut self, key: ChunkKey) -> Result<()> {
+        if let Some(old) = self.index.remove(&key) {
+            self.bytes -= old;
+            let _ = std::fs::remove_file(self.path(key));
+        }
+        Ok(())
+    }
+
+    fn contains(&self, key: ChunkKey) -> bool {
+        self.index.contains_key(&key)
+    }
+
+    fn bytes_used(&self) -> u64 {
+        self.bytes
+    }
+}
+
+impl Drop for FileStore {
+    fn drop(&mut self) {
+        // best-effort cleanup of spill files
+        for key in self.index.keys().copied().collect::<Vec<_>>() {
+            let _ = std::fs::remove_file(self.path(key));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(i: u64) -> ChunkKey {
+        ChunkKey(i)
+    }
+
+    fn exercise(store: &mut dyn ChunkStore) {
+        assert!(!store.contains(key(1)));
+        store.put(key(1), &[1, 2, 3]).unwrap();
+        store.put(key(2), &[4; 10]).unwrap();
+        assert_eq!(store.bytes_used(), 13);
+        assert_eq!(store.get(key(1)).unwrap().unwrap(), vec![1, 2, 3]);
+        assert!(store.get(key(9)).unwrap().is_none());
+        // overwrite adjusts accounting
+        store.put(key(1), &[9; 5]).unwrap();
+        assert_eq!(store.bytes_used(), 15);
+        store.delete(key(1)).unwrap();
+        assert!(!store.contains(key(1)));
+        assert_eq!(store.bytes_used(), 10);
+        store.delete(key(42)).unwrap(); // deleting absent is a no-op
+    }
+
+    #[test]
+    fn mem_store_basics() {
+        let mut s = MemStore::new();
+        exercise(&mut s);
+    }
+
+    #[test]
+    fn file_store_basics() {
+        let dir = std::env::temp_dir().join(format!("pcr-store-test-{}", std::process::id()));
+        let mut s = FileStore::new(&dir).unwrap();
+        exercise(&mut s);
+        drop(s);
+        // spill files cleaned up
+        let remaining = std::fs::read_dir(&dir)
+            .map(|d| d.count())
+            .unwrap_or(0);
+        assert_eq!(remaining, 0);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn file_store_round_trips_large_chunk() {
+        let dir = std::env::temp_dir().join(format!("pcr-store-big-{}", std::process::id()));
+        let mut s = FileStore::new(&dir).unwrap();
+        let data: Vec<u8> = (0..1_000_000u32).map(|x| x as u8).collect();
+        s.put(key(7), &data).unwrap();
+        assert_eq!(s.get(key(7)).unwrap().unwrap(), data);
+        drop(s);
+        let _ = std::fs::remove_dir(&dir);
+    }
+}

@@ -1,0 +1,148 @@
+//! Storage tiers (GPU HBM / CPU DRAM / SSD) and residency sets.
+
+/// One of the three storage tiers of the paper's cache hierarchy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Tier {
+    Gpu = 0,
+    Dram = 1,
+    Ssd = 2,
+}
+
+impl Tier {
+    pub const ALL: [Tier; 3] = [Tier::Gpu, Tier::Dram, Tier::Ssd];
+
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Gpu => "gpu",
+            Tier::Dram => "dram",
+            Tier::Ssd => "ssd",
+        }
+    }
+}
+
+/// Bitset of tiers a chunk is resident in.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierSet(u8);
+
+impl TierSet {
+    pub const EMPTY: TierSet = TierSet(0);
+
+    pub fn single(t: Tier) -> TierSet {
+        TierSet(1 << t.idx())
+    }
+
+    pub fn contains(self, t: Tier) -> bool {
+        self.0 & (1 << t.idx()) != 0
+    }
+
+    pub fn insert(&mut self, t: Tier) {
+        self.0 |= 1 << t.idx();
+    }
+
+    pub fn remove(&mut self, t: Tier) {
+        self.0 &= !(1 << t.idx());
+    }
+
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    pub fn count(self) -> u32 {
+        self.0.count_ones()
+    }
+
+    /// Fastest tier the chunk is resident in (GPU < DRAM < SSD).
+    pub fn fastest(self) -> Option<Tier> {
+        Tier::ALL.into_iter().find(|t| self.contains(*t))
+    }
+
+    pub fn iter(self) -> impl Iterator<Item = Tier> {
+        Tier::ALL.into_iter().filter(move |t| self.contains(*t))
+    }
+}
+
+/// Byte-accounted capacity of one tier.
+#[derive(Clone, Copy, Debug)]
+pub struct TierUsage {
+    pub capacity: u64,
+    pub used: u64,
+}
+
+impl TierUsage {
+    pub fn new(capacity: u64) -> Self {
+        TierUsage { capacity, used: 0 }
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity.saturating_sub(self.used)
+    }
+
+    pub fn fits(&self, bytes: u64) -> bool {
+        self.used + bytes <= self.capacity
+    }
+
+    pub fn add(&mut self, bytes: u64) {
+        self.used += bytes;
+        debug_assert!(self.used <= self.capacity, "tier over capacity");
+    }
+
+    pub fn sub(&mut self, bytes: u64) {
+        debug_assert!(self.used >= bytes, "tier usage underflow");
+        self.used = self.used.saturating_sub(bytes);
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.capacity == 0 {
+            0.0
+        } else {
+            self.used as f64 / self.capacity as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tierset_ops() {
+        let mut s = TierSet::EMPTY;
+        assert!(s.is_empty());
+        s.insert(Tier::Dram);
+        s.insert(Tier::Ssd);
+        assert!(s.contains(Tier::Dram));
+        assert!(!s.contains(Tier::Gpu));
+        assert_eq!(s.count(), 2);
+        assert_eq!(s.fastest(), Some(Tier::Dram));
+        s.remove(Tier::Dram);
+        assert_eq!(s.fastest(), Some(Tier::Ssd));
+        s.remove(Tier::Ssd);
+        assert!(s.is_empty());
+        assert_eq!(s.fastest(), None);
+    }
+
+    #[test]
+    fn tierset_iter_in_speed_order() {
+        let mut s = TierSet::EMPTY;
+        s.insert(Tier::Ssd);
+        s.insert(Tier::Gpu);
+        let v: Vec<Tier> = s.iter().collect();
+        assert_eq!(v, vec![Tier::Gpu, Tier::Ssd]);
+    }
+
+    #[test]
+    fn usage_accounting() {
+        let mut u = TierUsage::new(100);
+        assert!(u.fits(100));
+        u.add(60);
+        assert_eq!(u.free(), 40);
+        assert!(!u.fits(41));
+        u.sub(10);
+        assert_eq!(u.used, 50);
+        assert!((u.utilization() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,227 @@
+//! TOML-subset config file parser (no `toml`/`serde` offline).
+//!
+//! Supported grammar — everything the experiment configs need:
+//!
+//! ```toml
+//! # comment
+//! [section]
+//! key = "string"
+//! num = 1.5
+//! flag = true
+//! list = [1, 2, 3]
+//! ```
+//!
+//! Values land in a flat `section.key -> Value` map.
+
+use std::collections::BTreeMap;
+
+/// A parsed scalar or list value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|x| x as u64)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error on line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// Flat config map: keys are `section.key` (or bare `key` before any
+/// section header).
+pub type ConfigMap = BTreeMap<String, Value>;
+
+/// Parse config text.
+pub fn parse(text: &str) -> Result<ConfigMap, ParseError> {
+    let mut out = ConfigMap::new();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name.strip_suffix(']').ok_or(ParseError {
+                line: line_no,
+                msg: "unterminated section header".into(),
+            })?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, val) = line.split_once('=').ok_or(ParseError {
+            line: line_no,
+            msg: "expected key = value".into(),
+        })?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(ParseError {
+                line: line_no,
+                msg: "empty key".into(),
+            });
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let value = parse_value(val.trim()).map_err(|msg| ParseError {
+            line: line_no,
+            msg,
+        })?;
+        out.insert(full_key, value);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // naive but sufficient: # outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated list".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::List(Vec::new()));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::List(items));
+    }
+    // numbers, with unit suffixes for byte sizes: 4GiB, 256MiB, 2TiB
+    for (suffix, mult) in [
+        ("TiB", (1u64 << 40) as f64),
+        ("GiB", (1u64 << 30) as f64),
+        ("MiB", (1u64 << 20) as f64),
+        ("KiB", 1024.0),
+    ] {
+        if let Some(num) = s.strip_suffix(suffix) {
+            let x: f64 = num
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad number '{num}'"))?;
+            return Ok(Value::Num(x * mult));
+        }
+    }
+    s.parse::<f64>()
+        .map(Value::Num)
+        .map_err(|_| format!("unrecognized value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let text = r#"
+# experiment
+top = 1
+[workload]
+rate = 0.75          # req/s
+name = "workload1"
+oversample = true
+rates = [0.5, 0.75, 1.0]
+[cache]
+dram = 256GiB
+ssd = 2TiB
+"#;
+        let m = parse(text).unwrap();
+        assert_eq!(m["top"], Value::Num(1.0));
+        assert_eq!(m["workload.rate"], Value::Num(0.75));
+        assert_eq!(m["workload.name"].as_str(), Some("workload1"));
+        assert_eq!(m["workload.oversample"].as_bool(), Some(true));
+        assert_eq!(m["workload.rates"].as_list().unwrap().len(), 3);
+        assert_eq!(m["cache.dram"].as_u64(), Some(256 << 30));
+        assert_eq!(m["cache.ssd"].as_u64(), Some(2u64 << 40));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("[open").is_err());
+        assert!(parse("just a line").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+        assert!(parse("k = [1, 2").is_err());
+        assert!(parse("k = wat").is_err());
+    }
+
+    #[test]
+    fn comments_inside_strings_preserved() {
+        let m = parse("k = \"a#b\"").unwrap();
+        assert_eq!(m["k"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn empty_list() {
+        let m = parse("k = []").unwrap();
+        assert_eq!(m["k"].as_list().unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,249 @@
+//! Experiment configuration: one struct that pins down everything a
+//! serving run needs — model, platform, cache geometry, policies,
+//! workload shape, arrival process — loadable from a TOML-subset file
+//! ([`file`]) and overridable from the CLI. Every experiment in
+//! `rust/benches/` is a set of `ExperimentConfig` values, so paper
+//! figures replay from config alone.
+
+pub mod file;
+
+use crate::config::file::{ConfigMap, Value};
+use anyhow::{bail, Context, Result};
+
+/// Full configuration of one serving experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    // --- what is served, on what ---
+    /// Model spec name (see `hw::spec::model_specs`).
+    pub model: String,
+    /// Platform spec name (`a6000` | `rtx4090`).
+    pub platform: String,
+    /// System variant: `vllm` | `ccache` | `sccache` | `lmcache` | `pcr`.
+    pub system: String,
+
+    // --- cache engine ---
+    /// Cache chunk granularity in tokens (paper: 256).
+    pub chunk_tokens: usize,
+    /// GPU KV capacity in bytes (0 = platform budget after weights).
+    /// Overriding below the platform budget emulates co-located memory
+    /// pressure and is how tests exercise the full tier hierarchy.
+    pub gpu_bytes: u64,
+    /// DRAM KV capacity in bytes (0 = platform CPU memory budget).
+    pub dram_bytes: u64,
+    /// SSD KV capacity in bytes (0 = platform SSD budget).
+    pub ssd_bytes: u64,
+    /// Eviction policy name (see `cache::policy::PolicyKind`).
+    pub policy: String,
+    /// Look-ahead LRU horizon: queued requests examined for protection.
+    pub lookahead_window: usize,
+    /// Queue-based prefetch window (paper: 4; Fig 18 sweeps it).
+    pub prefetch_window: usize,
+    /// Layer-wise overlap mode: `sync` | `only-up` | `only-down` | `up-down`.
+    pub overlap: String,
+    /// Use batched chunk copies (`cudaMemcpyBatchAsync` analogue).
+    pub batch_async: bool,
+
+    // --- workload (paper §6.1) ---
+    /// Distinct inputs in the dataset (paper: 1000 / 2000).
+    pub n_inputs: usize,
+    /// Sample requests with replacement (workload 1) or shuffle-cycle
+    /// without (workload 2).
+    pub oversample: bool,
+    /// Total requests issued (paper: 2000 sampling iterations).
+    pub n_requests: usize,
+    /// Poisson arrival rate, requests/second.
+    pub rate: f64,
+    /// Documents retrieved per query (paper: 2).
+    pub docs_per_query: usize,
+    /// Query length in tokens.
+    pub query_tokens: usize,
+    /// Output tokens per request (paper: 16, prefill-focused).
+    pub output_tokens: usize,
+
+    // --- corpus ---
+    pub n_docs: usize,
+    pub n_topics: usize,
+    /// Mean document length in tokens (2 docs + query ≈ 6.8k as in the
+    /// paper).
+    pub mean_doc_tokens: usize,
+
+    /// Master seed (forked per component).
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            model: "llama3.1-8b".into(),
+            platform: "a6000".into(),
+            system: "pcr".into(),
+            chunk_tokens: 256,
+            gpu_bytes: 0,
+            dram_bytes: 0,
+            ssd_bytes: 0,
+            policy: "lookahead-lru".into(),
+            lookahead_window: 4,
+            prefetch_window: 4,
+            overlap: "up-down".into(),
+            batch_async: true,
+            n_inputs: 1000,
+            oversample: true,
+            n_requests: 2000,
+            rate: 0.5,
+            docs_per_query: 2,
+            query_tokens: 64,
+            output_tokens: 16,
+            n_docs: 4000,
+            n_topics: 128,
+            mean_doc_tokens: 3368, // 2*3368 + 64 ≈ 6.8k tokens
+            seed: 20260710,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Apply overrides from a parsed config map (`section.key` keys —
+    /// see module docs of [`file`] for the accepted sections).
+    pub fn apply(&mut self, map: &ConfigMap) -> Result<()> {
+        for (key, val) in map {
+            self.apply_one(key, val)
+                .with_context(|| format!("config key '{key}'"))?;
+        }
+        Ok(())
+    }
+
+    fn apply_one(&mut self, key: &str, val: &Value) -> Result<()> {
+        let need_str = || -> Result<String> {
+            val.as_str()
+                .map(|s| s.to_string())
+                .ok_or_else(|| anyhow::anyhow!("expected string"))
+        };
+        let need_f64 = || -> Result<f64> {
+            val.as_f64().ok_or_else(|| anyhow::anyhow!("expected number"))
+        };
+        let need_bool = || -> Result<bool> {
+            val.as_bool().ok_or_else(|| anyhow::anyhow!("expected bool"))
+        };
+        match key {
+            "serve.model" | "model" => self.model = need_str()?,
+            "serve.platform" | "platform" => self.platform = need_str()?,
+            "serve.system" | "system" => self.system = need_str()?,
+            "cache.chunk_tokens" => self.chunk_tokens = need_f64()? as usize,
+            "cache.gpu_bytes" => self.gpu_bytes = need_f64()? as u64,
+            "cache.dram_bytes" => self.dram_bytes = need_f64()? as u64,
+            "cache.ssd_bytes" => self.ssd_bytes = need_f64()? as u64,
+            "cache.policy" => self.policy = need_str()?,
+            "cache.lookahead_window" => self.lookahead_window = need_f64()? as usize,
+            "cache.prefetch_window" => self.prefetch_window = need_f64()? as usize,
+            "cache.overlap" => self.overlap = need_str()?,
+            "cache.batch_async" => self.batch_async = need_bool()?,
+            "workload.n_inputs" => self.n_inputs = need_f64()? as usize,
+            "workload.oversample" => self.oversample = need_bool()?,
+            "workload.n_requests" => self.n_requests = need_f64()? as usize,
+            "workload.rate" => self.rate = need_f64()?,
+            "workload.docs_per_query" => self.docs_per_query = need_f64()? as usize,
+            "workload.query_tokens" => self.query_tokens = need_f64()? as usize,
+            "workload.output_tokens" => self.output_tokens = need_f64()? as usize,
+            "corpus.n_docs" => self.n_docs = need_f64()? as usize,
+            "corpus.n_topics" => self.n_topics = need_f64()? as usize,
+            "corpus.mean_doc_tokens" => self.mean_doc_tokens = need_f64()? as usize,
+            "seed" => self.seed = need_f64()? as u64,
+            _ => bail!("unknown config key"),
+        }
+        Ok(())
+    }
+
+    /// Load defaults + file overrides.
+    pub fn from_file(path: &str) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let map = file::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply(&map)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check cross-field constraints.
+    pub fn validate(&self) -> Result<()> {
+        use crate::cache::policy::PolicyKind;
+        use crate::hw::spec::{model_spec, platform_spec};
+        use crate::sim::pipeline::OverlapMode;
+        if model_spec(&self.model).is_none() {
+            bail!("unknown model '{}'", self.model);
+        }
+        if platform_spec(&self.platform).is_none() {
+            bail!("unknown platform '{}'", self.platform);
+        }
+        if PolicyKind::parse(&self.policy).is_none() {
+            bail!("unknown policy '{}'", self.policy);
+        }
+        if OverlapMode::parse(&self.overlap).is_none() {
+            bail!("unknown overlap mode '{}'", self.overlap);
+        }
+        if !matches!(
+            self.system.as_str(),
+            "vllm" | "ccache" | "sccache" | "lmcache" | "pcr"
+        ) {
+            bail!("unknown system '{}'", self.system);
+        }
+        if self.chunk_tokens == 0 || self.rate <= 0.0 || self.n_requests == 0 {
+            bail!("degenerate workload parameters");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let text = r#"
+model = "llama2-13b"
+[cache]
+chunk_tokens = 128
+dram_bytes = 1GiB
+policy = "lru"
+[workload]
+rate = 1.0
+oversample = false
+"#;
+        let map = file::parse(text).unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.model, "llama2-13b");
+        assert_eq!(cfg.chunk_tokens, 128);
+        assert_eq!(cfg.dram_bytes, 1 << 30);
+        assert_eq!(cfg.policy, "lru");
+        assert_eq!(cfg.rate, 1.0);
+        assert!(!cfg.oversample);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let map = file::parse("bogus = 1").unwrap();
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.apply(&map).is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_names() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.model = "gpt-17".into();
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = "magic".into();
+        assert!(cfg.validate().is_err());
+        let mut cfg = ExperimentConfig::default();
+        cfg.overlap = "diagonal".into();
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Hardware models: the simulated testbeds (DESIGN.md §Substitutions).
+//!
+//! * [`spec`] — published architecture/platform constants (six models,
+//!   two testbeds) behind every ratio the paper's figures depend on.
+//! * [`gpu`] — analytic prefill/decode compute-cost model.
+//! * [`transfer`] — PCIe/SSD bandwidth channels, batched-copy modeling
+//!   (Fig 13) and the Eq. (1) synchronous-overhead formula.
+
+pub mod gpu;
+pub mod spec;
+pub mod transfer;

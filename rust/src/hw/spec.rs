@@ -1,0 +1,269 @@
+//! Model and platform specification tables.
+//!
+//! These are the calibration constants behind the analytic cost models
+//! (`hw::gpu`, `hw::transfer`). Model specs are the published
+//! architecture numbers for the six LLMs the paper evaluates; platform
+//! specs are the paper's two testbeds (§6.1). The simulator preserves
+//! *ratios* — KV bytes/token, FLOPs/byte crossovers — which is what the
+//! paper's figures depend on (DESIGN.md §Substitutions).
+
+/// Attention layout: the paper contrasts MHA (Llama2, big KV) with GQA
+/// (Llama3/Qwen2.5, small KV); KV size drives most of its findings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttnKind {
+    Mha,
+    Gqa,
+}
+
+/// Architecture constants of a served model (fp16 weights/KV on the
+/// simulated testbed).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub params: u64,
+    pub n_layers: u32,
+    pub n_heads: u32,
+    pub n_kv_heads: u32,
+    pub head_dim: u32,
+    pub d_model: u32,
+    pub d_ff: u32,
+    pub kind: AttnKind,
+    /// Bytes per element for weights/KV on the simulated GPU (fp16 = 2).
+    pub dtype_bytes: u32,
+    /// Number of GPUs the paper runs this model on (13B/14B use 2).
+    pub tensor_parallel: u32,
+}
+
+impl ModelSpec {
+    /// KV-cache bytes one token occupies across all layers (K and V).
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        self.n_layers as u64
+            * 2
+            * self.n_kv_heads as u64
+            * self.head_dim as u64
+            * self.dtype_bytes as u64
+    }
+
+    /// KV bytes of one layer for `tokens` tokens (layer-wise transfer
+    /// granularity).
+    pub fn kv_bytes_per_layer(&self, tokens: u64) -> u64 {
+        2 * self.n_kv_heads as u64
+            * self.head_dim as u64
+            * self.dtype_bytes as u64
+            * tokens
+    }
+
+    /// Weight bytes (fp16).
+    pub fn weight_bytes(&self) -> u64 {
+        self.params * self.dtype_bytes as u64
+    }
+
+    /// Prefill FLOPs for computing `new` tokens given `past` tokens of
+    /// context: ~2·params per token for the dense path plus the
+    /// quadratic attention term 4·d·L per (query, key) pair.
+    pub fn prefill_flops(&self, past: u64, new: u64) -> f64 {
+        let dense = 2.0 * self.params as f64 * new as f64;
+        // each new token attends to (past + its causal prefix) keys
+        let avg_keys = past as f64 + (new as f64 + 1.0) / 2.0;
+        let attn = 4.0
+            * self.d_model as f64
+            * self.n_layers as f64
+            * new as f64
+            * avg_keys;
+        dense + attn
+    }
+
+    /// Decode FLOPs for one token at context length `ctx`.
+    pub fn decode_flops(&self, ctx: u64) -> f64 {
+        self.prefill_flops(ctx, 1)
+    }
+}
+
+/// One of the paper's two testbeds.
+#[derive(Clone, Debug)]
+pub struct PlatformSpec {
+    pub name: &'static str,
+    pub gpus: u32,
+    pub gpu_mem_bytes: u64,
+    /// Dense fp16 tensor throughput per GPU.
+    pub gpu_tflops: f64,
+    /// Fraction of peak the prefill actually achieves (kernel efficiency).
+    pub gpu_efficiency: f64,
+    pub cpu_mem_bytes: u64,
+    pub cpu_cores: u32,
+    /// Effective PCIe bandwidth per GPU per direction (paper: ~24 GB/s
+    /// measured out of 32 GB/s theoretical).
+    pub pcie_gbps: f64,
+    /// Per-copy-call launch overhead (the `cudaMemcpyAsync` cost the
+    /// BatchAsync API amortizes — Fig 13).
+    pub copy_launch_overhead_s: f64,
+    pub ssd_bytes: u64,
+    pub ssd_read_gbps: f64,
+    pub ssd_write_gbps: f64,
+}
+
+impl PlatformSpec {
+    /// Aggregate compute available to a model (tensor-parallel spreads
+    /// across `tp` GPUs with a small scaling penalty).
+    pub fn effective_flops(&self, tp: u32) -> f64 {
+        let tp = tp.min(self.gpus) as f64;
+        let scale = if tp > 1.0 { 0.9 } else { 1.0 };
+        self.gpu_tflops * 1e12 * self.gpu_efficiency * tp * scale
+    }
+
+    /// GPU memory available for KV cache after weights (split across
+    /// `tp` GPUs) and a fixed activation reserve.
+    pub fn gpu_kv_budget(&self, model: &ModelSpec) -> u64 {
+        let tp = model.tensor_parallel.min(self.gpus) as u64;
+        let total = self.gpu_mem_bytes * tp;
+        let reserve = (total as f64 * 0.15) as u64; // activations + fragmentation
+        total.saturating_sub(model.weight_bytes()).saturating_sub(reserve)
+    }
+}
+
+/// The six models from §6.1, published architecture numbers.
+pub fn model_specs() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec {
+            name: "llama2-7b", params: 6_740_000_000, n_layers: 32,
+            n_heads: 32, n_kv_heads: 32, head_dim: 128, d_model: 4096,
+            d_ff: 11008, kind: AttnKind::Mha, dtype_bytes: 2, tensor_parallel: 1,
+        },
+        ModelSpec {
+            name: "llama2-13b", params: 13_000_000_000, n_layers: 40,
+            n_heads: 40, n_kv_heads: 40, head_dim: 128, d_model: 5120,
+            d_ff: 13824, kind: AttnKind::Mha, dtype_bytes: 2, tensor_parallel: 2,
+        },
+        ModelSpec {
+            name: "llama3.1-8b", params: 8_030_000_000, n_layers: 32,
+            n_heads: 32, n_kv_heads: 8, head_dim: 128, d_model: 4096,
+            d_ff: 14336, kind: AttnKind::Gqa, dtype_bytes: 2, tensor_parallel: 1,
+        },
+        ModelSpec {
+            name: "llama3.2-3b", params: 3_210_000_000, n_layers: 28,
+            n_heads: 24, n_kv_heads: 8, head_dim: 128, d_model: 3072,
+            d_ff: 8192, kind: AttnKind::Gqa, dtype_bytes: 2, tensor_parallel: 1,
+        },
+        ModelSpec {
+            name: "qwen2.5-7b", params: 7_620_000_000, n_layers: 28,
+            n_heads: 28, n_kv_heads: 4, head_dim: 128, d_model: 3584,
+            d_ff: 18944, kind: AttnKind::Gqa, dtype_bytes: 2, tensor_parallel: 1,
+        },
+        ModelSpec {
+            name: "qwen2.5-14b", params: 14_700_000_000, n_layers: 48,
+            n_heads: 40, n_kv_heads: 8, head_dim: 128, d_model: 5120,
+            d_ff: 13824, kind: AttnKind::Gqa, dtype_bytes: 2, tensor_parallel: 2,
+        },
+    ]
+}
+
+pub fn model_spec(name: &str) -> Option<ModelSpec> {
+    model_specs().into_iter().find(|m| m.name == name)
+}
+
+/// The paper's two testbeds (§6.1).
+pub fn platform_specs() -> Vec<PlatformSpec> {
+    vec![
+        PlatformSpec {
+            name: "a6000",
+            gpus: 2,
+            gpu_mem_bytes: 48 * (1 << 30),
+            gpu_tflops: 155.0,
+            gpu_efficiency: 0.45,
+            cpu_mem_bytes: 256 * (1 << 30),
+            cpu_cores: 96,
+            pcie_gbps: 24.0,
+            copy_launch_overhead_s: 4.0e-6,
+            ssd_bytes: 4 * (1u64 << 40),
+            ssd_read_gbps: 3.0,
+            ssd_write_gbps: 0.5,
+        },
+        PlatformSpec {
+            name: "rtx4090",
+            gpus: 2,
+            gpu_mem_bytes: 24 * (1 << 30),
+            gpu_tflops: 165.0,
+            gpu_efficiency: 0.45,
+            cpu_mem_bytes: 128 * (1 << 30),
+            cpu_cores: 128,
+            pcie_gbps: 24.0,
+            copy_launch_overhead_s: 4.0e-6,
+            ssd_bytes: 4 * (1u64 << 40),
+            ssd_read_gbps: 3.0,
+            ssd_write_gbps: 0.5,
+        },
+    ]
+}
+
+pub fn platform_spec(name: &str) -> Option<PlatformSpec> {
+    platform_specs().into_iter().find(|p| p.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama2_13b_kv_matches_paper() {
+        // Paper Fig 4: 8192k tokens of Llama2-13B ≈ 6.23 TB.
+        let m = model_spec("llama2-13b").unwrap();
+        let total = m.kv_bytes_per_token() * 8_192_000;
+        let tb = total as f64 / 1e12;
+        assert!((tb - 6.7).abs() < 0.6, "got {tb} TB"); // 819200 B/token
+        assert_eq!(m.kv_bytes_per_token(), 819_200);
+    }
+
+    #[test]
+    fn gqa_kv_smaller_than_mha() {
+        let l2 = model_spec("llama2-7b").unwrap();
+        let q = model_spec("qwen2.5-7b").unwrap();
+        assert!(l2.kv_bytes_per_token() > 4 * q.kv_bytes_per_token());
+        assert_eq!(l2.kind, AttnKind::Mha);
+        assert_eq!(q.kind, AttnKind::Gqa);
+    }
+
+    #[test]
+    fn h100_esque_token_capacity_sanity() {
+        // §3: 80 GB holds ~163k tokens of Llama2-7B KV.
+        let m = model_spec("llama2-7b").unwrap();
+        let tokens = 80e9 / m.kv_bytes_per_token() as f64;
+        assert!((tokens - 152_000.0).abs() < 25_000.0, "tokens={tokens}");
+    }
+
+    #[test]
+    fn prefill_flops_superlinear() {
+        // Fig 4's point: TTFT grows super-linearly with input length.
+        let m = model_spec("qwen2.5-14b").unwrap();
+        let f1 = m.prefill_flops(0, 4096);
+        let f2 = m.prefill_flops(0, 8192);
+        assert!(f2 > 2.0 * f1);
+        assert!(f2 < 4.0 * f1);
+    }
+
+    #[test]
+    fn kv_budget_positive_for_all_pairs() {
+        for p in platform_specs() {
+            for m in model_specs() {
+                let b = p.gpu_kv_budget(&m);
+                assert!(b > 0, "{} on {} has no KV budget", m.name, p.name);
+            }
+        }
+    }
+
+    #[test]
+    fn layer_bytes_times_layers_is_total() {
+        for m in model_specs() {
+            assert_eq!(
+                m.kv_bytes_per_layer(1) * m.n_layers as u64,
+                m.kv_bytes_per_token()
+            );
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(model_spec("llama3.2-3b").is_some());
+        assert!(model_spec("nope").is_none());
+        assert!(platform_spec("rtx4090").is_some());
+    }
+}

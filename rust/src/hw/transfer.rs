@@ -1,0 +1,210 @@
+//! Data-movement cost models: PCIe (CPU↔GPU) and SSD (DRAM↔disk)
+//! channels, block-by-block vs batched copy launch overhead (Fig 13),
+//! and the synchronous-reuse overhead formula of Eq. (1).
+//!
+//! A `Channel` is a FIFO bandwidth resource with a virtual-time cursor,
+//! so the same object serves both analytic formulas and the serving
+//! simulator's asynchronous transfer bookkeeping.
+
+use crate::hw::spec::{ModelSpec, PlatformSpec};
+
+/// A directional bandwidth channel with per-call launch overhead and a
+/// FIFO availability cursor in virtual time.
+#[derive(Clone, Debug)]
+pub struct Channel {
+    pub name: &'static str,
+    pub bytes_per_s: f64,
+    pub launch_overhead_s: f64,
+    /// Virtual time at which the channel becomes free.
+    pub free_at: f64,
+    /// Total bytes moved (for utilization reporting).
+    pub bytes_moved: u64,
+}
+
+impl Channel {
+    pub fn new(name: &'static str, gbps: f64, launch_overhead_s: f64) -> Self {
+        Channel {
+            name,
+            bytes_per_s: gbps * 1e9,
+            launch_overhead_s,
+            free_at: 0.0,
+            bytes_moved: 0,
+        }
+    }
+
+    /// Pure cost of one copy call moving `bytes` (no queueing).
+    pub fn copy_time(&self, bytes: u64) -> f64 {
+        self.launch_overhead_s + bytes as f64 / self.bytes_per_s
+    }
+
+    /// Cost of moving `bytes` split into `calls` separate copy calls
+    /// (block-by-block) vs one batched call — the Fig 13 contrast.
+    pub fn copy_time_calls(&self, bytes: u64, calls: u64) -> f64 {
+        self.launch_overhead_s * calls as f64 + bytes as f64 / self.bytes_per_s
+    }
+
+    /// Enqueue a transfer at `now`; returns (start, finish) and advances
+    /// the cursor. FIFO: starts when both `now` and prior work allow.
+    pub fn enqueue(&mut self, now: f64, bytes: u64) -> (f64, f64) {
+        let start = now.max(self.free_at);
+        let finish = start + self.copy_time(bytes);
+        self.free_at = finish;
+        self.bytes_moved += bytes;
+        (start, finish)
+    }
+
+    /// Time already committed beyond `now` (queue depth in seconds).
+    pub fn backlog(&self, now: f64) -> f64 {
+        (self.free_at - now).max(0.0)
+    }
+
+    pub fn reset(&mut self) {
+        self.free_at = 0.0;
+        self.bytes_moved = 0;
+    }
+}
+
+/// The full transfer fabric of one platform.
+#[derive(Clone, Debug)]
+pub struct TransferFabric {
+    pub h2d: Channel,
+    pub d2h: Channel,
+    pub ssd_read: Channel,
+    pub ssd_write: Channel,
+}
+
+impl TransferFabric {
+    pub fn new(p: &PlatformSpec) -> Self {
+        TransferFabric {
+            h2d: Channel::new("pcie-h2d", p.pcie_gbps, p.copy_launch_overhead_s),
+            d2h: Channel::new("pcie-d2h", p.pcie_gbps, p.copy_launch_overhead_s),
+            // SSD ops go through the block layer; launch overhead is
+            // a syscall + NVMe queue doorbell, ~10µs.
+            ssd_read: Channel::new("ssd-read", p.ssd_read_gbps, 10e-6),
+            ssd_write: Channel::new("ssd-write", p.ssd_write_gbps, 10e-6),
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.h2d.reset();
+        self.d2h.reset();
+        self.ssd_read.reset();
+        self.ssd_write.reset();
+    }
+}
+
+/// Copy strategies for moving one KV chunk into paged GPU blocks
+/// (Fig 13: block-by-block `cudaMemcpyAsync` vs `cudaMemcpyBatchAsync`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CopyMode {
+    BlockByBlock,
+    BatchAsync,
+}
+
+/// Time to copy one chunk of `chunk_tokens` tokens of ONE layer's KV,
+/// scattered into `chunk_tokens / block_tokens` non-contiguous GPU
+/// blocks (vLLM paging).
+pub fn chunk_copy_time(
+    ch: &Channel,
+    model: &ModelSpec,
+    chunk_tokens: u64,
+    block_tokens: u64,
+    mode: CopyMode,
+) -> f64 {
+    let bytes = model.kv_bytes_per_layer(chunk_tokens);
+    // K and V are separate regions per block: 2 copies per block.
+    let blocks = 2 * chunk_tokens.div_ceil(block_tokens);
+    match mode {
+        CopyMode::BlockByBlock => ch.copy_time_calls(bytes, blocks),
+        CopyMode::BatchAsync => ch.copy_time_calls(bytes, 1),
+    }
+}
+
+/// Eq. (1): total processing time of a request with `n1` reused tokens
+/// and `n2 = n - n1` computed tokens under *synchronous* transfers,
+/// where `c1` = full-sequence transfer time and `c2` = full-sequence
+/// compute time. The paper's point: the transfer overhead contributes
+/// a constant `c1` regardless of the reuse ratio.
+pub fn eq1_sync_total(n1: u64, n2: u64, c1: f64, c2: f64) -> f64 {
+    let n = (n1 + n2) as f64;
+    if n == 0.0 {
+        return 0.0;
+    }
+    // load reused KV + compute the rest + offload newly generated KV
+    (n1 as f64 / n) * c1 + (n2 as f64 / n) * c2 + (n2 as f64 / n) * c1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::spec::{model_spec, platform_spec};
+
+    #[test]
+    fn eq1_is_constant_plus_compute_share() {
+        // C = C1 + (N2/N)·C2 — check the algebraic identity.
+        let (c1, c2) = (0.5, 2.0);
+        for n1 in [0u64, 1000, 4096, 8192] {
+            let n2 = 8192 - n1;
+            let total = eq1_sync_total(n1, n2, c1, c2);
+            let expect = c1 + (n2 as f64 / 8192.0) * c2;
+            assert!((total - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn paper_fig13_batch_vs_blockwise_shape() {
+        // Llama2-13B, one layer of a 256-token chunk, 16-token vLLM
+        // blocks, 32 GB/s PCIe: paper measures 0.671 ms block-by-block
+        // vs 0.261 ms batched. With published arch numbers the copy is
+        // bandwidth-dominated; what must reproduce is the ~2.5x gap
+        // direction and the sub-millisecond magnitudes.
+        let m = model_spec("llama2-13b").unwrap();
+        let ch = Channel::new("pcie", 32.0, 12e-6); // jetty: per-call cost incl. driver
+        let slow = chunk_copy_time(&ch, &m, 256, 16, CopyMode::BlockByBlock);
+        let fast = chunk_copy_time(&ch, &m, 256, 16, CopyMode::BatchAsync);
+        assert!(slow > 1.8 * fast, "slow={slow} fast={fast}");
+        assert!(slow < 2e-3 && fast < 1e-3);
+    }
+
+    #[test]
+    fn channel_fifo_queueing() {
+        let mut ch = Channel::new("t", 1.0, 0.0); // 1 GB/s
+        let (s1, f1) = ch.enqueue(0.0, 1_000_000_000); // 1s
+        let (s2, f2) = ch.enqueue(0.5, 500_000_000); // queued behind
+        assert_eq!((s1, f1), (0.0, 1.0));
+        assert_eq!(s2, 1.0);
+        assert!((f2 - 1.5).abs() < 1e-12);
+        assert!((ch.backlog(1.2) - 0.3).abs() < 1e-9);
+        assert_eq!(ch.bytes_moved, 1_500_000_000);
+    }
+
+    #[test]
+    fn enqueue_after_idle_starts_at_now() {
+        let mut ch = Channel::new("t", 1.0, 0.0);
+        ch.enqueue(0.0, 1_000_000_000);
+        let (s, _) = ch.enqueue(5.0, 1);
+        assert_eq!(s, 5.0);
+    }
+
+    #[test]
+    fn ssd_write_slower_than_read() {
+        let p = platform_spec("a6000").unwrap();
+        let f = TransferFabric::new(&p);
+        let bytes = 1 << 30;
+        assert!(f.ssd_write.copy_time(bytes) > 5.0 * f.ssd_read.copy_time(bytes));
+    }
+
+    #[test]
+    fn batched_copy_never_slower() {
+        let m = model_spec("qwen2.5-7b").unwrap();
+        let p = platform_spec("rtx4090").unwrap();
+        let ch = Channel::new("pcie", p.pcie_gbps, p.copy_launch_overhead_s);
+        for chunk in [64u64, 256, 1024] {
+            for block in [8u64, 16, 32] {
+                let a = chunk_copy_time(&ch, &m, chunk, block, CopyMode::BlockByBlock);
+                let b = chunk_copy_time(&ch, &m, chunk, block, CopyMode::BatchAsync);
+                assert!(b <= a);
+            }
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! # PCR — Prefetch-Enhanced Cache Reuse for Low-Latency RAG Serving
+//!
+//! Reproduction of *"PCR: A Prefetch-Enhanced Cache Reuse System for
+//! Low-Latency RAG Serving"* (Wang et al., CS.DC 2026) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: a serving
+//!   coordinator with a prefix-tree KV cache across GPU/DRAM/SSD tiers
+//!   ([`cache`]), look-ahead LRU eviction, layer-wise transfer/compute
+//!   overlapping ([`sim::pipeline`]), and queue-based SSD→DRAM
+//!   prefetching ([`serve`]).
+//! * **L2/L1 (build-time Python)** — a small GQA transformer whose
+//!   prefill consumes reused prefix KV, with the attention hot-spot as a
+//!   Pallas kernel; AOT-lowered to HLO text and executed natively via
+//!   the PJRT CPU client ([`runtime`]). Python never runs on the
+//!   request path.
+//!
+//! Experiments (every table & figure of the paper) live in
+//! `rust/benches/`; see DESIGN.md for the experiment index and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod bench;
+pub mod cache;
+pub mod config;
+pub mod hw;
+pub mod rag;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod util;
+
+/// Crate version (also reported by the CLI and the HTTP server).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

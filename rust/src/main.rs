@@ -1,0 +1,272 @@
+//! `pcr` — the leader binary: launch the serving simulator, the real
+//! PJRT HTTP server, or individual experiments from the command line.
+//!
+//! Subcommands:
+//!   sim      run one virtual-time serving experiment and print metrics
+//!   compare  run all five systems on one workload and print a table
+//!   serve    start the real-model HTTP server (requires artifacts)
+//!   corpus   generate + describe a synthetic corpus / workload
+//!   version  print version/build info
+
+use pcr::bench::Table;
+use pcr::config::ExperimentConfig;
+use pcr::serve::system::SystemSpec;
+use pcr::serve::workload::Workload;
+use pcr::serve::{engine, server};
+use pcr::util::cli::Cli;
+use pcr::util::fmt_secs;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r.to_vec()),
+        None => {
+            usage();
+            std::process::exit(2);
+        }
+    };
+    let code = match cmd {
+        "sim" => cmd_sim(&rest),
+        "compare" => cmd_compare(&rest),
+        "serve" => cmd_serve(&rest),
+        "corpus" => cmd_corpus(&rest),
+        "version" | "--version" => {
+            println!("pcr {}", pcr::version());
+            0
+        }
+        "--help" | "-h" | "help" => {
+            usage();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n");
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    println!(
+        "pcr {} — prefetch-enhanced KV-cache reuse for RAG serving\n\n\
+         USAGE: pcr <sim|compare|serve|corpus|version> [flags]\n\
+         Run `pcr <cmd> --help` for per-command flags.",
+        pcr::version()
+    );
+}
+
+fn experiment_flags(cli: Cli) -> Cli {
+    cli.opt("config", "", "config file (TOML subset); flags override it")
+        .opt("model", "llama3.1-8b", "model spec name")
+        .opt("platform", "a6000", "platform spec name (a6000|rtx4090)")
+        .opt("rate", "0.5", "Poisson arrival rate, req/s")
+        .opt("requests", "500", "number of requests")
+        .opt("inputs", "250", "distinct dataset inputs")
+        .opt("system", "pcr", "system variant (vllm|ccache|sccache|lmcache|pcr)")
+        .opt("window", "4", "prefetch look-ahead window")
+        .opt("seed", "20260710", "master seed")
+        .switch("workload2", "sample without replacement (workload 2)")
+}
+
+fn build_config(args: &pcr::util::cli::Args) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(path) = args.get("config").filter(|p| !p.is_empty()) {
+        cfg = ExperimentConfig::from_file(path).unwrap_or_else(|e| {
+            eprintln!("error loading config: {e:#}");
+            std::process::exit(2);
+        });
+    }
+    cfg.model = args.get("model").unwrap().to_string();
+    cfg.platform = args.get("platform").unwrap().to_string();
+    cfg.system = args.get("system").unwrap().to_string();
+    cfg.rate = args.f64_of("rate");
+    cfg.n_requests = args.usize_of("requests");
+    cfg.n_inputs = args.usize_of("inputs");
+    cfg.prefetch_window = args.usize_of("window");
+    cfg.seed = args.parse_as("seed").unwrap();
+    cfg.oversample = !args.flag("workload2");
+    // CLI-scale corpus (full paper scale lives in the benches)
+    cfg.n_docs = 1200;
+    cfg.mean_doc_tokens = 1600;
+    cfg.gpu_bytes = 8 << 30;
+    cfg.dram_bytes = 24 << 30;
+    cfg.ssd_bytes = 200 << 30;
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid config: {e:#}");
+        std::process::exit(2);
+    }
+    cfg
+}
+
+fn cmd_sim(argv: &[String]) -> i32 {
+    let cli = experiment_flags(Cli::new("pcr sim", "run one serving experiment"));
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => return cli_err(&cli, e),
+    };
+    let cfg = build_config(&args);
+    let wl = Workload::build(&cfg);
+    println!(
+        "workload: {} requests over {} inputs, mean len {:.0} tokens, repetition {:.1}%",
+        wl.len(),
+        wl.n_distinct_inputs,
+        wl.mean_input_tokens,
+        wl.repetition_ratio * 100.0
+    );
+    let spec = SystemSpec::named(&cfg.system, cfg.prefetch_window).expect("validated");
+    let out = engine::run(&cfg, &spec, &wl);
+    println!("system={} model={} platform={} rate={}",
+             out.system, cfg.model, cfg.platform, cfg.rate);
+    println!("{}", out.report.pretty());
+    println!(
+        "cache: hit-ratio {:.1}%  (gpu {} dram {} ssd {} chunks)  prefetch {}/{} (dropped {})",
+        out.cache.hit_ratio() * 100.0,
+        out.reused_gpu_chunks,
+        out.reused_dram_chunks,
+        out.reused_ssd_chunks,
+        out.prefetch_completed,
+        out.prefetch_submitted,
+        out.prefetch_dropped
+    );
+    0
+}
+
+fn cmd_compare(argv: &[String]) -> i32 {
+    let cli = experiment_flags(Cli::new("pcr compare", "compare all systems on one workload"));
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => return cli_err(&cli, e),
+    };
+    let cfg = build_config(&args);
+    let wl = Workload::build(&cfg);
+    let mut table = Table::new(&[
+        "system", "ttft-mean", "ttft-p95", "ttft-p99", "e2el-mean",
+        "hit%", "reuse%",
+    ]);
+    for spec in SystemSpec::all_baselines(cfg.prefetch_window) {
+        let out = engine::run(&cfg, &spec, &wl);
+        table.row(&[
+            out.system.to_string(),
+            fmt_secs(out.report.ttft.mean),
+            fmt_secs(out.report.ttft.p95),
+            fmt_secs(out.report.ttft.p99),
+            fmt_secs(out.report.e2el.mean),
+            format!("{:.1}", out.cache.hit_ratio() * 100.0),
+            format!("{:.1}", out.report.mean_reuse_ratio * 100.0),
+        ]);
+    }
+    table.print();
+    0
+}
+
+fn cmd_serve(argv: &[String]) -> i32 {
+    let cli = Cli::new("pcr serve", "real-model HTTP server (needs `make artifacts`)")
+        .opt("addr", "127.0.0.1:8180", "listen address")
+        .opt("dram-chunks", "64", "DRAM tier size in chunks")
+        .opt("ssd-chunks", "512", "SSD tier size in chunks")
+        .opt("spill-dir", "/tmp/pcr-spill", "SSD tier directory")
+        .opt("workers", "4", "HTTP worker threads")
+        .opt("corpus-docs", "300", "retriever corpus size (0 = no /rag route)");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => return cli_err(&cli, e),
+    };
+    let manifest = match pcr::runtime::manifest::Manifest::load(
+        pcr::runtime::manifest::default_artifacts_dir(),
+    ) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let dram = args.parse_as::<u64>("dram-chunks").unwrap();
+    let ssd = args.parse_as::<u64>("ssd-chunks").unwrap();
+    let spill = std::path::PathBuf::from(args.get("spill-dir").unwrap());
+    let vocab = manifest.vocab as u32;
+    let executor = match pcr::runtime::executor::ExecutorHandle::spawn(move || {
+        pcr::runtime::executor::PjrtExecutor::new(manifest, dram, ssd, Some(&spill))
+    }) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let n_docs = args.usize_of("corpus-docs");
+    let retriever = (n_docs > 0).then(|| {
+        let corpus = pcr::rag::corpus::Corpus::generate(pcr::rag::corpus::CorpusConfig {
+            n_docs,
+            n_topics: 24,
+            vocab,
+            mean_doc_tokens: 360,
+            doc_tokens_jitter: 0.15,
+            seed: 11,
+        });
+        pcr::rag::retriever::Retriever::build(corpus, 2)
+    });
+    let state = server::ServerState {
+        executor,
+        retriever,
+        tokenizer: pcr::rag::tokenizer::Tokenizer::new(vocab),
+        ttft: std::sync::Mutex::new(Default::default()),
+        requests: std::sync::Mutex::new(0),
+    };
+    let srv = match server::HttpServer::bind(args.get("addr").unwrap(), state) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind error: {e:#}");
+            return 1;
+        }
+    };
+    println!("pcr serving on http://{}", srv.local_addr().unwrap());
+    println!("routes: POST /generate {{\"tokens\":[..]}}, POST /rag {{\"query\":\"..\"}}, GET /stats");
+    if let Err(e) = srv.serve(args.usize_of("workers")) {
+        eprintln!("server error: {e:#}");
+        return 1;
+    }
+    0
+}
+
+fn cmd_corpus(argv: &[String]) -> i32 {
+    let cli = Cli::new("pcr corpus", "generate + describe a synthetic corpus")
+        .opt("docs", "2000", "number of documents")
+        .opt("topics", "64", "number of topics")
+        .opt("mean-tokens", "3300", "mean document length")
+        .opt("seed", "7", "seed");
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => return cli_err(&cli, e),
+    };
+    let corpus = pcr::rag::corpus::Corpus::generate(pcr::rag::corpus::CorpusConfig {
+        n_docs: args.usize_of("docs"),
+        n_topics: args.usize_of("topics"),
+        vocab: 2048,
+        mean_doc_tokens: args.usize_of("mean-tokens"),
+        doc_tokens_jitter: 0.2,
+        seed: args.parse_as("seed").unwrap(),
+    });
+    println!(
+        "corpus: {} docs, {} total tokens ({:.2} GB of Llama3.1-8B KV at fp16)",
+        corpus.len(),
+        corpus.total_tokens(),
+        corpus.total_tokens() as f64
+            * pcr::hw::spec::model_spec("llama3.1-8b").unwrap().kv_bytes_per_token() as f64
+            / 1e9
+    );
+    0
+}
+
+fn cli_err(cli: &Cli, e: pcr::util::cli::CliError) -> i32 {
+    match e {
+        pcr::util::cli::CliError::Help => {
+            println!("{}", cli.usage());
+            0
+        }
+        e => {
+            eprintln!("error: {e}\n\n{}", cli.usage());
+            2
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Feature-hash embeddings (the MiniLM substitute).
+//!
+//! Documents and queries are embedded by hashing token unigrams/bigrams
+//! into a fixed-dimension vector, L2-normalized. Topically-related
+//! sequences (sharing a vocabulary band — see `rag::corpus`) land close
+//! in cosine space, which is all retrieval quality the cache experiments
+//! need: the same skewed subset of documents keeps being retrieved.
+
+use crate::util::rng::splitmix64;
+
+pub const EMBED_DIM: usize = 128;
+
+/// Embed a token sequence into a unit vector.
+pub fn embed(tokens: &[u32]) -> Vec<f32> {
+    let mut v = vec![0.0f32; EMBED_DIM];
+    if tokens.is_empty() {
+        v[0] = 1.0;
+        return v;
+    }
+    let mut add = |h: u64, w: f32| {
+        let mut s = h;
+        let m = splitmix64(&mut s);
+        let dim = (m % EMBED_DIM as u64) as usize;
+        let sign = if (m >> 63) == 0 { 1.0 } else { -1.0 };
+        v[dim] += sign * w;
+    };
+    for (i, &t) in tokens.iter().enumerate() {
+        add(t as u64 ^ 0xA5A5_5A5A, 1.0);
+        if i + 1 < tokens.len() {
+            let bigram = ((t as u64) << 32) | tokens[i + 1] as u64;
+            add(bigram ^ 0x5A5A_A5A5_0000_0000, 0.2);
+        }
+    }
+    normalize(&mut v);
+    v
+}
+
+fn normalize(v: &mut [f32]) {
+    let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+}
+
+/// Cosine similarity of two unit vectors (plain dot product).
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Squared Euclidean distance (HNSW's metric; monotone with cosine for
+/// unit vectors).
+pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = x - y;
+            d * d
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rag::corpus::{Corpus, CorpusConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn unit_norm() {
+        let v = embed(&[1, 2, 3, 4, 5]);
+        let n: f32 = v.iter().map(|x| x * x).sum();
+        assert!((n - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(embed(&[7, 8, 9]), embed(&[7, 8, 9]));
+    }
+
+    #[test]
+    fn empty_sequence_ok() {
+        let v = embed(&[]);
+        assert!((cosine(&v, &v) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn same_topic_closer_than_cross_topic() {
+        let c = Corpus::generate(CorpusConfig {
+            n_docs: 60,
+            n_topics: 4,
+            vocab: 2048,
+            mean_doc_tokens: 400,
+            doc_tokens_jitter: 0.1,
+            seed: 5,
+        });
+        let mut rng = Rng::new(9);
+        // average same-topic vs cross-topic similarity over many pairs
+        let embs: Vec<(u32, Vec<f32>)> = c
+            .docs
+            .iter()
+            .map(|d| (d.topic, embed(&d.tokens)))
+            .collect();
+        let (mut same, mut cross) = (Vec::new(), Vec::new());
+        for _ in 0..2000 {
+            let i = rng.below(embs.len() as u64) as usize;
+            let j = rng.below(embs.len() as u64) as usize;
+            if i == j {
+                continue;
+            }
+            let s = cosine(&embs[i].1, &embs[j].1);
+            if embs[i].0 == embs[j].0 {
+                same.push(s);
+            } else {
+                cross.push(s);
+            }
+        }
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len().max(1) as f32;
+        assert!(
+            mean(&same) > mean(&cross) + 0.05,
+            "same={} cross={}",
+            mean(&same),
+            mean(&cross)
+        );
+    }
+
+    #[test]
+    fn l2_consistent_with_cosine_for_unit_vectors() {
+        let a = embed(&[1, 2, 3]);
+        let b = embed(&[4, 5, 6]);
+        let l2 = l2_sq(&a, &b);
+        let cos = cosine(&a, &b);
+        assert!((l2 - (2.0 - 2.0 * cos)).abs() < 1e-5);
+    }
+}

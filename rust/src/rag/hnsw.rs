@@ -1,0 +1,327 @@
+//! Hierarchical Navigable Small World (HNSW) approximate
+//! nearest-neighbour index — the retrieval substrate the paper's RAG
+//! frontend relies on (it cites Malkov & Yashunin and uses Faiss/HNSW
+//! in practice; we build our own since no ANN crate exists offline).
+//!
+//! Standard construction: each element draws a geometric level; layer 0
+//! holds all elements with `2M` links, upper layers `M` links; queries
+//! greedy-descend from the top layer entry point, then run a beam
+//! (`ef`) search on layer 0.
+
+use crate::rag::embed::l2_sq;
+use crate::util::rng::Rng;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// (distance, id) with min-order on distance for BinaryHeap<Reverse>.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Cand {
+    dist: f32,
+    id: u32,
+}
+
+impl Eq for Cand {}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.dist
+            .partial_cmp(&other.dist)
+            .unwrap()
+            .then(self.id.cmp(&other.id))
+    }
+}
+
+/// HNSW index over fixed-dimension f32 vectors.
+pub struct Hnsw {
+    vectors: Vec<Vec<f32>>,
+    /// links[level][id] -> neighbour ids (only meaningful for nodes
+    /// whose level >= that layer).
+    links: Vec<Vec<Vec<u32>>>,
+    levels: Vec<u8>,
+    entry: Option<u32>,
+    max_level: u8,
+    m: usize,
+    ef_construction: usize,
+    rng: Rng,
+}
+
+impl Hnsw {
+    pub fn new(m: usize, ef_construction: usize, seed: u64) -> Self {
+        assert!(m >= 2);
+        Hnsw {
+            vectors: Vec::new(),
+            links: vec![Vec::new()],
+            levels: Vec::new(),
+            entry: None,
+            max_level: 0,
+            m,
+            ef_construction: ef_construction.max(m),
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.vectors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vectors.is_empty()
+    }
+
+    fn draw_level(&mut self) -> u8 {
+        // geometric with p = 1/e scaled by 1/ln(M) (standard choice)
+        let ml = 1.0 / (self.m as f64).ln();
+        let u = self.rng.f64().max(1e-12);
+        ((-u.ln() * ml).floor() as u8).min(12)
+    }
+
+    /// Insert a vector, returning its id.
+    pub fn insert(&mut self, vec: Vec<f32>) -> u32 {
+        let id = self.vectors.len() as u32;
+        let level = self.draw_level();
+        self.vectors.push(vec);
+        self.levels.push(level);
+        while self.links.len() <= level as usize {
+            self.links.push(Vec::new());
+        }
+        for l in 0..self.links.len() {
+            // grow adjacency tables lazily
+            while self.links[l].len() < self.vectors.len() {
+                self.links[l].push(Vec::new());
+            }
+        }
+        let Some(mut ep) = self.entry else {
+            self.entry = Some(id);
+            self.max_level = level;
+            return id;
+        };
+
+        let q = self.vectors[id as usize].clone();
+        // descend through layers above the new node's level
+        let mut l = self.max_level;
+        while l > level {
+            ep = self.greedy_closest(&q, ep, l as usize);
+            if l == 0 {
+                break;
+            }
+            l -= 1;
+        }
+        // insert into layers min(level, max_level)..0
+        let top = level.min(self.max_level);
+        for layer in (0..=top as usize).rev() {
+            let found = self.search_layer(&q, ep, self.ef_construction, layer);
+            let m_max = if layer == 0 { self.m * 2 } else { self.m };
+            let chosen: Vec<u32> = found.iter().take(self.m).map(|c| c.id).collect();
+            for &n in &chosen {
+                self.links[layer][id as usize].push(n);
+                self.links[layer][n as usize].push(id);
+                // prune neighbour's list if over capacity
+                if self.links[layer][n as usize].len() > m_max {
+                    self.prune(n, layer, m_max);
+                }
+            }
+            if let Some(best) = found.first() {
+                ep = best.id;
+            }
+        }
+        if level > self.max_level {
+            self.max_level = level;
+            self.entry = Some(id);
+        }
+        id
+    }
+
+    fn prune(&mut self, id: u32, layer: usize, m_max: usize) {
+        let base = self.vectors[id as usize].clone();
+        let mut neigh: Vec<Cand> = self.links[layer][id as usize]
+            .iter()
+            .map(|&n| Cand {
+                dist: l2_sq(&base, &self.vectors[n as usize]),
+                id: n,
+            })
+            .collect();
+        neigh.sort();
+        neigh.truncate(m_max);
+        self.links[layer][id as usize] = neigh.into_iter().map(|c| c.id).collect();
+    }
+
+    /// Greedy single-entry descent at one layer.
+    fn greedy_closest(&self, q: &[f32], mut ep: u32, layer: usize) -> u32 {
+        let mut best = l2_sq(q, &self.vectors[ep as usize]);
+        loop {
+            let mut improved = false;
+            for &n in &self.links[layer][ep as usize] {
+                let d = l2_sq(q, &self.vectors[n as usize]);
+                if d < best {
+                    best = d;
+                    ep = n;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return ep;
+            }
+        }
+    }
+
+    /// Beam search within one layer; returns candidates sorted by
+    /// distance ascending (up to `ef`).
+    fn search_layer(&self, q: &[f32], ep: u32, ef: usize, layer: usize) -> Vec<Cand> {
+        let mut visited = vec![false; self.vectors.len()];
+        visited[ep as usize] = true;
+        let d0 = l2_sq(q, &self.vectors[ep as usize]);
+        // candidates: min-heap by distance (explore closest first)
+        let mut cands = BinaryHeap::new();
+        cands.push(std::cmp::Reverse(Cand { dist: d0, id: ep }));
+        // results: max-heap (worst of the best on top)
+        let mut results: BinaryHeap<Cand> = BinaryHeap::new();
+        results.push(Cand { dist: d0, id: ep });
+        while let Some(std::cmp::Reverse(c)) = cands.pop() {
+            let worst = results.peek().map(|c| c.dist).unwrap_or(f32::INFINITY);
+            if c.dist > worst && results.len() >= ef {
+                break;
+            }
+            for &n in &self.links[layer][c.id as usize] {
+                if visited[n as usize] {
+                    continue;
+                }
+                visited[n as usize] = true;
+                let d = l2_sq(q, &self.vectors[n as usize]);
+                let worst = results.peek().map(|c| c.dist).unwrap_or(f32::INFINITY);
+                if results.len() < ef || d < worst {
+                    cands.push(std::cmp::Reverse(Cand { dist: d, id: n }));
+                    results.push(Cand { dist: d, id: n });
+                    if results.len() > ef {
+                        results.pop();
+                    }
+                }
+            }
+        }
+        let mut out: Vec<Cand> = results.into_vec();
+        out.sort();
+        out
+    }
+
+    /// k-NN query: returns (id, distance) pairs, closest first.
+    pub fn search(&self, q: &[f32], k: usize, ef: usize) -> Vec<(u32, f32)> {
+        let Some(mut ep) = self.entry else {
+            return Vec::new();
+        };
+        let mut l = self.max_level;
+        while l > 0 {
+            ep = self.greedy_closest(q, ep, l as usize);
+            l -= 1;
+        }
+        self.search_layer(q, ep, ef.max(k), 0)
+            .into_iter()
+            .take(k)
+            .map(|c| (c.id, c.dist))
+            .collect()
+    }
+}
+
+/// Brute-force exact k-NN (the correctness oracle for HNSW recall
+/// tests, and a baseline for small corpora).
+pub fn brute_force_knn(vectors: &[Vec<f32>], q: &[f32], k: usize) -> Vec<(u32, f32)> {
+    let mut all: Vec<(u32, f32)> = vectors
+        .iter()
+        .enumerate()
+        .map(|(i, v)| (i as u32, l2_sq(q, v)))
+        .collect();
+    all.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+    all.truncate(k);
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_vectors(n: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..dim).map(|_| rng.f32() * 2.0 - 1.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn exact_on_tiny_set() {
+        let vs = random_vectors(10, 8, 1);
+        let mut h = Hnsw::new(8, 32, 2);
+        for v in &vs {
+            h.insert(v.clone());
+        }
+        for q in &vs {
+            let got = h.search(q, 1, 16);
+            let want = brute_force_knn(&vs, q, 1);
+            assert_eq!(got[0].0, want[0].0); // self is nearest
+        }
+    }
+
+    #[test]
+    fn recall_at_10_reasonable() {
+        let vs = random_vectors(600, 16, 3);
+        let mut h = Hnsw::new(12, 64, 4);
+        for v in &vs {
+            h.insert(v.clone());
+        }
+        let queries = random_vectors(40, 16, 5);
+        let mut hits = 0;
+        let mut total = 0;
+        for q in &queries {
+            let got: Vec<u32> = h.search(q, 10, 64).into_iter().map(|x| x.0).collect();
+            let want: Vec<u32> = brute_force_knn(&vs, q, 10).into_iter().map(|x| x.0).collect();
+            total += want.len();
+            hits += want.iter().filter(|w| got.contains(w)).count();
+        }
+        let recall = hits as f64 / total as f64;
+        assert!(recall > 0.85, "recall@10 = {recall}");
+    }
+
+    #[test]
+    fn empty_index_returns_nothing() {
+        let h = Hnsw::new(8, 32, 1);
+        assert!(h.search(&[0.0; 8], 5, 16).is_empty());
+    }
+
+    #[test]
+    fn k_larger_than_index() {
+        let vs = random_vectors(3, 4, 7);
+        let mut h = Hnsw::new(4, 16, 8);
+        for v in &vs {
+            h.insert(v.clone());
+        }
+        let got = h.search(&vs[0], 10, 32);
+        assert_eq!(got.len(), 3);
+    }
+
+    #[test]
+    fn results_sorted_by_distance() {
+        let vs = random_vectors(200, 8, 9);
+        let mut h = Hnsw::new(8, 48, 10);
+        for v in &vs {
+            h.insert(v.clone());
+        }
+        let got = h.search(&vs[5], 15, 48);
+        for w in got.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let vs = random_vectors(100, 8, 11);
+        let build = || {
+            let mut h = Hnsw::new(8, 32, 12);
+            for v in &vs {
+                h.insert(v.clone());
+            }
+            h.search(&vs[3], 5, 32)
+        };
+        assert_eq!(build(), build());
+    }
+}

@@ -1,0 +1,9 @@
+//! The RAG substrate: synthetic corpus, feature-hash embeddings, an
+//! HNSW approximate-NN index, and the retriever that assembles
+//! `[docs ‖ query]` LLM inputs (paper §2.1, Fig 2).
+
+pub mod corpus;
+pub mod embed;
+pub mod hnsw;
+pub mod retriever;
+pub mod tokenizer;

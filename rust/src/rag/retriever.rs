@@ -1,0 +1,187 @@
+//! The RAG frontend: embed the query, retrieve top-k documents from the
+//! HNSW index, and assemble the LLM input `[doc_a ‖ doc_b ‖ query]`.
+//!
+//! Retrieval latency is measured for real (the index actually runs) and
+//! also modeled for the virtual-time simulator — Fig 10's point is that
+//! retrieval is *much* faster than generation, which is what makes
+//! queue-based prefetching possible (retrieved docs are known while the
+//! request still waits).
+
+use crate::rag::corpus::Corpus;
+use crate::rag::embed::{embed, EMBED_DIM};
+use crate::rag::hnsw::Hnsw;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Retrieval output: chosen documents + assembled token sequence.
+#[derive(Clone, Debug)]
+pub struct Retrieval {
+    pub doc_ids: Vec<u32>,
+    /// `[docs..., query]` concatenated token ids (the LLM input).
+    pub tokens: Vec<u32>,
+    /// Wall-clock seconds the index search actually took.
+    pub search_seconds: f64,
+}
+
+/// Document retriever over a corpus.
+pub struct Retriever {
+    corpus: Corpus,
+    index: Hnsw,
+    pub top_k: usize,
+    pub ef_search: usize,
+}
+
+impl Retriever {
+    /// Build the index over the whole corpus (the paper's offline
+    /// stage: chunk, embed, index).
+    pub fn build(corpus: Corpus, top_k: usize) -> Retriever {
+        let mut index = Hnsw::new(12, 96, corpus.config.seed ^ 0xABCD);
+        for d in &corpus.docs {
+            let v = embed(&d.tokens);
+            debug_assert_eq!(v.len(), EMBED_DIM);
+            index.insert(v);
+        }
+        Retriever {
+            corpus,
+            index,
+            top_k,
+            ef_search: 96,
+        }
+    }
+
+    pub fn corpus(&self) -> &Corpus {
+        &self.corpus
+    }
+
+    /// Online stage: embed the query, search, assemble the LLM input.
+    /// Document order is by descending relevance (stable across
+    /// identical queries — determinism matters for prefix reuse).
+    pub fn retrieve(&self, query_tokens: &[u32]) -> Retrieval {
+        let t0 = Instant::now();
+        let qv = embed(query_tokens);
+        let hits = self.index.search(&qv, self.top_k, self.ef_search);
+        let search_seconds = t0.elapsed().as_secs_f64();
+        let doc_ids: Vec<u32> = hits.iter().map(|(id, _)| *id).collect();
+        let mut tokens = Vec::new();
+        for id in &doc_ids {
+            tokens.extend_from_slice(&self.corpus.doc(*id).tokens);
+        }
+        tokens.extend_from_slice(query_tokens);
+        Retrieval {
+            doc_ids,
+            tokens,
+            search_seconds,
+        }
+    }
+
+    /// Generate a query for a sampled (Zipf-skewed) topic.
+    pub fn sample_query(&self, rng: &mut Rng, query_tokens: usize) -> Vec<u32> {
+        let topic = self.corpus.sample_topic(rng);
+        self.corpus.sample_query(rng, topic, query_tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rag::corpus::CorpusConfig;
+
+    fn retriever() -> Retriever {
+        let corpus = Corpus::generate(CorpusConfig {
+            n_docs: 150,
+            n_topics: 8,
+            vocab: 2048,
+            mean_doc_tokens: 120,
+            doc_tokens_jitter: 0.1,
+            seed: 21,
+        });
+        Retriever::build(corpus, 2)
+    }
+
+    #[test]
+    fn retrieves_k_documents() {
+        let r = retriever();
+        let mut rng = Rng::new(1);
+        let q = r.sample_query(&mut rng, 32);
+        let out = r.retrieve(&q);
+        assert_eq!(out.doc_ids.len(), 2);
+        assert!(out.search_seconds >= 0.0);
+    }
+
+    #[test]
+    fn deterministic_retrieval_for_identical_query() {
+        // Identical queries MUST assemble identical inputs — this is
+        // the precondition for any prefix reuse at all.
+        let r = retriever();
+        let mut rng = Rng::new(2);
+        let q = r.sample_query(&mut rng, 32);
+        let a = r.retrieve(&q);
+        let b = r.retrieve(&q);
+        assert_eq!(a.doc_ids, b.doc_ids);
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn assembled_input_is_docs_then_query() {
+        let r = retriever();
+        let mut rng = Rng::new(3);
+        let q = r.sample_query(&mut rng, 16);
+        let out = r.retrieve(&q);
+        let doc_len: usize = out
+            .doc_ids
+            .iter()
+            .map(|id| r.corpus().doc(*id).tokens.len())
+            .sum();
+        assert_eq!(out.tokens.len(), doc_len + 16);
+        assert_eq!(&out.tokens[doc_len..], &q[..]);
+    }
+
+    #[test]
+    fn topical_queries_mostly_hit_same_topic_docs() {
+        let r = retriever();
+        let mut rng = Rng::new(4);
+        let mut matches = 0;
+        let mut total = 0;
+        for _ in 0..40 {
+            let topic = r.corpus().sample_topic(&mut rng);
+            let q = r.corpus().sample_query(&mut rng, topic, 48);
+            let out = r.retrieve(&q);
+            // retrieved docs should mostly share a topic with each other
+            if out.doc_ids.len() == 2 {
+                total += 1;
+                if r.corpus().doc(out.doc_ids[0]).topic == r.corpus().doc(out.doc_ids[1]).topic {
+                    matches += 1;
+                }
+            }
+        }
+        assert!(matches * 2 >= total, "topical coherence too low: {matches}/{total}");
+    }
+
+    #[test]
+    fn popular_topics_concentrate_on_few_documents() {
+        // Zipf-skewed topics must concentrate retrievals on a small hot
+        // set of documents. (Exact *input* repetition — the paper's
+        // 40%/35% ratios — comes from dataset resampling in
+        // serve::workload, not from emergent retrieval.)
+        let r = retriever();
+        let mut rng = Rng::new(5);
+        let mut freq = std::collections::HashMap::new();
+        let n = 200;
+        for _ in 0..n {
+            let q = r.sample_query(&mut rng, 32);
+            for id in r.retrieve(&q).doc_ids {
+                *freq.entry(id).or_insert(0u32) += 1;
+            }
+        }
+        let mut counts: Vec<u32> = freq.values().copied().collect();
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let total: u32 = counts.iter().sum();
+        let top10: u32 = counts.iter().take(10).sum();
+        // top-10 of 150 docs should absorb far more than the uniform
+        // share (10/150 ≈ 6.7%)
+        assert!(
+            top10 as f64 / total as f64 > 0.15,
+            "hot-doc concentration too low: {top10}/{total}"
+        );
+    }
+}

@@ -1,0 +1,211 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts, keeps the weights
+//! resident as device buffers, and runs prefill/decode natively. This
+//! is the L2 model on the rust request path — Python is long gone by
+//! the time this code runs.
+//!
+//! Executables are compiled lazily per shape bucket and cached; weights
+//! are uploaded once (`execute_b` with persistent `PjRtBuffer`s), so a
+//! steady-state prefill costs one H2D copy for the past KV + tokens and
+//! one D2H for the outputs — the real-machine analogue of the paper's
+//! CPU↔GPU KV traffic.
+
+use crate::runtime::kv::KvDims;
+use crate::runtime::manifest::Manifest;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// Outputs of one prefill call.
+#[derive(Debug)]
+pub struct PrefillOut {
+    /// `[vocab]` logits of the last valid token.
+    pub logits: Vec<f32>,
+    /// `[L, Hkv, N_bucket, D]` new K (garbage beyond `new_len`).
+    pub new_k: Vec<f32>,
+    pub new_v: Vec<f32>,
+    /// The bucket that served the call.
+    pub bucket: (usize, usize),
+}
+
+/// Outputs of one decode step.
+#[derive(Debug)]
+pub struct DecodeOut {
+    pub logits: Vec<f32>,
+    /// Updated padded caches `[L, Hkv, S_max, D]`.
+    pub k_cache: Vec<f32>,
+    pub v_cache: Vec<f32>,
+}
+
+/// The compiled model + resident weights.
+pub struct PjrtModel {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    weights: Vec<xla::PjRtBuffer>,
+    prefill_exes: HashMap<(usize, usize), xla::PjRtLoadedExecutable>,
+    decode_exe: Option<(usize, xla::PjRtLoadedExecutable)>,
+}
+
+impl PjrtModel {
+    /// Create the CPU PJRT client and upload weights. Executables
+    /// compile lazily on first use of each bucket.
+    pub fn load(manifest: Manifest) -> Result<PjrtModel> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let host_weights = manifest.load_weights()?;
+        let mut weights = Vec::with_capacity(host_weights.len());
+        for (spec, data) in manifest.params.iter().zip(&host_weights) {
+            let buf = client
+                .buffer_from_host_buffer::<f32>(data, &spec.shape, None)
+                .map_err(|e| anyhow!("uploading {}: {e:?}", spec.name))?;
+            weights.push(buf);
+        }
+        Ok(PjrtModel {
+            client,
+            manifest,
+            weights,
+            prefill_exes: HashMap::new(),
+            decode_exe: None,
+        })
+    }
+
+    pub fn kv_dims(&self) -> KvDims {
+        self.manifest.kv_dims()
+    }
+
+    fn compile(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))
+    }
+
+    fn prefill_exe(&mut self, bucket: (usize, usize)) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.prefill_exes.contains_key(&bucket) {
+            let path = self
+                .manifest
+                .prefill_file(bucket.0, bucket.1)
+                .ok_or_else(|| anyhow!("no artifact for bucket {bucket:?}"))?;
+            let exe = self.compile(&path)?;
+            self.prefill_exes.insert(bucket, exe);
+        }
+        Ok(&self.prefill_exes[&bucket])
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(|e| anyhow!("H2D f32 {dims:?}: {e:?}"))
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(data, dims, None)
+            .map_err(|e| anyhow!("H2D i32 {dims:?}: {e:?}"))
+    }
+
+    /// Run one prefill: `past_k/past_v` are `[L, Hkv, P_bucket, D]`
+    /// (zero-padded beyond `past_len`), `tokens` is padded to the
+    /// bucket's N. Returns last-valid-token logits + the new KV.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill(
+        &mut self,
+        bucket: (usize, usize),
+        past_k: &[f32],
+        past_v: &[f32],
+        tokens: &[i32],
+        past_len: usize,
+        new_len: usize,
+    ) -> Result<PrefillOut> {
+        let dims = self.kv_dims();
+        let (p, n) = bucket;
+        anyhow::ensure!(tokens.len() == n, "tokens not padded to bucket");
+        anyhow::ensure!(past_k.len() == dims.elems(p), "past_k shape");
+        anyhow::ensure!(past_len <= p && new_len >= 1 && new_len <= n, "lengths");
+
+        // compile first (needs &mut self), then build the arg list
+        self.prefill_exe(bucket)?;
+        let kv_shape = [dims.n_layers, dims.n_kv_heads, p, dims.head_dim];
+        let args: Vec<xla::PjRtBuffer> = vec![
+            self.buf_f32(past_k, &kv_shape)?,
+            self.buf_f32(past_v, &kv_shape)?,
+            self.buf_i32(tokens, &[n])?,
+            self.buf_i32(&[past_len as i32], &[])?,
+            self.buf_i32(&[new_len as i32], &[])?,
+        ];
+        // ABI: [*weights, past_k, past_v, tokens, past_len, new_len]
+        let all: Vec<&xla::PjRtBuffer> =
+            self.weights.iter().chain(args.iter()).collect();
+        let exe = &self.prefill_exes[&bucket];
+        let result = exe
+            .execute_b(&all)
+            .map_err(|e| anyhow!("prefill execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("D2H: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 3, "expected 3 outputs, got {}", parts.len());
+        let logits = parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let new_k = parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let new_v = parts[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        anyhow::ensure!(logits.len() == self.manifest.vocab, "logits shape");
+        anyhow::ensure!(new_k.len() == dims.elems(n), "new_k shape");
+        Ok(PrefillOut {
+            logits,
+            new_k,
+            new_v,
+            bucket,
+        })
+    }
+
+    /// One decode step against padded caches `[L, Hkv, S_max, D]`.
+    pub fn decode(
+        &mut self,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        token: i32,
+        cur_len: usize,
+    ) -> Result<DecodeOut> {
+        let dims = self.kv_dims();
+        let (s_max, path) = self
+            .manifest
+            .decode_file()
+            .ok_or_else(|| anyhow!("no decode artifact"))?;
+        anyhow::ensure!(k_cache.len() == dims.elems(s_max), "k_cache shape");
+        anyhow::ensure!(cur_len < s_max, "cache full");
+        if self.decode_exe.is_none() {
+            let exe = self.compile(&path)?;
+            self.decode_exe = Some((s_max, exe));
+        }
+        let kv_shape = [dims.n_layers, dims.n_kv_heads, s_max, dims.head_dim];
+        let args: Vec<xla::PjRtBuffer> = vec![
+            self.buf_f32(k_cache, &kv_shape)?,
+            self.buf_f32(v_cache, &kv_shape)?,
+            self.buf_i32(&[token], &[])?,
+            self.buf_i32(&[cur_len as i32], &[])?,
+        ];
+        let all: Vec<&xla::PjRtBuffer> =
+            self.weights.iter().chain(args.iter()).collect();
+        let exe = &self.decode_exe.as_ref().unwrap().1;
+        let result = exe
+            .execute_b(&all)
+            .map_err(|e| anyhow!("decode execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("D2H: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        anyhow::ensure!(parts.len() == 3, "expected 3 outputs");
+        Ok(DecodeOut {
+            logits: parts[0].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            k_cache: parts[1].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+            v_cache: parts[2].to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?,
+        })
+    }
+
+    /// Number of compiled executables (diagnostics).
+    pub fn compiled_buckets(&self) -> usize {
+        self.prefill_exes.len() + usize::from(self.decode_exe.is_some())
+    }
+}

@@ -1,0 +1,195 @@
+//! KV-cache byte marshaling between the model's `[L, Hkv, T, D]` f32
+//! row-major arrays (what the HLO returns) and per-chunk blobs (what
+//! the cache tiers store).
+//!
+//! Chunk blob layout: `K[L, Hkv, chunk, D]` followed by `V[L, Hkv,
+//! chunk, D]`, f32 little-endian — self-contained, so a chunk can be
+//! spilled to disk and reassembled into any later prefill's `past_k /
+//! past_v` buckets without touching its neighbours.
+
+/// Geometry of one KV array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KvDims {
+    pub n_layers: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl KvDims {
+    /// f32 elements for `tokens` tokens of K (or V) alone.
+    pub fn elems(&self, tokens: usize) -> usize {
+        self.n_layers * self.n_kv_heads * tokens * self.head_dim
+    }
+
+    /// Blob bytes for one chunk (K + V).
+    pub fn chunk_bytes(&self, chunk_tokens: usize) -> usize {
+        2 * self.elems(chunk_tokens) * 4
+    }
+}
+
+/// Slice tokens `[t0, t0+count)` out of a `[L, Hkv, T, D]` array.
+///
+/// Row-major strides: layer stride = Hkv·T·D, head stride = T·D, token
+/// stride = D.
+pub fn slice_tokens(src: &[f32], dims: KvDims, total_tokens: usize,
+                    t0: usize, count: usize) -> Vec<f32> {
+    assert!(t0 + count <= total_tokens, "slice out of range");
+    assert_eq!(src.len(), dims.elems(total_tokens), "src shape mismatch");
+    let d = dims.head_dim;
+    let mut out = Vec::with_capacity(dims.elems(count));
+    for l in 0..dims.n_layers {
+        for h in 0..dims.n_kv_heads {
+            let base = (l * dims.n_kv_heads + h) * total_tokens * d;
+            out.extend_from_slice(&src[base + t0 * d..base + (t0 + count) * d]);
+        }
+    }
+    out
+}
+
+/// Write tokens `[t0, t0+count)` of `dst` (a `[L, Hkv, T, D]` array)
+/// from a compact `[L, Hkv, count, D]` slice.
+pub fn scatter_tokens(dst: &mut [f32], dims: KvDims, total_tokens: usize,
+                      t0: usize, slice: &[f32]) {
+    let count = slice.len() / (dims.n_layers * dims.n_kv_heads * dims.head_dim);
+    assert_eq!(slice.len(), dims.elems(count), "slice shape mismatch");
+    assert!(t0 + count <= total_tokens, "scatter out of range");
+    let d = dims.head_dim;
+    let mut src_off = 0;
+    for l in 0..dims.n_layers {
+        for h in 0..dims.n_kv_heads {
+            let base = (l * dims.n_kv_heads + h) * total_tokens * d;
+            dst[base + t0 * d..base + (t0 + count) * d]
+                .copy_from_slice(&slice[src_off..src_off + count * d]);
+            src_off += count * d;
+        }
+    }
+}
+
+/// Pack one chunk's K and V slices into a self-contained blob.
+pub fn pack_chunk(k: &[f32], v: &[f32]) -> Vec<u8> {
+    assert_eq!(k.len(), v.len());
+    let mut out = Vec::with_capacity((k.len() + v.len()) * 4);
+    for x in k.iter().chain(v.iter()) {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Split a blob back into (K, V) f32 slices.
+pub fn unpack_chunk(blob: &[u8]) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(blob.len() % 8, 0, "blob must hold equal K and V halves");
+    let half = blob.len() / 2;
+    let parse = |bytes: &[u8]| -> Vec<f32> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    };
+    (parse(&blob[..half]), parse(&blob[half..]))
+}
+
+/// Extract per-chunk blobs from a prefill's `(new_k, new_v)` output.
+/// Only whole chunks are produced; the tail is never cached.
+pub fn chunks_from_new_kv(new_k: &[f32], new_v: &[f32], dims: KvDims,
+                          bucket_tokens: usize, valid_tokens: usize,
+                          chunk_tokens: usize) -> Vec<Vec<u8>> {
+    let n_chunks = valid_tokens / chunk_tokens;
+    (0..n_chunks)
+        .map(|c| {
+            let k = slice_tokens(new_k, dims, bucket_tokens, c * chunk_tokens, chunk_tokens);
+            let v = slice_tokens(new_v, dims, bucket_tokens, c * chunk_tokens, chunk_tokens);
+            pack_chunk(&k, &v)
+        })
+        .collect()
+}
+
+/// Assemble `past_k` / `past_v` bucket arrays (`[L, Hkv, P, D]`, zero
+/// padded) from chunk blobs.
+pub fn assemble_past(blobs: &[Vec<u8>], dims: KvDims, bucket_tokens: usize,
+                     chunk_tokens: usize) -> (Vec<f32>, Vec<f32>) {
+    assert!(blobs.len() * chunk_tokens <= bucket_tokens, "past overflows bucket");
+    let mut k = vec![0.0f32; dims.elems(bucket_tokens)];
+    let mut v = vec![0.0f32; dims.elems(bucket_tokens)];
+    for (c, blob) in blobs.iter().enumerate() {
+        let (bk, bv) = unpack_chunk(blob);
+        scatter_tokens(&mut k, dims, bucket_tokens, c * chunk_tokens, &bk);
+        scatter_tokens(&mut v, dims, bucket_tokens, c * chunk_tokens, &bv);
+    }
+    (k, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const DIMS: KvDims = KvDims {
+        n_layers: 2,
+        n_kv_heads: 3,
+        head_dim: 4,
+    };
+
+    fn random_kv(tokens: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..DIMS.elems(tokens)).map(|_| rng.f32()).collect()
+    }
+
+    #[test]
+    fn slice_then_scatter_round_trips() {
+        let src = random_kv(10, 1);
+        let slice = slice_tokens(&src, DIMS, 10, 3, 4);
+        assert_eq!(slice.len(), DIMS.elems(4));
+        let mut dst = vec![0.0f32; DIMS.elems(10)];
+        scatter_tokens(&mut dst, DIMS, 10, 3, &slice);
+        let back = slice_tokens(&dst, DIMS, 10, 3, 4);
+        assert_eq!(slice, back);
+    }
+
+    #[test]
+    fn pack_unpack_round_trips() {
+        let k = random_kv(4, 2);
+        let v = random_kv(4, 3);
+        let blob = pack_chunk(&k, &v);
+        assert_eq!(blob.len(), DIMS.chunk_bytes(4));
+        let (k2, v2) = unpack_chunk(&blob);
+        assert_eq!(k, k2);
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn full_chunking_round_trip() {
+        // new KV of 10 tokens in a 12-token bucket, chunk=4: chunks
+        // cover tokens 0..8; reassembling into a past bucket of 8
+        // reproduces the original values.
+        let bucket = 12;
+        let valid = 10;
+        let chunk = 4;
+        let new_k = random_kv(bucket, 4);
+        let new_v = random_kv(bucket, 5);
+        let blobs = chunks_from_new_kv(&new_k, &new_v, DIMS, bucket, valid, chunk);
+        assert_eq!(blobs.len(), 2);
+        let (past_k, past_v) = assemble_past(&blobs, DIMS, 8, chunk);
+        assert_eq!(slice_tokens(&past_k, DIMS, 8, 0, 8),
+                   slice_tokens(&new_k, DIMS, bucket, 0, 8));
+        assert_eq!(slice_tokens(&past_v, DIMS, 8, 0, 8),
+                   slice_tokens(&new_v, DIMS, bucket, 0, 8));
+    }
+
+    #[test]
+    fn assemble_pads_with_zeros() {
+        let new_k = random_kv(4, 6);
+        let new_v = random_kv(4, 7);
+        let blobs = chunks_from_new_kv(&new_k, &new_v, DIMS, 4, 4, 4);
+        let (past_k, _) = assemble_past(&blobs, DIMS, 8, 4);
+        // tokens 4..8 are padding
+        let pad = slice_tokens(&past_k, DIMS, 8, 4, 4);
+        assert!(pad.iter().all(|x| *x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "past overflows bucket")]
+    fn overflow_caught() {
+        let blobs = vec![vec![0u8; DIMS.chunk_bytes(4)]; 3];
+        assemble_past(&blobs, DIMS, 8, 4);
+    }
+}

@@ -1,0 +1,262 @@
+//! AOT artifact manifest: the contract `python/compile/aot.py` writes
+//! and the PJRT runtime consumes (model geometry, parameter table,
+//! shape-bucket table, weight blob).
+
+use crate::runtime::kv::KvDims;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One exported HLO artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Artifact {
+    Prefill { past: usize, new: usize, file: String },
+    Decode { max_len: usize, file: String },
+}
+
+/// One parameter's name + shape (ABI order).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub chunk_tokens: usize,
+    pub params: Vec<ParamSpec>,
+    pub weights_file: String,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let model = j.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let get = |obj: &Json, k: &str| -> Result<usize> {
+            obj.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing model.{k}"))
+        };
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing params"))?
+            .iter()
+            .map(|p| -> Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("param name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("param shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing artifacts"))?
+            .iter()
+            .map(|a| -> Result<Artifact> {
+                let file = a
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact file"))?
+                    .to_string();
+                match a.get("kind").and_then(Json::as_str) {
+                    Some("prefill") => Ok(Artifact::Prefill {
+                        past: a.get("past").and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow!("past"))?,
+                        new: a.get("new").and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow!("new"))?,
+                        file,
+                    }),
+                    Some("decode") => Ok(Artifact::Decode {
+                        max_len: a.get("max_len").and_then(Json::as_usize)
+                            .ok_or_else(|| anyhow!("max_len"))?,
+                        file,
+                    }),
+                    _ => bail!("unknown artifact kind"),
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            vocab: get(model, "vocab")?,
+            d_model: get(model, "d_model")?,
+            n_layers: get(model, "n_layers")?,
+            n_heads: get(model, "n_heads")?,
+            n_kv_heads: get(model, "n_kv_heads")?,
+            head_dim: get(model, "head_dim")?,
+            chunk_tokens: j
+                .get("chunk_tokens")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("missing chunk_tokens"))?,
+            weights_file: j
+                .get("weights_file")
+                .and_then(Json::as_str)
+                .unwrap_or("weights.bin")
+                .to_string(),
+            params,
+            artifacts,
+            dir,
+        })
+    }
+
+    pub fn kv_dims(&self) -> KvDims {
+        KvDims {
+            n_layers: self.n_layers,
+            n_kv_heads: self.n_kv_heads,
+            head_dim: self.head_dim,
+        }
+    }
+
+    /// Smallest prefill bucket with `past >= past_tokens` and
+    /// `new >= new_tokens`.
+    pub fn pick_prefill_bucket(&self, past_tokens: usize, new_tokens: usize)
+        -> Option<(usize, usize)> {
+        self.artifacts
+            .iter()
+            .filter_map(|a| match a {
+                Artifact::Prefill { past, new, .. }
+                    if *past >= past_tokens && *new >= new_tokens =>
+                {
+                    Some((*past, *new))
+                }
+                _ => None,
+            })
+            .min_by_key(|(p, n)| (*p + *n, *p))
+    }
+
+    /// Largest available (past, new) bucket — the capacity limit of the
+    /// real serving path.
+    pub fn max_bucket(&self) -> (usize, usize) {
+        self.artifacts
+            .iter()
+            .filter_map(|a| match a {
+                Artifact::Prefill { past, new, .. } => Some((*past, *new)),
+                _ => None,
+            })
+            .fold((0, 0), |(mp, mn), (p, n)| (mp.max(p), mn.max(n)))
+    }
+
+    pub fn prefill_file(&self, past: usize, new: usize) -> Option<PathBuf> {
+        self.artifacts.iter().find_map(|a| match a {
+            Artifact::Prefill { past: p, new: n, file }
+                if *p == past && *n == new => Some(self.dir.join(file)),
+            _ => None,
+        })
+    }
+
+    pub fn decode_file(&self) -> Option<(usize, PathBuf)> {
+        self.artifacts.iter().find_map(|a| match a {
+            Artifact::Decode { max_len, file } => Some((*max_len, self.dir.join(file))),
+            _ => None,
+        })
+    }
+
+    /// Load `weights.bin` into per-parameter f32 vectors (ABI order).
+    pub fn load_weights(&self) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join(&self.weights_file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let total: usize = self.params.iter().map(ParamSpec::elems).sum();
+        if bytes.len() != total * 4 {
+            bail!("weights.bin is {} bytes, expected {}", bytes.len(), total * 4);
+        }
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0;
+        for p in &self.params {
+            let n = p.elems();
+            let v: Vec<f32> = bytes[off..off + n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            out.push(v);
+            off += n * 4;
+        }
+        Ok(out)
+    }
+}
+
+/// Default artifacts directory: `$PCR_ARTIFACTS` or `<crate>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("PCR_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Option<Manifest> {
+        Manifest::load(default_artifacts_dir()).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let Some(m) = manifest() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        assert_eq!(m.n_layers, 4);
+        assert_eq!(m.n_kv_heads, 4);
+        assert_eq!(m.chunk_tokens, 128);
+        assert_eq!(m.params.len(), 4 * 9 + 3);
+        assert_eq!(m.params[0].name, "embed");
+        assert!(m.decode_file().is_some());
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let Some(m) = manifest() else { return };
+        // exact fit
+        assert_eq!(m.pick_prefill_bucket(128, 128), Some((128, 128)));
+        // rounding up
+        assert_eq!(m.pick_prefill_bucket(130, 100), Some((256, 128)));
+        assert_eq!(m.pick_prefill_bucket(0, 1), Some((128, 128)));
+        // too big
+        assert_eq!(m.pick_prefill_bucket(4096, 128), None);
+        assert_eq!(m.max_bucket(), (512, 512));
+    }
+
+    #[test]
+    fn weights_match_param_table() {
+        let Some(m) = manifest() else { return };
+        let w = m.load_weights().unwrap();
+        assert_eq!(w.len(), m.params.len());
+        for (p, v) in m.params.iter().zip(&w) {
+            assert_eq!(p.elems(), v.len());
+        }
+        // embed is vocab x d_model
+        assert_eq!(m.params[0].shape, vec![m.vocab, m.d_model]);
+    }
+}

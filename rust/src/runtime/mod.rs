@@ -1,0 +1,9 @@
+//! PJRT runtime: AOT artifact loading, KV byte marshaling, and the
+//! real-model executor. HLO *text* is the interchange format (jax ≥0.5
+//! emits 64-bit-id protos that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids — see DESIGN.md).
+
+pub mod client;
+pub mod executor;
+pub mod kv;
+pub mod manifest;

@@ -1,0 +1,135 @@
+//! Serving metrics: TTFT / E2EL / ITL / queueing collectors and the
+//! per-run report every bench prints (the paper's Figs 14–16 rows).
+
+use crate::serve::request::Request;
+use crate::util::stats::{Samples, Summary};
+
+/// All samples collected over one serving run.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsCollector {
+    pub ttft: Samples,
+    pub e2el: Samples,
+    pub itl: Samples,
+    pub queue_time: Samples,
+    pub compute_time: Samples,
+    pub retrieval_time: Samples,
+    /// Per-request reuse ratio (reused / total tokens).
+    pub reuse_ratio: Samples,
+    pub finished: usize,
+}
+
+impl MetricsCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ingest a finished request.
+    pub fn record(&mut self, r: &Request) {
+        debug_assert!(r.finished_at.is_some());
+        if let Some(x) = r.ttft() {
+            self.ttft.push(x);
+        }
+        if let Some(x) = r.e2el() {
+            self.e2el.push(x);
+        }
+        if let Some(x) = r.queue_time() {
+            self.queue_time.push(x);
+        }
+        if let Some(x) = r.compute_time() {
+            self.compute_time.push(x);
+        }
+        for &gap in &r.itl {
+            self.itl.push(gap);
+        }
+        let total = r.total_tokens().max(1);
+        self.reuse_ratio
+            .push(r.reused_tokens as f64 / total as f64);
+        self.finished += 1;
+    }
+
+    pub fn report(&mut self) -> Report {
+        Report {
+            finished: self.finished,
+            ttft: self.ttft.summary(),
+            e2el: self.e2el.summary(),
+            itl: self.itl.summary(),
+            queue_time: self.queue_time.summary(),
+            compute_time: self.compute_time.summary(),
+            mean_reuse_ratio: self.reuse_ratio.mean(),
+        }
+    }
+}
+
+/// Summary report of one run.
+#[derive(Clone, Copy, Debug)]
+pub struct Report {
+    pub finished: usize,
+    pub ttft: Summary,
+    pub e2el: Summary,
+    pub itl: Summary,
+    pub queue_time: Summary,
+    pub compute_time: Summary,
+    pub mean_reuse_ratio: f64,
+}
+
+impl Report {
+    /// Multi-line human-readable block (seconds).
+    pub fn pretty(&self) -> String {
+        format!(
+            "finished={} reuse={:.1}%\n  TTFT  {}\n  E2EL  {}\n  ITL   {}\n  queue {}\n  comp  {}",
+            self.finished,
+            self.mean_reuse_ratio * 100.0,
+            self.ttft.row(1.0),
+            self.e2el.row(1.0),
+            self.itl.row(1.0),
+            self.queue_time.row(1.0),
+            self.compute_time.row(1.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::chunk::ChunkedSeq;
+    use std::sync::Arc;
+
+    fn finished_request(arrival: f64, ttft: f64, e2e: f64) -> Request {
+        let tokens: Vec<u32> = (0..512).collect();
+        let chain = ChunkedSeq::new(&tokens, 256);
+        let mut r = Request::new(0, 0, Arc::new(tokens), Arc::new(chain), 4,
+                                 arrival, arrival + 0.01);
+        r.started_at = Some(arrival + 0.5);
+        r.first_token_at = Some(arrival + ttft);
+        r.finished_at = Some(arrival + e2e);
+        r.itl = vec![0.02, 0.03, 0.025];
+        r.reused_tokens = 256;
+        r.computed_tokens = 256;
+        r
+    }
+
+    #[test]
+    fn collects_and_summarizes() {
+        let mut m = MetricsCollector::new();
+        for i in 0..10 {
+            m.record(&finished_request(i as f64, 1.0 + i as f64 * 0.1, 2.0));
+        }
+        let rep = m.report();
+        assert_eq!(rep.finished, 10);
+        assert!((rep.ttft.mean - 1.45).abs() < 1e-9);
+        assert_eq!(rep.itl.n, 30);
+        assert!((rep.mean_reuse_ratio - 0.5).abs() < 1e-9);
+        assert!(rep.pretty().contains("TTFT"));
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = MetricsCollector::new();
+        for i in 0..100 {
+            m.record(&finished_request(i as f64, 0.5 + (i % 17) as f64 * 0.2, 3.0));
+        }
+        let rep = m.report();
+        assert!(rep.ttft.p50 <= rep.ttft.p95);
+        assert!(rep.ttft.p95 <= rep.ttft.p99);
+    }
+}

@@ -1,0 +1,15 @@
+//! The serving coordinator (L3): waiting queue, Algorithm-1 scheduler,
+//! queue-based prefetcher, virtual-time engine over all the paper's
+//! system variants, metrics, and the real-path HTTP server.
+
+pub mod batcher;
+pub mod engine;
+pub mod executor;
+pub mod metrics;
+pub mod prefetcher;
+pub mod queue;
+pub mod request;
+pub mod scheduler;
+pub mod system;
+pub mod workload;
+pub mod server;

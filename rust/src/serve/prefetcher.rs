@@ -1,0 +1,201 @@
+//! Queue-based SSD→DRAM prefetcher (paper §4.4, Fig 12).
+//!
+//! Watches the waiting queue's look-ahead window, finds chunks that are
+//! on SSD but not in DRAM, and submits asynchronous loads on the SSD
+//! read channel. Demand loads for the request being scheduled share the
+//! same FIFO channel, so prefetch backlog and demand traffic contend —
+//! exactly the trade-off the paper's bounded window manages.
+
+use crate::cache::engine::CacheEngine;
+use crate::cache::prefix_tree::NodeId;
+use crate::cache::tier::Tier;
+use crate::hw::transfer::Channel;
+use std::collections::BTreeMap;
+
+/// Virtual-time prefetcher state.
+#[derive(Debug, Default)]
+pub struct SimPrefetcher {
+    /// node -> absolute completion time of its in-flight SSD read.
+    inflight: BTreeMap<NodeId, f64>,
+    pub submitted: u64,
+    pub completed: u64,
+    /// Prefetched chunks that could not be promoted (DRAM full).
+    pub dropped: u64,
+}
+
+impl SimPrefetcher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Submit prefetch loads for every SSD-resident chunk of `chain`
+    /// (Algorithm 1's `SubmitSSDToCPULoad`), skipping chunks already in
+    /// flight. Returns the number of new submissions.
+    pub fn submit_chain(
+        &mut self,
+        cache: &CacheEngine,
+        ssd_read: &mut Channel,
+        now: f64,
+        chain: &[crate::cache::chunk::ChunkKey],
+    ) -> usize {
+        let mut n = 0;
+        for id in cache.prefetch_targets(chain) {
+            if self.inflight.contains_key(&id) {
+                continue;
+            }
+            let bytes = cache.tree.node(id).bytes;
+            let (_, finish) = ssd_read.enqueue(now, bytes);
+            self.inflight.insert(id, finish);
+            self.submitted += 1;
+            n += 1;
+        }
+        n
+    }
+
+    /// If `id` is being prefetched, when will it land in DRAM?
+    pub fn ready_at(&self, id: NodeId) -> Option<f64> {
+        self.inflight.get(&id).copied()
+    }
+
+    /// Promote every load that has completed by `now` into DRAM
+    /// (Algorithm 1's `DrainCompletedSSDLoads`). Chunks that no longer
+    /// fit (DRAM pressure) stay on SSD and count as `dropped`.
+    pub fn drain(&mut self, cache: &mut CacheEngine, now: f64) {
+        let done: Vec<NodeId> = self
+            .inflight
+            .iter()
+            .filter(|(_, t)| **t <= now)
+            .map(|(id, _)| *id)
+            .collect();
+        for id in done {
+            self.inflight.remove(&id);
+            self.completed += 1;
+            // The chunk may have been evicted from SSD meanwhile; only
+            // promote if it is still resident somewhere.
+            if cache.tree.node(id).tiers.contains(Tier::Ssd)
+                && !cache.tree.node(id).tiers.contains(Tier::Dram)
+            {
+                if !cache.promote(id, Tier::Dram) {
+                    self.dropped += 1;
+                }
+            }
+        }
+    }
+
+    pub fn inflight_count(&self) -> usize {
+        self.inflight.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::chunk::{chain_hash, ChunkKey};
+    use crate::cache::engine::{CacheConfig, CacheEngine};
+    use crate::cache::policy::PolicyKind;
+
+    const CB: u64 = 1_000_000; // 1 MB chunks
+
+    fn setup() -> (CacheEngine, Channel) {
+        let cache = CacheEngine::new(CacheConfig {
+            chunk_tokens: 256,
+            gpu_capacity: 100 * CB,
+            dram_capacity: 3 * CB,
+            ssd_capacity: 100 * CB,
+            policy: PolicyKind::LookaheadLru,
+        });
+        (cache, Channel::new("ssd-read", 0.001, 0.0)) // 1 MB/s => 1s per chunk
+    }
+
+    fn chain(cache: &mut CacheEngine, tag: u32, n: usize) -> Vec<ChunkKey> {
+        let mut keys = Vec::new();
+        let mut parent_key = ChunkKey::ROOT;
+        let mut parent = None;
+        for i in 0..n {
+            let k = chain_hash(parent_key, &[tag, i as u32]);
+            parent = cache.insert(parent, k, CB, Tier::Ssd);
+            keys.push(k);
+            parent_key = k;
+        }
+        keys
+    }
+
+    #[test]
+    fn submits_and_drains_in_order() {
+        let (mut cache, mut ch) = setup();
+        let keys = chain(&mut cache, 1, 2);
+        let mut pf = SimPrefetcher::new();
+        let n = pf.submit_chain(&cache, &mut ch, 0.0, &keys);
+        assert_eq!(n, 2);
+        assert_eq!(pf.inflight_count(), 2);
+        // nothing ready at t=0.5
+        pf.drain(&mut cache, 0.5);
+        assert_eq!(pf.completed, 0);
+        // first chunk lands at 1.0, second at 2.0 (FIFO channel)
+        pf.drain(&mut cache, 1.0);
+        assert_eq!(pf.completed, 1);
+        let id0 = cache.tree.get(keys[0]).unwrap();
+        assert!(cache.tree.node(id0).tiers.contains(Tier::Dram));
+        pf.drain(&mut cache, 2.0);
+        assert_eq!(pf.completed, 2);
+        cache.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn no_duplicate_submission() {
+        let (mut cache, mut ch) = setup();
+        let keys = chain(&mut cache, 2, 2);
+        let mut pf = SimPrefetcher::new();
+        assert_eq!(pf.submit_chain(&cache, &mut ch, 0.0, &keys), 2);
+        assert_eq!(pf.submit_chain(&cache, &mut ch, 0.1, &keys), 0);
+        assert_eq!(pf.submitted, 2);
+    }
+
+    #[test]
+    fn ready_at_reports_channel_finish() {
+        let (mut cache, mut ch) = setup();
+        let keys = chain(&mut cache, 3, 1);
+        let mut pf = SimPrefetcher::new();
+        pf.submit_chain(&cache, &mut ch, 0.0, &keys);
+        let id = cache.tree.get(keys[0]).unwrap();
+        assert!((pf.ready_at(id).unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dram_pressure_counts_drops() {
+        let (mut cache, mut ch) = setup();
+        // DRAM fits 3 chunks; chain of 5 on SSD
+        let keys = chain(&mut cache, 4, 5);
+        let mut pf = SimPrefetcher::new();
+        pf.submit_chain(&cache, &mut ch, 0.0, &keys);
+        pf.drain(&mut cache, 100.0);
+        assert_eq!(pf.completed, 5);
+        // DRAM holds at most 3 chunks; later promotions may evict
+        // earlier ones (legal — they keep their SSD copies), so the
+        // binding constraints are capacity and accounting, not which
+        // exact chunks survived.
+        let in_dram = keys
+            .iter()
+            .filter(|k| {
+                cache
+                    .tree
+                    .get(**k)
+                    .map(|id| cache.tree.node(id).tiers.contains(Tier::Dram))
+                    .unwrap_or(false)
+            })
+            .count();
+        assert!(in_dram <= 3, "in_dram={in_dram}");
+        assert!(in_dram >= 1);
+        cache.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn dram_resident_chunks_not_prefetched() {
+        let (mut cache, mut ch) = setup();
+        let keys = chain(&mut cache, 5, 2);
+        let id0 = cache.tree.get(keys[0]).unwrap();
+        cache.promote(id0, Tier::Dram);
+        let mut pf = SimPrefetcher::new();
+        assert_eq!(pf.submit_chain(&cache, &mut ch, 0.0, &keys), 1);
+    }
+}

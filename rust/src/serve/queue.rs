@@ -1,0 +1,93 @@
+//! The scheduler's waiting queue with the look-ahead window view that
+//! drives both look-ahead LRU protection and queue-based prefetching
+//! (paper §4.2/§4.4, Fig 12).
+
+use crate::serve::request::Request;
+use std::collections::VecDeque;
+
+/// FCFS waiting queue.
+#[derive(Debug, Default)]
+pub struct WaitingQueue {
+    items: VecDeque<Request>,
+}
+
+impl WaitingQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: Request) {
+        self.items.push_back(r);
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.items.pop_front()
+    }
+
+    pub fn front(&self) -> Option<&Request> {
+        self.items.front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The first `window` queued requests (the prefetcher's look-ahead
+    /// window). Algorithm 1 iterates this in *reverse* so that the
+    /// request served soonest submits its SSD loads last and therefore
+    /// ends up at the *head* of the FIFO SSD queue... no — reverse
+    /// iteration makes the soonest request's loads the *most recent*
+    /// `BumpPriority` (strongest LRU protection). Transfer ordering is
+    /// handled by the channel FIFO; see `engine`.
+    pub fn window(&self, window: usize) -> impl DoubleEndedIterator<Item = &Request> {
+        self.items.iter().take(window)
+    }
+
+    /// Iterate everything (metrics/debug).
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.items.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::chunk::ChunkedSeq;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> Request {
+        let tokens: Vec<u32> = (0..64).collect();
+        let chain = ChunkedSeq::new(&tokens, 32);
+        Request::new(id, id as u32, Arc::new(tokens), Arc::new(chain), 4, 0.0, 0.0)
+    }
+
+    #[test]
+    fn fcfs_order() {
+        let mut q = WaitingQueue::new();
+        for i in 0..5 {
+            q.push(req(i));
+        }
+        assert_eq!(q.len(), 5);
+        assert_eq!(q.front().unwrap().id, 0);
+        assert_eq!(q.pop().unwrap().id, 0);
+        assert_eq!(q.pop().unwrap().id, 1);
+    }
+
+    #[test]
+    fn window_is_prefix_and_reversible() {
+        let mut q = WaitingQueue::new();
+        for i in 0..10 {
+            q.push(req(i));
+        }
+        let ids: Vec<u64> = q.window(4).map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+        let rev: Vec<u64> = q.window(4).rev().map(|r| r.id).collect();
+        assert_eq!(rev, vec![3, 2, 1, 0]);
+        // window larger than queue is fine
+        assert_eq!(q.window(99).count(), 10);
+    }
+}

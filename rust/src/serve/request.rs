@@ -1,0 +1,146 @@
+//! Request lifecycle: one RAG query moving through retrieval, the
+//! waiting queue, prefill, and decode — with every timestamp the
+//! paper's metrics need (TTFT, E2EL, ITL, queueing vs computing).
+
+use crate::cache::chunk::ChunkedSeq;
+use std::sync::Arc;
+
+/// Where a request currently is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestState {
+    /// Retrieval done, waiting in the scheduler queue.
+    Waiting,
+    /// Prefill executed; decoding output tokens.
+    Decoding,
+    /// All output tokens produced.
+    Finished,
+}
+
+/// One in-flight request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Which distinct dataset input this request replays (workload
+    /// sampling repeats inputs — that is where prefix reuse comes from).
+    pub input_id: u32,
+    /// Full LLM input `[docs ‖ query]`, shared across repeats.
+    pub tokens: Arc<Vec<u32>>,
+    /// Chunked view with prefix-chain keys.
+    pub chain: Arc<ChunkedSeq>,
+    pub output_tokens: usize,
+
+    pub state: RequestState,
+    /// Seconds (virtual or wall) — absolute times.
+    pub arrival: f64,
+    /// When retrieval finished and the request entered the queue.
+    pub queued_at: f64,
+    /// When prefill started.
+    pub started_at: Option<f64>,
+    /// When the first output token was produced (prefill end).
+    pub first_token_at: Option<f64>,
+    pub finished_at: Option<f64>,
+    /// Inter-token latency samples (decode gaps).
+    pub itl: Vec<f64>,
+    /// Decode progress.
+    pub generated: usize,
+
+    // --- reuse accounting (filled at prefill) ---
+    pub reused_tokens: usize,
+    pub computed_tokens: usize,
+    pub reused_from_gpu: usize,
+    pub reused_from_dram: usize,
+    pub reused_from_ssd: usize,
+}
+
+impl Request {
+    pub fn new(
+        id: u64,
+        input_id: u32,
+        tokens: Arc<Vec<u32>>,
+        chain: Arc<ChunkedSeq>,
+        output_tokens: usize,
+        arrival: f64,
+        queued_at: f64,
+    ) -> Request {
+        Request {
+            id,
+            input_id,
+            tokens,
+            chain,
+            output_tokens,
+            state: RequestState::Waiting,
+            arrival,
+            queued_at,
+            started_at: None,
+            first_token_at: None,
+            finished_at: None,
+            itl: Vec::new(),
+            generated: 0,
+            reused_tokens: 0,
+            computed_tokens: 0,
+            reused_from_gpu: 0,
+            reused_from_dram: 0,
+            reused_from_ssd: 0,
+        }
+    }
+
+    /// Time To First Token (the paper's headline metric).
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.arrival)
+    }
+
+    /// End-to-end latency.
+    pub fn e2el(&self) -> Option<f64> {
+        self.finished_at.map(|t| t - self.arrival)
+    }
+
+    /// Queueing time (Fig 11's contrast with computing time).
+    pub fn queue_time(&self) -> Option<f64> {
+        self.started_at.map(|t| t - self.queued_at)
+    }
+
+    /// Prefill wall time.
+    pub fn compute_time(&self) -> Option<f64> {
+        match (self.started_at, self.first_token_at) {
+            (Some(s), Some(f)) => Some(f - s),
+            _ => None,
+        }
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::chunk::ChunkedSeq;
+
+    fn req() -> Request {
+        let tokens: Vec<u32> = (0..1000).collect();
+        let chain = ChunkedSeq::new(&tokens, 256);
+        Request::new(1, 0, Arc::new(tokens), Arc::new(chain), 16, 10.0, 10.2)
+    }
+
+    #[test]
+    fn metric_derivations() {
+        let mut r = req();
+        assert_eq!(r.ttft(), None);
+        r.started_at = Some(11.0);
+        r.first_token_at = Some(12.5);
+        r.finished_at = Some(13.0);
+        assert!((r.ttft().unwrap() - 2.5).abs() < 1e-12);
+        assert!((r.e2el().unwrap() - 3.0).abs() < 1e-12);
+        assert!((r.queue_time().unwrap() - 0.8).abs() < 1e-12);
+        assert!((r.compute_time().unwrap() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chain_matches_tokens() {
+        let r = req();
+        assert_eq!(r.chain.n_chunks(), 3); // 1000 / 256
+        assert_eq!(r.chain.tail_tokens, 1000 - 768);
+        assert_eq!(r.total_tokens(), 1000);
+    }
+}

@@ -1,0 +1,177 @@
+//! Algorithm 1 (`PCR_step`) pieces: look-ahead updates from the waiting
+//! queue and the per-request data-movement plan (which chunks come from
+//! GPU / DRAM / SSD, which must be computed).
+
+use crate::cache::chunk::ChunkedSeq;
+use crate::cache::engine::CacheEngine;
+use crate::cache::prefix_tree::NodeId;
+use crate::cache::tier::Tier;
+
+/// The movement plan for one scheduled request (Algorithm 1's
+/// `cpu_to_gpu` / `ssd_to_gpu` / `gpu_to_cpu` sets plus token math).
+#[derive(Clone, Debug, Default)]
+pub struct MovementPlan {
+    /// Matched prefix nodes in chain order.
+    pub matched: Vec<NodeId>,
+    /// Chunks already resident on GPU (no transfer needed).
+    pub from_gpu: usize,
+    /// Chunks to upload from DRAM (`cpu_to_gpu`).
+    pub from_dram: usize,
+    /// Chunks that must first be read from SSD (`ssd_to_gpu`).
+    pub from_ssd: usize,
+    /// SSD-resident matched nodes (the demand-load set).
+    pub ssd_nodes: Vec<NodeId>,
+    /// Tokens covered by the matched prefix.
+    pub reused_tokens: usize,
+    /// Tokens that must be computed (`AdjustTokens`).
+    pub computed_tokens: usize,
+    /// Full chunks among the computed tokens (these get cached; the
+    /// tail is not chunk-aligned and is never cached).
+    pub computed_chunks: usize,
+}
+
+impl MovementPlan {
+    pub fn matched_chunks(&self) -> usize {
+        self.matched.len()
+    }
+}
+
+/// Match `chain` against the cache and derive the movement plan.
+/// Matched nodes are *pinned* — callers must `unpin_plan` after the
+/// step so in-use chunks cannot be evicted mid-flight.
+pub fn plan_movement(cache: &mut CacheEngine, chain: &ChunkedSeq) -> MovementPlan {
+    let lookup = cache.lookup(&chain.keys);
+    let mut plan = MovementPlan::default();
+    for (id, tier) in lookup.nodes.iter().zip(&lookup.tiers) {
+        match tier {
+            Tier::Gpu => plan.from_gpu += 1,
+            Tier::Dram => plan.from_dram += 1,
+            Tier::Ssd => {
+                plan.from_ssd += 1;
+                plan.ssd_nodes.push(*id);
+            }
+        }
+        cache.tree.pin(*id);
+        plan.matched.push(*id);
+    }
+    plan.reused_tokens = chain.tokens_in(plan.matched.len());
+    plan.computed_tokens = chain.total_tokens - plan.reused_tokens;
+    plan.computed_chunks = chain.n_chunks() - plan.matched.len();
+    plan
+}
+
+/// Release the pins taken by [`plan_movement`].
+pub fn unpin_plan(cache: &mut CacheEngine, plan: &MovementPlan) {
+    for id in &plan.matched {
+        cache.tree.unpin(*id);
+    }
+}
+
+/// Look-ahead update (Algorithm 1's prefetch-hint loop, reverse order):
+/// protect every queued request's matched chunks from eviction for
+/// `horizon` clock ticks. Returns the number of protected chunks.
+pub fn apply_lookahead<'a>(
+    cache: &mut CacheEngine,
+    window_chains: impl Iterator<Item = &'a ChunkedSeq>,
+    horizon: u64,
+) -> usize {
+    let mut protected = 0;
+    for chain in window_chains {
+        protected += cache.boost_chain(&chain.keys, horizon);
+    }
+    protected
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::engine::CacheConfig;
+    use crate::cache::policy::PolicyKind;
+
+    const CB: u64 = 1000; // bytes per chunk in these tests
+
+    fn engine() -> CacheEngine {
+        CacheEngine::new(CacheConfig {
+            chunk_tokens: 4,
+            gpu_capacity: 100 * CB,
+            dram_capacity: 100 * CB,
+            ssd_capacity: 100 * CB,
+            policy: PolicyKind::LookaheadLru,
+        })
+    }
+
+    fn chain(tag: u32, chunks: usize, tail: usize) -> ChunkedSeq {
+        let tokens: Vec<u32> = (0..(chunks * 4 + tail) as u32)
+            .map(|i| i.wrapping_mul(31).wrapping_add(tag * 1_000_003))
+            .collect();
+        ChunkedSeq::new(&tokens, 4)
+    }
+
+    fn insert(cache: &mut CacheEngine, c: &ChunkedSeq, n: usize, tier: Tier) {
+        let mut parent = None;
+        for key in c.keys.iter().take(n) {
+            parent = cache.insert(parent, *key, CB, tier);
+            assert!(parent.is_some());
+        }
+    }
+
+    #[test]
+    fn plan_counts_by_tier() {
+        let mut cache = engine();
+        let c = chain(1, 5, 2);
+        // chunks 0,1 in GPU; 2 in DRAM; 3 on SSD; 4 missing
+        insert(&mut cache, &c, 4, Tier::Ssd);
+        let ids: Vec<NodeId> = c.keys.iter().take(4)
+            .map(|k| cache.tree.get(*k).unwrap()).collect();
+        cache.promote(ids[0], Tier::Gpu);
+        cache.promote(ids[1], Tier::Gpu);
+        cache.promote(ids[2], Tier::Dram);
+        let plan = plan_movement(&mut cache, &c);
+        assert_eq!(plan.matched_chunks(), 4);
+        assert_eq!(plan.from_gpu, 2);
+        assert_eq!(plan.from_dram, 1);
+        assert_eq!(plan.from_ssd, 1);
+        assert_eq!(plan.ssd_nodes, vec![ids[3]]);
+        assert_eq!(plan.reused_tokens, 16);
+        assert_eq!(plan.computed_tokens, 4 + 2); // chunk 4 + tail
+        assert_eq!(plan.computed_chunks, 1);
+        // matched nodes are pinned
+        for id in &plan.matched {
+            assert!(cache.tree.node(*id).pins > 0);
+        }
+        unpin_plan(&mut cache, &plan);
+        for id in &plan.matched {
+            assert_eq!(cache.tree.node(*id).pins, 0);
+        }
+    }
+
+    #[test]
+    fn empty_cache_plans_full_compute() {
+        let mut cache = engine();
+        let c = chain(2, 3, 1);
+        let plan = plan_movement(&mut cache, &c);
+        assert_eq!(plan.matched_chunks(), 0);
+        assert_eq!(plan.computed_tokens, 13);
+        assert_eq!(plan.computed_chunks, 3);
+    }
+
+    #[test]
+    fn lookahead_protects_window_chains() {
+        let mut cache = engine();
+        let a = chain(3, 2, 0);
+        let b = chain(4, 2, 0);
+        insert(&mut cache, &a, 2, Tier::Dram);
+        insert(&mut cache, &b, 2, Tier::Dram);
+        let protected = apply_lookahead(&mut cache, [&a].into_iter(), 50);
+        assert_eq!(protected, 2);
+        let now = cache.tree.now();
+        for k in &a.keys {
+            let id = cache.tree.get(*k).unwrap();
+            assert!(cache.tree.node(id).boost_until > now);
+        }
+        for k in &b.keys {
+            let id = cache.tree.get(*k).unwrap();
+            assert_eq!(cache.tree.node(id).boost_until, 0);
+        }
+    }
+}

@@ -1,0 +1,328 @@
+//! Minimal HTTP/1.1 JSON server over `std::net` (no hyper/tokio
+//! offline) exposing the real-model serving path:
+//!
+//!   POST /generate  {"tokens": [...]}            -> generation + timing
+//!   POST /rag       {"query": "free text"}       -> retrieve + generate
+//!   GET  /stats                                  -> cache/latency stats
+//!   GET  /healthz                                -> 200 ok
+//!
+//! One acceptor thread + a worker pool; the PJRT executor is behind a
+//! mutex (single CPU "GPU"), which is exactly the paper's one-executor
+//! regime — batching happens upstream in the scheduler.
+
+use crate::rag::retriever::Retriever;
+use crate::rag::tokenizer::Tokenizer;
+use crate::runtime::executor::ExecutorHandle;
+use crate::util::json::Json;
+use crate::util::stats::Samples;
+use crate::util::threadpool::ThreadPool;
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shared server state.
+pub struct ServerState {
+    pub executor: ExecutorHandle,
+    pub retriever: Option<Retriever>,
+    pub tokenizer: Tokenizer,
+    pub ttft: Mutex<Samples>,
+    pub requests: Mutex<u64>,
+}
+
+/// The serving HTTP frontend.
+pub struct HttpServer {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    stop: Arc<AtomicBool>,
+}
+
+impl HttpServer {
+    /// Bind to `addr` (e.g. "127.0.0.1:0" for an ephemeral port).
+    pub fn bind(addr: &str, state: ServerState) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        Ok(HttpServer {
+            listener,
+            state: Arc::new(state),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Handle for asking the serve loop to exit.
+    pub fn stop_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+
+    pub fn state(&self) -> Arc<ServerState> {
+        Arc::clone(&self.state)
+    }
+
+    /// Serve until the stop flag is set. Blocks the calling thread.
+    pub fn serve(&self, workers: usize) -> Result<()> {
+        let pool = ThreadPool::new(workers.max(1), "http");
+        self.listener.set_nonblocking(true)?;
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let state = Arc::clone(&self.state);
+                    pool.submit(move || {
+                        let _ = handle_connection(stream, &state);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        pool.wait_idle();
+        Ok(())
+    }
+}
+
+fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    // headers
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some(v) = line
+            .to_ascii_lowercase()
+            .strip_prefix("content-length:")
+            .map(|v| v.trim().to_string())
+        {
+            content_length = v.parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    let body_text = String::from_utf8_lossy(&body).to_string();
+
+    let (code, response) = route(&method, &path, &body_text, state);
+    let mut stream = reader.into_inner();
+    let payload = response.dump();
+    write!(
+        stream,
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        code,
+        status_text(code),
+        payload.len(),
+        payload
+    )?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn status_text(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    }
+}
+
+fn route(method: &str, path: &str, body: &str, state: &ServerState) -> (u16, Json) {
+    match (method, path) {
+        ("GET", "/healthz") => (200, Json::from_pairs(vec![("ok", true.into())])),
+        ("GET", "/stats") => (200, stats_json(state)),
+        ("POST", "/generate") => match handle_generate(body, state) {
+            Ok(j) => (200, j),
+            Err(e) => (400, err_json(&e)),
+        },
+        ("POST", "/rag") => match handle_rag(body, state) {
+            Ok(j) => (200, j),
+            Err(e) => (400, err_json(&e)),
+        },
+        _ => (404, err_json(&anyhow!("no such route"))),
+    }
+}
+
+fn err_json(e: &anyhow::Error) -> Json {
+    Json::from_pairs(vec![("error", format!("{e:#}").into())])
+}
+
+fn stats_json(state: &ServerState) -> Json {
+    let mut ttft = state.ttft.lock().unwrap();
+    let requests = *state.requests.lock().unwrap();
+    let stats = match state.executor.stats() {
+        Ok(s) => s.cache,
+        Err(e) => return err_json(&e),
+    };
+    Json::from_pairs(vec![
+        ("requests", requests.into()),
+        ("ttft_mean_s", if ttft.is_empty() { Json::Null } else { ttft.mean().into() }),
+        ("ttft_p99_s", if ttft.is_empty() { Json::Null } else { ttft.percentile(99.0).into() }),
+        ("cache_hit_ratio", stats.hit_ratio().into()),
+        ("hits_dram", stats.hit_chunks[1].into()),
+        ("hits_ssd", stats.hit_chunks[2].into()),
+        ("evictions_dram", stats.evicted_chunks[1].into()),
+    ])
+}
+
+fn parse_tokens(j: &Json, vocab: u32) -> Result<Vec<u32>> {
+    let arr = j
+        .get("tokens")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("body must carry a 'tokens' array"))?;
+    arr.iter()
+        .map(|t| {
+            let x = t.as_f64().ok_or_else(|| anyhow!("non-numeric token"))? as i64;
+            if x < 0 || x >= vocab as i64 {
+                Err(anyhow!("token {x} outside vocab {vocab}"))
+            } else {
+                Ok(x as u32)
+            }
+        })
+        .collect()
+}
+
+fn handle_generate(body: &str, state: &ServerState) -> Result<Json> {
+    let j = Json::parse(body).map_err(|e| anyhow!("{e}"))?;
+    let vocab = state.executor.stats()?.vocab as u32;
+    let tokens = parse_tokens(&j, vocab)?;
+    serve_tokens(&tokens, state)
+}
+
+fn handle_rag(body: &str, state: &ServerState) -> Result<Json> {
+    let j = Json::parse(body).map_err(|e| anyhow!("{e}"))?;
+    let query = j
+        .get("query")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("body must carry a 'query' string"))?;
+    let retriever = state
+        .retriever
+        .as_ref()
+        .ok_or_else(|| anyhow!("server started without a retriever"))?;
+    let q_tokens = state.tokenizer.encode(query);
+    let retrieval = retriever.retrieve(&q_tokens);
+    let mut out = serve_tokens(&retrieval.tokens, state)?;
+    out.set(
+        "doc_ids",
+        Json::Arr(retrieval.doc_ids.iter().map(|d| (*d as u64).into()).collect()),
+    );
+    out.set("retrieval_s", retrieval.search_seconds.into());
+    Ok(out)
+}
+
+fn serve_tokens(tokens: &[u32], state: &ServerState) -> Result<Json> {
+    let result = state.executor.serve(tokens.to_vec())?;
+    state.ttft.lock().unwrap().push(result.prefill_seconds);
+    *state.requests.lock().unwrap() += 1;
+    Ok(Json::from_pairs(vec![
+        ("first_token", (result.first_token as u64).into()),
+        ("prefill_s", result.prefill_seconds.into()),
+        ("reused_tokens", result.reused_tokens.into()),
+        ("computed_tokens", result.computed_tokens.into()),
+        ("reused_from_dram", result.reused_from_dram.into()),
+        ("reused_from_ssd", result.reused_from_ssd.into()),
+        ("passes", result.passes.into()),
+    ]))
+}
+
+/// Tiny blocking HTTP client for tests and the load-driver example.
+pub fn http_request(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, Json)> {
+    let mut stream = TcpStream::connect(addr)?;
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    let mut response = String::new();
+    BufReader::new(stream).read_to_string(&mut response)?;
+    let code: u16 = response
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| anyhow!("malformed response"))?;
+    let body_start = response
+        .find("\r\n\r\n")
+        .ok_or_else(|| anyhow!("no body"))?;
+    let j = Json::parse(response[body_start..].trim()).map_err(|e| anyhow!("{e}"))?;
+    Ok((code, j))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{default_artifacts_dir, Manifest};
+
+    /// Spin a real server (if artifacts exist) and poke every route.
+    #[test]
+    fn full_http_round_trip() {
+        let Ok(manifest) = Manifest::load(default_artifacts_dir()) else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let dir = std::env::temp_dir().join(format!("pcr-http-{}", std::process::id()));
+        let executor = ExecutorHandle::spawn(move || {
+            crate::runtime::executor::PjrtExecutor::new(manifest, 32, 64, Some(&dir))
+        })
+        .unwrap();
+        let state = ServerState {
+            executor,
+            retriever: None,
+            tokenizer: Tokenizer::new(2048),
+            ttft: Mutex::new(Samples::new()),
+            requests: Mutex::new(0),
+        };
+        let server = HttpServer::bind("127.0.0.1:0", state).unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let stop = server.stop_handle();
+        let handle = std::thread::spawn(move || server.serve(2));
+
+        let (code, j) = http_request(&addr, "GET", "/healthz", "").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+
+        // generate twice with the same tokens: the second reuses
+        let tokens: Vec<u64> = (0..300u64).map(|i| i % 512).collect();
+        let body = Json::from_pairs(vec![(
+            "tokens",
+            Json::Arr(tokens.iter().map(|t| (*t).into()).collect()),
+        )])
+        .dump();
+        let (code, j1) = http_request(&addr, "POST", "/generate", &body).unwrap();
+        assert_eq!(code, 200, "{j1}");
+        assert_eq!(j1.get("reused_tokens").unwrap().as_usize(), Some(0));
+        let (_, j2) = http_request(&addr, "POST", "/generate", &body).unwrap();
+        assert_eq!(j2.get("reused_tokens").unwrap().as_usize(), Some(256));
+        assert_eq!(
+            j1.get("first_token").unwrap().as_usize(),
+            j2.get("first_token").unwrap().as_usize()
+        );
+
+        let (code, stats) = http_request(&addr, "GET", "/stats", "").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(stats.get("requests").unwrap().as_usize(), Some(2));
+
+        // error paths
+        let (code, _) = http_request(&addr, "POST", "/generate", "{}").unwrap();
+        assert_eq!(code, 400);
+        let (code, _) = http_request(&addr, "GET", "/nope", "").unwrap();
+        assert_eq!(code, 404);
+
+        stop.store(true, Ordering::SeqCst);
+        handle.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,175 @@
+//! System variants (paper §6.1 Baselines + §6.3 breakdown arms).
+//!
+//! Every variant runs the same backbone (scheduler, chunked prefix
+//! cache, cost models); they differ only in which tiers exist, which
+//! transfers overlap, whether the queue drives prefetch, and the
+//! eviction policy — exactly how the paper frames its baselines:
+//!
+//! | variant  | DRAM | SSD | overlap  | prefetch | policy        |
+//! |----------|------|-----|----------|----------|---------------|
+//! | vllm     |  –   |  –  | –        | –        | LRU (GPU)     |
+//! | ccache   |  ✓   |  –  | sync     | –        | LRU           |
+//! | sccache  |  ✓   |  ✓  | sync     | –        | LRU           |
+//! | lmcache  |  ✓   |  ✓  | only-up  | window 1 | LRU           |
+//! | pcr      |  ✓   |  ✓  | up-down  | window W | look-ahead LRU|
+//!
+//! Table 1's arms: `pcr_base` (tiers only, sync, no prefetch),
+//! `pcr_overlap` (+layer-wise overlap), `pcr` (+queue prefetch).
+
+use crate::cache::policy::PolicyKind;
+use crate::sim::pipeline::OverlapMode;
+
+/// Behaviour switches of one serving system.
+#[derive(Clone, Debug)]
+pub struct SystemSpec {
+    pub name: &'static str,
+    pub dram_tier: bool,
+    pub ssd_tier: bool,
+    pub overlap: OverlapMode,
+    /// Queue-based SSD→DRAM prefetch look-ahead window (0 = disabled).
+    pub prefetch_window: usize,
+    /// Look-ahead LRU protection from the waiting queue.
+    pub lookahead_lru: bool,
+    pub policy: PolicyKind,
+    /// Batched chunk copies (`cudaMemcpyBatchAsync`) vs block-by-block.
+    pub batch_async: bool,
+}
+
+impl SystemSpec {
+    /// The paper's five evaluated systems.
+    pub fn named(name: &str, prefetch_window: usize) -> Option<SystemSpec> {
+        let spec = match name {
+            "vllm" => SystemSpec {
+                name: "vllm",
+                dram_tier: false,
+                ssd_tier: false,
+                overlap: OverlapMode::Sync,
+                prefetch_window: 0,
+                lookahead_lru: false,
+                policy: PolicyKind::Lru,
+                batch_async: false,
+            },
+            "ccache" => SystemSpec {
+                name: "ccache",
+                dram_tier: true,
+                ssd_tier: false,
+                overlap: OverlapMode::Sync,
+                prefetch_window: 0,
+                lookahead_lru: false,
+                policy: PolicyKind::Lru,
+                batch_async: false,
+            },
+            "sccache" => SystemSpec {
+                name: "sccache",
+                dram_tier: true,
+                ssd_tier: true,
+                overlap: OverlapMode::Sync,
+                prefetch_window: 0,
+                lookahead_lru: false,
+                policy: PolicyKind::Lru,
+                batch_async: false,
+            },
+            "lmcache" => SystemSpec {
+                name: "lmcache",
+                dram_tier: true,
+                ssd_tier: true,
+                overlap: OverlapMode::OnlyUp,
+                prefetch_window: 1,
+                lookahead_lru: false,
+                policy: PolicyKind::Lru,
+                batch_async: true,
+            },
+            "pcr" => SystemSpec {
+                name: "pcr",
+                dram_tier: true,
+                ssd_tier: true,
+                overlap: OverlapMode::UpDown,
+                prefetch_window,
+                lookahead_lru: true,
+                policy: PolicyKind::LookaheadLru,
+                batch_async: true,
+            },
+            _ => return None,
+        };
+        Some(spec)
+    }
+
+    /// Table 1 ablation arms (cumulative).
+    pub fn pcr_base() -> SystemSpec {
+        SystemSpec {
+            name: "pcr_base",
+            overlap: OverlapMode::Sync,
+            prefetch_window: 0,
+            ..Self::named("pcr", 4).unwrap()
+        }
+    }
+
+    pub fn pcr_overlap() -> SystemSpec {
+        SystemSpec {
+            name: "pcr_overlap",
+            prefetch_window: 0,
+            ..Self::named("pcr", 4).unwrap()
+        }
+    }
+
+    /// Fig 18 arm with a specific overlap mode.
+    pub fn pcr_with_overlap(mode: OverlapMode) -> SystemSpec {
+        SystemSpec {
+            name: match mode {
+                OverlapMode::Sync => "pcr_sync",
+                OverlapMode::OnlyUp => "pcr_only_up",
+                OverlapMode::OnlyDown => "pcr_only_down",
+                OverlapMode::UpDown => "pcr_up_down",
+            },
+            overlap: mode,
+            ..Self::named("pcr", 4).unwrap()
+        }
+    }
+
+    pub fn all_baselines(prefetch_window: usize) -> Vec<SystemSpec> {
+        ["vllm", "ccache", "sccache", "lmcache", "pcr"]
+            .iter()
+            .map(|n| Self::named(n, prefetch_window).unwrap())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn named_variants_match_paper_table() {
+        let v = SystemSpec::named("vllm", 4).unwrap();
+        assert!(!v.dram_tier && !v.ssd_tier);
+        let c = SystemSpec::named("ccache", 4).unwrap();
+        assert!(c.dram_tier && !c.ssd_tier);
+        assert_eq!(c.overlap, OverlapMode::Sync);
+        let s = SystemSpec::named("sccache", 4).unwrap();
+        assert!(s.dram_tier && s.ssd_tier);
+        let p = SystemSpec::named("pcr", 6).unwrap();
+        assert_eq!(p.prefetch_window, 6);
+        assert!(p.lookahead_lru);
+        assert_eq!(p.policy, PolicyKind::LookaheadLru);
+        assert!(SystemSpec::named("orca", 4).is_none());
+    }
+
+    #[test]
+    fn ablation_arms_are_cumulative() {
+        let base = SystemSpec::pcr_base();
+        let ovl = SystemSpec::pcr_overlap();
+        let full = SystemSpec::named("pcr", 4).unwrap();
+        assert_eq!(base.overlap, OverlapMode::Sync);
+        assert_eq!(base.prefetch_window, 0);
+        assert_eq!(ovl.overlap, OverlapMode::UpDown);
+        assert_eq!(ovl.prefetch_window, 0);
+        assert_eq!(full.prefetch_window, 4);
+        // all three share tiers + policy
+        assert!(base.dram_tier && base.ssd_tier && base.lookahead_lru);
+    }
+
+    #[test]
+    fn all_baselines_count() {
+        assert_eq!(SystemSpec::all_baselines(4).len(), 5);
+    }
+}

@@ -1,0 +1,8 @@
+//! Discrete-event simulation core and the layer-wise overlap pipeline.
+//!
+//! * [`events`] — virtual clock, event queue, FIFO job-shop replayer.
+//! * [`pipeline`] — Fig 8's three-stream layer-wise overlapping, with
+//!   analytic makespans validated against the DES replay.
+
+pub mod events;
+pub mod pipeline;

@@ -1,0 +1,358 @@
+//! Layer-wise overlapping (paper §4.3, Fig 8): pipelining KV-cache
+//! upload, GPU computation, and KV offload across three FIFO lanes
+//! ("CUDA streams"), at transformer-layer granularity.
+//!
+//! Dependency structure per layer l:
+//!   compute[l]  waits on  upload[l]   (needs that layer's reused KV)
+//!   download[l] waits on  compute[l]  (offloads that layer's new KV)
+//! and each lane is FIFO. The analytic makespan below is validated
+//! against the `sim::events` job-shop replay in tests — they must agree
+//! to float precision.
+
+use crate::sim::events::{run_job_shop, Job};
+
+/// Which transfers overlap with compute (Fig 18's ablation arms).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// Fully synchronous: all uploads, then all compute, then all
+    /// downloads (the Sync-Swap baseline of Fig 1).
+    Sync,
+    /// Only uploads overlap with compute; downloads happen at the end.
+    OnlyUp,
+    /// Uploads happen up front; downloads overlap with compute.
+    OnlyDown,
+    /// Full three-stream overlap (PCR).
+    UpDown,
+}
+
+impl OverlapMode {
+    pub fn parse(s: &str) -> Option<OverlapMode> {
+        match s {
+            "sync" => Some(OverlapMode::Sync),
+            "only-up" | "up" => Some(OverlapMode::OnlyUp),
+            "only-down" | "down" => Some(OverlapMode::OnlyDown),
+            "up-down" | "updown" | "full" => Some(OverlapMode::UpDown),
+            _ => None,
+        }
+    }
+}
+
+/// Per-layer timings of one forward pass.
+#[derive(Clone, Debug)]
+pub struct LayerTimings {
+    /// Upload time of each layer's reused KV (H2D).
+    pub up: Vec<f64>,
+    /// Compute time of each layer.
+    pub compute: Vec<f64>,
+    /// Download time of each layer's newly generated KV (D2H).
+    pub down: Vec<f64>,
+    /// Per-layer pipeline synchronization overhead (event record/wait) —
+    /// the cost that makes full overlap non-free for small KV (Fig 18's
+    /// Qwen anomaly where only-down beats up-down).
+    pub sync_overhead: f64,
+}
+
+impl LayerTimings {
+    /// Uniform timings across `n` layers.
+    pub fn uniform(n: usize, up: f64, compute: f64, down: f64, sync_overhead: f64) -> Self {
+        LayerTimings {
+            up: vec![up / n as f64; n],
+            compute: vec![compute / n as f64; n],
+            down: vec![down / n as f64; n],
+            sync_overhead,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.compute.len()
+    }
+
+    fn total_up(&self) -> f64 {
+        self.up.iter().sum()
+    }
+    fn total_compute(&self) -> f64 {
+        self.compute.iter().sum()
+    }
+    fn total_down(&self) -> f64 {
+        self.down.iter().sum()
+    }
+}
+
+/// Analytic makespan of the layer-wise pipeline under `mode`.
+///
+/// Recurrences (lane cursors u, c, d):
+///   u[l] = u[l-1] + up[l]
+///   c[l] = max(c[l-1], u[l]) + compute[l] (+sync if overlapping up)
+///   d[l] = max(d[l-1], c[l]) + down[l]
+pub fn makespan(t: &LayerTimings, mode: OverlapMode) -> f64 {
+    let n = t.n_layers();
+    assert_eq!(t.up.len(), n);
+    assert_eq!(t.down.len(), n);
+    match mode {
+        OverlapMode::Sync => t.total_up() + t.total_compute() + t.total_down(),
+        OverlapMode::OnlyUp => {
+            let mut u = 0.0f64;
+            let mut c = 0.0f64;
+            for l in 0..n {
+                u += t.up[l];
+                c = c.max(u) + t.compute[l] + t.sync_overhead;
+            }
+            c + t.total_down()
+        }
+        OverlapMode::OnlyDown => {
+            let up_front = t.total_up();
+            let mut c = up_front;
+            let mut d = up_front;
+            for l in 0..n {
+                c += t.compute[l] + t.sync_overhead;
+                d = d.max(c) + t.down[l];
+            }
+            d
+        }
+        OverlapMode::UpDown => {
+            let mut u = 0.0f64;
+            let mut c = 0.0f64;
+            let mut d = 0.0f64;
+            for l in 0..n {
+                u += t.up[l];
+                c = c.max(u) + t.compute[l] + 2.0 * t.sync_overhead;
+                d = d.max(c) + t.down[l];
+            }
+            d
+        }
+    }
+}
+
+/// Replay the same pipeline on the discrete-event job shop (3 FIFO
+/// resources: 0 = H2D stream, 1 = compute stream, 2 = D2H stream).
+/// Used by tests to validate `makespan`.
+pub fn makespan_des(t: &LayerTimings, mode: OverlapMode) -> f64 {
+    let n = t.n_layers();
+    let mut jobs: Vec<Job> = Vec::with_capacity(3 * n);
+    match mode {
+        OverlapMode::Sync => {
+            // one serial chain on a single resource
+            let mut prev: Option<usize> = None;
+            for phase in 0..3 {
+                for l in 0..n {
+                    let dur = match phase {
+                        0 => t.up[l],
+                        1 => t.compute[l],
+                        _ => t.down[l],
+                    };
+                    let deps = prev.map(|p| vec![p]).unwrap_or_default();
+                    jobs.push(Job::new(0, dur, deps));
+                    prev = Some(jobs.len() - 1);
+                }
+            }
+            let f = run_job_shop(&jobs, 1);
+            f.last().copied().unwrap_or(0.0)
+        }
+        OverlapMode::OnlyUp => {
+            let mut up_ids = Vec::new();
+            for l in 0..n {
+                jobs.push(Job::new(0, t.up[l], vec![]));
+                up_ids.push(jobs.len() - 1);
+            }
+            let mut last_c = None;
+            for l in 0..n {
+                let mut deps = vec![up_ids[l]];
+                if let Some(p) = last_c {
+                    deps.push(p);
+                }
+                jobs.push(Job::new(1, t.compute[l] + t.sync_overhead, deps));
+                last_c = Some(jobs.len() - 1);
+            }
+            // downloads serialized after the last compute
+            let mut prev = last_c.unwrap();
+            for l in 0..n {
+                jobs.push(Job::new(2, t.down[l], vec![prev]));
+                prev = jobs.len() - 1;
+            }
+            let f = run_job_shop(&jobs, 3);
+            f.last().copied().unwrap_or(0.0)
+        }
+        OverlapMode::OnlyDown => {
+            // one big upfront upload
+            jobs.push(Job::new(0, t.total_up(), vec![]));
+            let up_id = 0;
+            let mut c_ids = Vec::new();
+            let mut last_c = None;
+            for l in 0..n {
+                let mut deps = vec![up_id];
+                if let Some(p) = last_c {
+                    deps = vec![p];
+                }
+                jobs.push(Job::new(1, t.compute[l] + t.sync_overhead, deps));
+                last_c = Some(jobs.len() - 1);
+                c_ids.push(jobs.len() - 1);
+            }
+            for l in 0..n {
+                jobs.push(Job::new(2, t.down[l], vec![c_ids[l]]));
+            }
+            let f = run_job_shop(&jobs, 3);
+            f.iter().copied().fold(0.0, f64::max)
+        }
+        OverlapMode::UpDown => {
+            let mut up_ids = Vec::new();
+            for l in 0..n {
+                jobs.push(Job::new(0, t.up[l], vec![]));
+                up_ids.push(jobs.len() - 1);
+            }
+            let mut c_ids = Vec::new();
+            let mut last_c = None;
+            for l in 0..n {
+                let mut deps = vec![up_ids[l]];
+                if let Some(p) = last_c {
+                    deps.push(p);
+                }
+                jobs.push(Job::new(1, t.compute[l] + 2.0 * t.sync_overhead, deps));
+                last_c = Some(jobs.len() - 1);
+                c_ids.push(jobs.len() - 1);
+            }
+            for l in 0..n {
+                jobs.push(Job::new(2, t.down[l], vec![c_ids[l]]));
+            }
+            let f = run_job_shop(&jobs, 3);
+            f.iter().copied().fold(0.0, f64::max)
+        }
+    }
+}
+
+/// The paper's §4.3 claim: with full overlap and per-layer transfer
+/// smaller than per-layer compute, effective transfer overhead shrinks
+/// from C1 to ~C1/n. Returns (sync_total, overlap_total, reduction).
+pub fn overlap_benefit(t: &LayerTimings) -> (f64, f64, f64) {
+    let sync = makespan(t, OverlapMode::Sync);
+    let ovl = makespan(t, OverlapMode::UpDown);
+    (sync, ovl, sync - ovl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-9 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn analytic_matches_des_uniform() {
+        let t = LayerTimings::uniform(8, 0.4, 1.6, 0.8, 0.0);
+        for mode in [
+            OverlapMode::Sync,
+            OverlapMode::OnlyUp,
+            OverlapMode::OnlyDown,
+            OverlapMode::UpDown,
+        ] {
+            let a = makespan(&t, mode);
+            let d = makespan_des(&t, mode);
+            assert!(close(a, d), "{mode:?}: analytic {a} != des {d}");
+        }
+    }
+
+    #[test]
+    fn analytic_matches_des_random() {
+        let mut rng = Rng::new(42);
+        for case in 0..200 {
+            let n = 1 + rng.below(40) as usize;
+            let t = LayerTimings {
+                up: (0..n).map(|_| rng.f64() * 0.1).collect(),
+                compute: (0..n).map(|_| rng.f64() * 0.2).collect(),
+                down: (0..n).map(|_| rng.f64() * 0.15).collect(),
+                sync_overhead: rng.f64() * 0.001,
+            };
+            for mode in [
+                OverlapMode::Sync,
+                OverlapMode::OnlyUp,
+                OverlapMode::OnlyDown,
+                OverlapMode::UpDown,
+            ] {
+                let a = makespan(&t, mode);
+                let d = makespan_des(&t, mode);
+                assert!(
+                    close(a, d),
+                    "case {case} {mode:?}: analytic {a} != des {d} (n={n})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_overlap_reduces_overhead_to_one_layer() {
+        // compute-dominated: per-layer transfer < per-layer compute.
+        // Effective overhead ≈ first-layer upload + last-layer download.
+        let n = 32;
+        let t = LayerTimings::uniform(n, 0.32, 3.2, 0.64, 0.0);
+        let total_compute: f64 = t.compute.iter().sum();
+        let ms = makespan(&t, OverlapMode::UpDown);
+        let overhead = ms - total_compute;
+        let one_layer = t.up[0] + t.down[0];
+        assert!(close(overhead, one_layer), "overhead={overhead} expect={one_layer}");
+    }
+
+    #[test]
+    fn overlap_never_worse_than_sync_without_sync_overhead() {
+        let mut rng = Rng::new(7);
+        for _ in 0..100 {
+            let n = 1 + rng.below(32) as usize;
+            let t = LayerTimings {
+                up: (0..n).map(|_| rng.f64()).collect(),
+                compute: (0..n).map(|_| rng.f64()).collect(),
+                down: (0..n).map(|_| rng.f64()).collect(),
+                sync_overhead: 0.0,
+            };
+            let sync = makespan(&t, OverlapMode::Sync);
+            for mode in [OverlapMode::OnlyUp, OverlapMode::OnlyDown, OverlapMode::UpDown] {
+                assert!(makespan(&t, mode) <= sync + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn sync_overhead_can_make_overlap_lose() {
+        // Fig 18 Qwen2.5-7B: tiny KV + per-layer sync cost => only-down
+        // can beat up-down.
+        let t = LayerTimings::uniform(32, 0.001, 0.5, 0.02, 0.002);
+        let only_down = makespan(&t, OverlapMode::OnlyDown);
+        let up_down = makespan(&t, OverlapMode::UpDown);
+        assert!(only_down < up_down);
+    }
+
+    #[test]
+    fn transfer_bound_pipeline_degrades_gracefully() {
+        // transfer-dominated: pipeline is bound by the H2D lane.
+        let t = LayerTimings::uniform(16, 4.0, 0.8, 0.4, 0.0);
+        let ms = makespan(&t, OverlapMode::UpDown);
+        // lower bound: total upload + one compute + one download
+        let lb = 4.0 + t.compute[0] + t.down[0];
+        assert!(ms >= lb - 1e-9);
+        assert!(ms < 4.0 + 0.8 + 0.4 + 1e-9);
+    }
+
+    #[test]
+    fn down_only_benefit_exceeds_up_only_when_down_dominates() {
+        // The paper: offloading is the bigger win because ALL new KV is
+        // written back while only the matched fraction is loaded.
+        let t = LayerTimings::uniform(32, 0.1, 2.0, 0.8, 0.0);
+        let sync = makespan(&t, OverlapMode::Sync);
+        let only_up_gain = sync - makespan(&t, OverlapMode::OnlyUp);
+        let only_down_gain = sync - makespan(&t, OverlapMode::OnlyDown);
+        assert!(only_down_gain > only_up_gain);
+    }
+
+    #[test]
+    fn single_layer_pipeline() {
+        let t = LayerTimings::uniform(1, 0.3, 1.0, 0.2, 0.0);
+        assert!(close(makespan(&t, OverlapMode::UpDown), 1.5));
+        assert!(close(makespan(&t, OverlapMode::Sync), 1.5));
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(OverlapMode::parse("sync"), Some(OverlapMode::Sync));
+        assert_eq!(OverlapMode::parse("up-down"), Some(OverlapMode::UpDown));
+        assert_eq!(OverlapMode::parse("x"), None);
+    }
+}

@@ -1,0 +1,264 @@
+//! Declarative CLI flag parser (no `clap` offline). Supports
+//! `--flag value`, `--flag=value`, boolean `--flag`, repeated flags,
+//! positional arguments, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    Unknown(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("invalid value for --{0}: {1}")]
+    Invalid(String, String),
+    #[error("help requested")]
+    Help,
+}
+
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// A small argument parser: declare flags, then `parse`.
+#[derive(Debug, Default)]
+pub struct Cli {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            flags: Vec::new(),
+        }
+    }
+
+    /// Flag with a value and a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    /// Flag with a value, no default (optional).
+    pub fn opt_no_default(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    /// Boolean switch.
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nFLAGS:\n", self.program, self.about);
+        for f in &self.flags {
+            let arg = if f.takes_value {
+                format!("--{} <v>", f.name)
+            } else {
+                format!("--{}", f.name)
+            };
+            let def = f
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {arg:<24} {}{def}\n", f.help));
+        }
+        s.push_str("  --help                   print this help\n");
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::Help);
+            }
+            if let Some(raw) = tok.strip_prefix("--") {
+                let (name, inline) = match raw.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (raw.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                let value = if spec.takes_value {
+                    match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    }
+                } else {
+                    "true".to_string()
+                };
+                args.values.entry(name).or_default().push(value);
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        // fill defaults
+        for f in &self.flags {
+            if !args.values.contains_key(&f.name) {
+                if let Some(d) = &f.default {
+                    args.values
+                        .insert(f.name.clone(), vec![d.clone()]);
+                }
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args` (skipping argv[0]); print help and exit on
+    /// `--help`, print error and exit non-zero on failure.
+    pub fn parse_or_exit(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(CliError::Help) => {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", self.usage());
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values
+            .get(name)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.values
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.get(name) == Some("true")
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError> {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| CliError::MissingValue(name.to_string()))?;
+        raw.parse()
+            .map_err(|_| CliError::Invalid(name.to_string(), raw.to_string()))
+    }
+
+    pub fn usize_of(&self, name: &str) -> usize {
+        self.parse_as(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    pub fn f64_of(&self, name: &str) -> f64 {
+        self.parse_as(name).unwrap_or_else(|e| panic!("{e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("rate", "0.5", "request rate")
+            .opt_no_default("model", "model name")
+            .switch("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cli().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("rate"), Some("0.5"));
+        assert_eq!(a.get("model"), None);
+        assert!(!a.flag("verbose"));
+
+        let a = cli()
+            .parse(&argv(&["--rate", "1.0", "--verbose", "--model=llama"]))
+            .unwrap();
+        assert_eq!(a.f64_of("rate"), 1.0);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("model"), Some("llama"));
+    }
+
+    #[test]
+    fn repeated_and_positional() {
+        let a = cli()
+            .parse(&argv(&["--model", "a", "--model", "b", "pos1", "pos2"]))
+            .unwrap();
+        assert_eq!(a.get_all("model"), vec!["a", "b"]);
+        assert_eq!(a.get("model"), Some("b"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(
+            cli().parse(&argv(&["--bogus"])),
+            Err(CliError::Unknown(_))
+        ));
+        assert!(matches!(
+            cli().parse(&argv(&["--model"])),
+            Err(CliError::MissingValue(_))
+        ));
+        assert!(matches!(
+            cli().parse(&argv(&["--help"])),
+            Err(CliError::Help)
+        ));
+    }
+
+    #[test]
+    fn usage_mentions_flags() {
+        let u = cli().usage();
+        assert!(u.contains("--rate"));
+        assert!(u.contains("default: 0.5"));
+    }
+}

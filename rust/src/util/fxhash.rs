@@ -1,0 +1,100 @@
+//! Deterministic hashing (FxHash, the rustc algorithm).
+//!
+//! `std::collections::HashMap`'s default `RandomState` seeds per
+//! instance, which makes *iteration order* vary across runs — and the
+//! cache engine's eviction-candidate scans iterate maps, so experiments
+//! would stop replaying bit-for-bit from their seeds. Every map in the
+//! hot path uses these aliases instead.
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// FxHash: multiply-xor word hasher (fast, deterministic, non-DoS-safe
+/// — fine for internal keys that are already hashes).
+#[derive(Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+pub type FxHashMap<K, V> = std::collections::HashMap<K, V, FxBuildHasher>;
+pub type FxHashSet<K> = std::collections::HashSet<K, FxBuildHasher>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a: FxHashMap<u64, u32> = FxHashMap::default();
+        let mut b: FxHashMap<u64, u32> = FxHashMap::default();
+        for i in 0..1000u64 {
+            a.insert(i.wrapping_mul(0x9E3779B97F4A7C15), i as u32);
+            b.insert(i.wrapping_mul(0x9E3779B97F4A7C15), i as u32);
+        }
+        let ka: Vec<u64> = a.keys().copied().collect();
+        let kb: Vec<u64> = b.keys().copied().collect();
+        assert_eq!(ka, kb, "iteration order must be reproducible");
+    }
+
+    #[test]
+    fn hashes_spread() {
+        use std::hash::{BuildHasher, Hash};
+        let bh = FxBuildHasher::default();
+        let h = |x: u64| {
+            let mut s = bh.build_hasher();
+            x.hash(&mut s);
+            s.finish()
+        };
+        // consecutive keys should not collide in low bits
+        let mut low: std::collections::HashSet<u64> = Default::default();
+        for i in 0..256u64 {
+            low.insert(h(i) & 0xFF);
+        }
+        assert!(low.len() > 100, "low-bit spread too poor: {}", low.len());
+    }
+}

@@ -1,0 +1,63 @@
+//! Shared substrates: PRNG + distributions, JSON, statistics, CLI
+//! parsing, logging, a thread pool, and a mini property-testing harness.
+//! Everything is hand-rolled because the build is fully offline (see
+//! DESIGN.md §System-inventory).
+
+pub mod cli;
+pub mod fxhash;
+pub mod json;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+/// Format a byte count for humans (1536 -> "1.5 KiB").
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut x = b as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u < UNITS.len() - 1 {
+        x /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{x:.2} {}", UNITS[u])
+    }
+}
+
+/// Format seconds for humans (0.0123 -> "12.3 ms").
+pub fn fmt_secs(s: f64) -> String {
+    if s.is_nan() {
+        "nan".to_string()
+    } else if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(1536), "1.50 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert!(fmt_secs(0.0123).contains("ms"));
+        assert!(fmt_secs(2.5).contains("s"));
+        assert!(fmt_secs(1e-7).contains("ns"));
+    }
+}

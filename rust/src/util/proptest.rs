@@ -1,0 +1,187 @@
+//! Mini property-testing harness (no `proptest` crate offline).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` over `cases` generated
+//! inputs; on failure it performs greedy shrinking via the input's
+//! `Shrink` implementation and panics with the minimal counterexample.
+//! Coordinator invariants (prefix-tree shape, leaf-only eviction, LRU
+//! order, residency accounting, scheduler plans) are all checked through
+//! this harness — see the `cache` and `serve` test modules.
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+
+/// Types that can propose strictly-smaller variants of themselves.
+pub trait Shrink: Sized {
+    /// Candidate shrinks, in decreasing-aggressiveness order.
+    fn shrinks(&self) -> Vec<Self>;
+}
+
+impl Shrink for u64 {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<Self> {
+        (*self as u64).shrinks().into_iter().map(|x| x as usize).collect()
+    }
+}
+
+impl<T: Clone + Shrink> Shrink for Vec<T> {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // remove halves, then single elements, then shrink one element
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        if self.len() <= 16 {
+            for i in 0..self.len() {
+                let mut v = self.clone();
+                v.remove(i);
+                out.push(v);
+            }
+            for i in 0..self.len() {
+                for s in self[i].shrinks() {
+                    let mut v = self.clone();
+                    v[i] = s;
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+impl<A: Clone + Shrink, B: Clone + Shrink> Shrink for (A, B) {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrinks()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrinks().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Run `prop` on `cases` inputs drawn by `gen`; shrink on failure.
+///
+/// Panics with the minimal failing input so `cargo test` reports it.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Clone + Debug + Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (min_input, min_msg, steps) = shrink_loop(input, msg, &mut prop);
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed}, {steps} shrink steps)\n\
+                 minimal input: {min_input:?}\nfailure: {min_msg}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<T, P>(mut input: T, mut msg: String, prop: &mut P) -> (T, String, usize)
+where
+    T: Clone + Debug + Shrink,
+    P: FnMut(&T) -> PropResult,
+{
+    let mut steps = 0;
+    'outer: loop {
+        for cand in input.shrinks() {
+            if let Err(m) = prop(&cand) {
+                input = cand;
+                msg = m;
+                steps += 1;
+                if steps > 10_000 {
+                    break 'outer;
+                }
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (input, msg, steps)
+}
+
+/// Convenience: turn a bool into a PropResult with a message.
+pub fn check(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(
+            1,
+            50,
+            |rng| rng.below(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal input: 10")]
+    fn shrinks_to_minimal_counterexample() {
+        // property: x < 10. Minimal failure is exactly 10.
+        forall(
+            2,
+            200,
+            |rng| rng.below(1000),
+            |x| check(*x < 10, format!("{x} >= 10")),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn vec_shrinking_reduces_length() {
+        forall(
+            3,
+            50,
+            |rng| {
+                let n = rng.below(20) as usize;
+                (0..n).map(|_| rng.below(50)).collect::<Vec<u64>>()
+            },
+            |v| check(v.len() < 3, "long vec"),
+        );
+    }
+
+    #[test]
+    fn u64_shrinks_monotone() {
+        for s in 17u64.shrinks() {
+            assert!(s < 17);
+        }
+        assert!(0u64.shrinks().is_empty());
+    }
+}

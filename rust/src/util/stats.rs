@@ -1,0 +1,287 @@
+//! Latency statistics: the TTFT/E2EL/ITL summaries the paper reports
+//! (mean, P50/P75/P90/P95/P99) plus streaming moments and histograms.
+
+/// Accumulates raw samples; percentile queries sort lazily.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn extend_from(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.xs.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m).powi(2)).sum::<f64>()
+            / (self.xs.len() - 1) as f64)
+            .sqrt()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated percentile, `q` in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let rank = (q / 100.0) * (self.xs.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        if lo == hi {
+            self.xs[lo]
+        } else {
+            let w = rank - lo as f64;
+            self.xs[lo] * (1.0 - w) + self.xs[hi] * w
+        }
+    }
+
+    /// The paper's reporting tuple.
+    pub fn summary(&mut self) -> Summary {
+        Summary {
+            n: self.len(),
+            mean: self.mean(),
+            p50: self.percentile(50.0),
+            p75: self.percentile(75.0),
+            p90: self.percentile(90.0),
+            p95: self.percentile(95.0),
+            p99: self.percentile(99.0),
+            max: if self.is_empty() { f64::NAN } else { self.max() },
+        }
+    }
+}
+
+/// mean/P50/P75/P90/P95/P99/max of one metric.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p75: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn row(&self, unit_scale: f64) -> String {
+        format!(
+            "n={:<6} mean={:>9.3} p50={:>9.3} p75={:>9.3} p90={:>9.3} p95={:>9.3} p99={:>9.3} max={:>9.3}",
+            self.n,
+            self.mean * unit_scale,
+            self.p50 * unit_scale,
+            self.p75 * unit_scale,
+            self.p90 * unit_scale,
+            self.p95 * unit_scale,
+            self.p99 * unit_scale,
+            self.max * unit_scale,
+        )
+    }
+}
+
+/// Streaming mean/variance (Welford) for counters that never need
+/// percentiles — cheap to keep per cache-tier / per stream.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+}
+
+/// Fixed-bucket histogram (log or linear) for ITL jitter plots.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+}
+
+impl Histogram {
+    /// `bounds` are ascending upper edges; one overflow bucket is added.
+    pub fn new(bounds: Vec<f64>) -> Self {
+        let n = bounds.len();
+        Histogram {
+            bounds,
+            counts: vec![0; n + 1],
+        }
+    }
+
+    pub fn exponential(lo: f64, factor: f64, buckets: usize) -> Self {
+        let mut bounds = Vec::with_capacity(buckets);
+        let mut edge = lo;
+        for _ in 0..buckets {
+            bounds.push(edge);
+            edge *= factor;
+        }
+        Histogram::new(bounds)
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let i = self
+            .bounds
+            .iter()
+            .position(|b| x <= *b)
+            .unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_of_known_sequence() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert!((s.percentile(99.0) - 99.01).abs() < 1e-9);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        let mut s = Samples::new();
+        s.push(7.0);
+        assert_eq!(s.percentile(50.0), 7.0);
+        assert_eq!(s.percentile(99.0), 7.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut s = Samples::new();
+        assert!(s.mean().is_nan());
+        assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn summary_ordering() {
+        let mut s = Samples::new();
+        let mut seed = 11u64;
+        for _ in 0..5000 {
+            s.push((crate::util::rng::splitmix64(&mut seed) % 1000) as f64);
+        }
+        let sum = s.summary();
+        assert!(sum.p50 <= sum.p75 && sum.p75 <= sum.p90);
+        assert!(sum.p90 <= sum.p95 && sum.p95 <= sum.p99);
+        assert!(sum.p99 <= sum.max);
+    }
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 4.0, 9.0, 16.0, 25.0];
+        let mut w = Welford::default();
+        for x in xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / 5.0;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / 4.0;
+        assert!((w.mean() - mean).abs() < 1e-12);
+        assert!((w.var() - var).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let mut h = Histogram::new(vec![1.0, 10.0, 100.0]);
+        for x in [0.5, 5.0, 50.0, 500.0, 0.9, 100.0] {
+            h.push(x);
+        }
+        assert_eq!(h.counts(), &[2, 1, 2, 1]);
+        assert_eq!(h.total(), 6);
+    }
+
+    #[test]
+    fn extend_from_merges() {
+        let mut a = Samples::new();
+        a.push(1.0);
+        let mut b = Samples::new();
+        b.push(3.0);
+        a.extend_from(&b);
+        assert_eq!(a.len(), 2);
+        assert!((a.mean() - 2.0).abs() < 1e-12);
+    }
+}

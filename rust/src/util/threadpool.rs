@@ -1,0 +1,162 @@
+//! Fixed-size worker pool over std threads + channels (no tokio in the
+//! offline crate set). Used by the prefetcher (dedicated I/O workers,
+//! matching the paper's "dedicated thread" design), the HTTP server, and
+//! the e2e example's background SSD write-back.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads executing queued closures.
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+    done: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, name: &str) -> Self {
+        assert!(threads > 0);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicUsize::new(0));
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = Arc::clone(&rx);
+            let done = Arc::clone(&done);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                done.fetch_add(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            queued,
+            done,
+        }
+    }
+
+    /// Enqueue a job; returns immediately.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("workers alive");
+    }
+
+    /// Number of jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::SeqCst) - self.done.load(Ordering::SeqCst)
+    }
+
+    /// Busy-wait (with yields) until all submitted jobs finished.
+    pub fn wait_idle(&self) {
+        while self.pending() > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// A one-shot future-like cell for retrieving a worker's result.
+pub struct Promise<T> {
+    rx: Receiver<T>,
+}
+
+impl<T: Send + 'static> Promise<T> {
+    /// Run `f` on the pool, returning a promise for its result.
+    pub fn spawn<F>(pool: &ThreadPool, f: F) -> Promise<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        pool.submit(move || {
+            let _ = tx.send(f());
+        });
+        Promise { rx }
+    }
+
+    /// Block until the result is available.
+    pub fn wait(self) -> T {
+        self.rx.recv().expect("worker panicked")
+    }
+
+    /// Non-blocking poll.
+    pub fn try_take(&self) -> Option<T> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4, "t");
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn promise_returns_value() {
+        let pool = ThreadPool::new(2, "t");
+        let p = Promise::spawn(&pool, || 6 * 7);
+        assert_eq!(p.wait(), 42);
+    }
+
+    #[test]
+    fn promises_in_flight_order_independent() {
+        let pool = ThreadPool::new(2, "t");
+        let ps: Vec<Promise<usize>> = (0..10)
+            .map(|i| Promise::spawn(&pool, move || i * i))
+            .collect();
+        let got: Vec<usize> = ps.into_iter().map(|p| p.wait()).collect();
+        assert_eq!(got, (0..10).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(2, "t");
+        pool.submit(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        drop(pool); // must not hang or panic
+    }
+}

@@ -1,0 +1,211 @@
+//! Cross-module integration tests: config -> workload -> engine ->
+//! metrics, with the paper's qualitative orderings asserted end-to-end
+//! (these are the "shape" claims EXPERIMENTS.md records quantitatively).
+
+use pcr::bench::scenario::{paper_config, Scale};
+use pcr::cache::tier::Tier;
+use pcr::config::ExperimentConfig;
+use pcr::serve::engine::{self, RunOutcome};
+use pcr::serve::scheduler::{plan_movement, unpin_plan};
+use pcr::serve::system::SystemSpec;
+use pcr::serve::workload::Workload;
+
+fn small_cfg(rate: f64) -> ExperimentConfig {
+    let mut cfg = paper_config("llama2-7b", "a6000", true, rate, Scale::Lite);
+    cfg.n_inputs = 60;
+    cfg.n_requests = 150;
+    cfg.n_docs = 250;
+    cfg.mean_doc_tokens = 700;
+    // re-derive tier pressure for the shrunk dataset (paper_config sized
+    // tiers for the default Lite dataset): GPU 3%, DRAM 25%, SSD 150%
+    let kv = pcr::hw::spec::model_spec(&cfg.model)
+        .unwrap()
+        .kv_bytes_per_token();
+    let distinct = cfg.n_inputs as u64 * (2 * cfg.mean_doc_tokens + 64) as u64;
+    cfg.gpu_bytes = distinct * kv * 3 / 100;
+    cfg.dram_bytes = distinct * kv / 4;
+    cfg.ssd_bytes = distinct * kv * 3 / 2;
+    cfg
+}
+
+fn run_named(cfg: &ExperimentConfig, wl: &Workload, name: &str) -> RunOutcome {
+    let spec = SystemSpec::named(name, cfg.prefetch_window).unwrap();
+    engine::run(cfg, &spec, wl)
+}
+
+#[test]
+fn paper_ordering_holds_end_to_end() {
+    let cfg = small_cfg(0.9);
+    let wl = Workload::build(&cfg);
+    let vllm = run_named(&cfg, &wl, "vllm");
+    let ccache = run_named(&cfg, &wl, "ccache");
+    let sccache = run_named(&cfg, &wl, "sccache");
+    let lmcache = run_named(&cfg, &wl, "lmcache");
+    let pcr = run_named(&cfg, &wl, "pcr");
+    // the paper's Fig 14/17 ordering
+    assert!(pcr.report.ttft.mean <= lmcache.report.ttft.mean * 1.001);
+    assert!(lmcache.report.ttft.mean <= sccache.report.ttft.mean * 1.001);
+    assert!(ccache.report.ttft.mean <= vllm.report.ttft.mean * 1.001);
+    assert!(pcr.report.ttft.mean < vllm.report.ttft.mean);
+    // tier hit structure: vllm only GPU; ccache no SSD; sccache all three
+    assert_eq!(vllm.reused_dram_chunks + vllm.reused_ssd_chunks, 0);
+    assert_eq!(ccache.reused_ssd_chunks, 0);
+    assert!(sccache.reused_ssd_chunks > 0, "SSD tier must serve hits");
+}
+
+#[test]
+fn token_conservation_across_engine() {
+    // every request's reused + computed tokens == its input length
+    let cfg = small_cfg(0.8);
+    let wl = Workload::build(&cfg);
+    let out = run_named(&cfg, &wl, "pcr");
+    assert_eq!(out.report.finished, wl.len());
+    // aggregate conservation via the reuse ratio
+    let total: f64 = wl.items.iter().map(|i| i.tokens.len() as f64).sum();
+    let mean_reuse = out.report.mean_reuse_ratio;
+    assert!((0.0..=1.0).contains(&mean_reuse));
+    assert!(total > 0.0);
+}
+
+#[test]
+fn config_file_drives_full_run() {
+    let dir = std::env::temp_dir().join(format!("pcr-int-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        r#"
+model = "qwen2.5-7b"
+platform = "rtx4090"
+system = "pcr"
+[cache]
+chunk_tokens = 128
+gpu_bytes = 1GiB
+dram_bytes = 4GiB
+ssd_bytes = 32GiB
+prefetch_window = 6
+[workload]
+rate = 1.0
+n_inputs = 40
+n_requests = 100
+[corpus]
+n_docs = 200
+n_topics = 16
+mean_doc_tokens = 500
+"#,
+    )
+    .unwrap();
+    let cfg = ExperimentConfig::from_file(path.to_str().unwrap()).unwrap();
+    assert_eq!(cfg.model, "qwen2.5-7b");
+    assert_eq!(cfg.prefetch_window, 6);
+    let wl = Workload::build(&cfg);
+    let out = run_named(&cfg, &wl, &cfg.system);
+    assert_eq!(out.report.finished, 100);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn movement_plan_consistent_with_residency() {
+    // Algorithm 1's plan must agree with the tree it was derived from.
+    let cfg = small_cfg(0.8);
+    let wl = Workload::build(&cfg);
+    let model = pcr::hw::spec::model_spec(&cfg.model).unwrap();
+    let platform = pcr::hw::spec::platform_spec(&cfg.platform).unwrap();
+    let spec = SystemSpec::named("pcr", 4).unwrap();
+    let mut cache = pcr::cache::engine::CacheEngine::new(
+        engine::cache_config(&cfg, &spec, &model, &platform));
+    let chunk_bytes = model.kv_bytes_per_token() * cfg.chunk_tokens as u64;
+
+    // insert the first item's chain into DRAM, then plan the second
+    let mut parent = None;
+    for key in &wl.items[0].chain.keys {
+        parent = cache.insert(parent, *key, chunk_bytes, Tier::Dram);
+        if parent.is_none() {
+            break;
+        }
+    }
+    for item in &wl.items[1..20] {
+        let plan = plan_movement(&mut cache, &item.chain);
+        assert_eq!(
+            plan.from_gpu + plan.from_dram + plan.from_ssd,
+            plan.matched.len()
+        );
+        assert_eq!(
+            plan.reused_tokens + plan.computed_tokens,
+            item.chain.total_tokens
+        );
+        assert!(plan.computed_chunks <= item.chain.n_chunks());
+        for (i, id) in plan.matched.iter().enumerate() {
+            assert_eq!(cache.tree.node(*id).key, item.chain.keys[i]);
+            assert!(cache.tree.node(*id).pins > 0, "plan must pin");
+        }
+        unpin_plan(&mut cache, &plan);
+        cache.check_accounting().unwrap();
+    }
+}
+
+#[test]
+fn prefetch_reduces_ssd_wait() {
+    let cfg = small_cfg(1.2); // heavy load: deep queue
+    let wl = Workload::build(&cfg);
+    let without = run_named(&cfg, &wl, "sccache");
+    let with = run_named(&cfg, &wl, "pcr");
+    assert!(with.prefetch_completed > 0);
+    // Raw ssd_wait totals are not directly comparable across systems
+    // (prefetch shifts *when* reads happen and changes residency); the
+    // binding claim is the end effect: PCR's TTFT must not lose.
+    assert!(
+        with.report.ttft.mean <= without.report.ttft.mean * 1.001,
+        "prefetching system must not lose on TTFT: {} vs {}",
+        with.report.ttft.mean,
+        without.report.ttft.mean
+    );
+}
+
+#[test]
+fn workload2_less_repetition_lower_hits() {
+    let mut cfg1 = small_cfg(0.8);
+    cfg1.oversample = true;
+    let mut cfg2 = small_cfg(0.8);
+    cfg2.oversample = false;
+    cfg2.n_inputs = cfg2.n_requests; // W2: every input distinct
+    let w1 = Workload::build(&cfg1);
+    let w2 = Workload::build(&cfg2);
+    assert!(w1.repetition_ratio > w2.repetition_ratio);
+    let o1 = run_named(&cfg1, &w1, "pcr");
+    let o2 = run_named(&cfg2, &w2, "pcr");
+    assert!(
+        o1.cache.hit_ratio() > o2.cache.hit_ratio(),
+        "more repetition must produce more hits: {} vs {}",
+        o1.cache.hit_ratio(),
+        o2.cache.hit_ratio()
+    );
+}
+
+#[test]
+fn saturation_behaviour_at_extreme_rate() {
+    // far beyond capacity the queue must grow and TTFT blow up — the
+    // paper's Table 1 shows 100x TTFTs at 1 req/s for the big models
+    let lo = {
+        let cfg = small_cfg(0.2);
+        let wl = Workload::build(&cfg);
+        run_named(&cfg, &wl, "pcr").report.ttft.mean
+    };
+    let hi = {
+        let cfg = small_cfg(30.0);
+        let wl = Workload::build(&cfg);
+        run_named(&cfg, &wl, "pcr").report.ttft.mean
+    };
+    assert!(hi > 3.0 * lo, "saturation must dominate: lo={lo} hi={hi}");
+}
+
+#[test]
+fn virtual_duration_bounded_by_arrivals_plus_service() {
+    let cfg = small_cfg(0.8);
+    let wl = Workload::build(&cfg);
+    let out = run_named(&cfg, &wl, "pcr");
+    let last_arrival = wl.items.last().unwrap().arrival;
+    assert!(out.virtual_duration >= last_arrival);
+    // and not absurdly beyond (every request < 60s of service here)
+    assert!(out.virtual_duration < last_arrival + 60.0 * wl.len() as f64);
+}
