@@ -6,7 +6,6 @@
 
 use pcr::bench::scenario::{paper_config, Scale};
 use pcr::bench::Table;
-use pcr::cache::policy::PolicyKind;
 use pcr::serve::engine;
 use pcr::serve::system::SystemSpec;
 use pcr::serve::workload::Workload;
@@ -74,17 +73,19 @@ fn main() {
     }
     t.print();
 
-    println!("\n4) look-ahead LRU — eviction that reads the queue (§4.2)");
+    println!("\n4) eviction policy — every registered policy on the PCR backbone (§4.2)");
     let mut t = Table::new(&["policy", "ttft-mean", "hit%"]);
-    for (label, policy, lookahead) in [
-        ("plain LRU", PolicyKind::Lru, false),
-        ("FIFO", PolicyKind::Fifo, false),
-        ("PGDSF (RAGCache)", PolicyKind::Pgdsf, false),
-        ("look-ahead LRU", PolicyKind::LookaheadLru, true),
+    for (label, policy) in [
+        ("plain LRU", "lru"),
+        ("FIFO", "fifo"),
+        ("PGDSF (RAGCache)", "pgdsf"),
+        ("SLRU", "slru"),
+        ("2Q", "2q"),
+        ("LFUDA", "lfuda"),
+        ("look-ahead LRU", "lookahead-lru"),
+        ("look-ahead SLRU", "lookahead-slru"),
     ] {
-        let mut spec = SystemSpec::named("pcr", 4).unwrap();
-        spec.policy = policy;
-        spec.lookahead_lru = lookahead;
+        let spec = SystemSpec::named("pcr", 4).unwrap().with_overrides(policy, "");
         let out = run(spec);
         t.row(&[
             label.to_string(),
@@ -94,7 +95,21 @@ fn main() {
     }
     t.print();
 
-    println!("\n5) batched chunk copies — cudaMemcpyBatchAsync (Fig 13)");
+    println!("\n5) prefetch strategy — what the queue watcher pulls off SSD (§4.4)");
+    let mut t = Table::new(&["strategy", "ttft-mean", "prefetches", "ssd-wait(total)"]);
+    for strategy in ["none", "queue-window", "depth-bounded:2", "depth-bounded:8"] {
+        let spec = SystemSpec::named("pcr", 4).unwrap().with_overrides("", strategy);
+        let out = run(spec);
+        t.row(&[
+            strategy.to_string(),
+            fmt_secs(out.report.ttft.mean),
+            out.prefetch_completed.to_string(),
+            fmt_secs(out.breakdown.ssd_wait),
+        ]);
+    }
+    t.print();
+
+    println!("\n6) batched chunk copies — cudaMemcpyBatchAsync (Fig 13)");
     let mut t = Table::new(&["copies", "ttft-mean"]);
     for (label, batch) in [("block-by-block", false), ("batch-async", true)] {
         let mut spec = SystemSpec::named("pcr", 4).unwrap();

@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     // reuse paths and evictions actually happen.
     let spill = std::env::temp_dir().join("pcr-e2e-spill");
     let t0 = Instant::now();
-    let mut exec = PjrtExecutor::new(manifest, 12, 256, Some(&spill))?;
+    let mut exec = PjrtExecutor::new(manifest, 12, 256, Some(&spill), "lookahead-lru")?;
     println!("PJRT CPU client up, weights resident ({:.1}s)\n", t0.elapsed().as_secs_f64());
 
     // RAG frontend sized to the model's real context (P+N = 1024).

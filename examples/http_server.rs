@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     let vocab = manifest.vocab as u32;
     let spill = std::env::temp_dir().join("pcr-http-example-spill");
     let executor = ExecutorHandle::spawn(move || {
-        PjrtExecutor::new(manifest, 24, 256, Some(&spill))
+        PjrtExecutor::new(manifest, 24, 256, Some(&spill), "lookahead-lru")
     })?;
 
     let corpus = Corpus::generate(CorpusConfig {

@@ -11,7 +11,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline image without hypothesis: fall back below
+    HAVE_HYPOTHESIS = False
 
 from compile.kernels.prefill_attention import prefill_attention
 from compile.kernels.ref import prefill_attention_ref
@@ -143,24 +148,52 @@ class TestNumerics:
                                    atol=1e-4, rtol=1e-3)
 
 
-@settings(max_examples=40, deadline=None)
-@given(
-    h_kv=st.sampled_from([1, 2, 4]),
-    group=st.sampled_from([1, 2, 4]),
-    p_blocks=st.integers(0, 3),
-    n_blocks=st.integers(1, 3),
-    d=st.sampled_from([8, 16, 32]),
-    data=st.data(),
-)
-def test_kernel_matches_ref_sweep(h_kv, group, p_blocks, n_blocks, d, data):
-    """Property sweep: kernel == oracle across shapes and valid lengths."""
-    block = 16
-    p = p_blocks * block
-    n = n_blocks * block
-    h = h_kv * group
-    past_len = data.draw(st.integers(0, p), label="past_len")
-    new_len = data.draw(st.integers(1, n), label="new_len")
-    block_k = data.draw(st.sampled_from([8, 16, 48]), label="block_k")
-    seed = data.draw(st.integers(0, 2**16), label="seed")
-    _check(h=h, h_kv=h_kv, p=p, n=n, d=d, past_len=past_len,
-           new_len=new_len, block_q=block, block_k=block_k, seed=seed)
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        h_kv=st.sampled_from([1, 2, 4]),
+        group=st.sampled_from([1, 2, 4]),
+        p_blocks=st.integers(0, 3),
+        n_blocks=st.integers(1, 3),
+        d=st.sampled_from([8, 16, 32]),
+        data=st.data(),
+    )
+    def test_kernel_matches_ref_sweep(h_kv, group, p_blocks, n_blocks, d,
+                                      data):
+        """Property sweep: kernel == oracle across shapes and lengths."""
+        block = 16
+        p = p_blocks * block
+        n = n_blocks * block
+        h = h_kv * group
+        past_len = data.draw(st.integers(0, p), label="past_len")
+        new_len = data.draw(st.integers(1, n), label="new_len")
+        block_k = data.draw(st.sampled_from([8, 16, 48]), label="block_k")
+        seed = data.draw(st.integers(0, 2**16), label="seed")
+        _check(h=h, h_kv=h_kv, p=p, n=n, d=d, past_len=past_len,
+               new_len=new_len, block_q=block, block_k=block_k, seed=seed)
+
+else:
+
+    _FALLBACK_CASES = [
+        # (h_kv, group, p, n, d, past_len, new_len, block_k, seed)
+        (1, 1, 0, 16, 8, 0, 16, 8, 0),
+        (1, 4, 16, 32, 16, 9, 32, 16, 1),
+        (2, 2, 32, 16, 8, 32, 1, 48, 2),
+        (2, 1, 48, 48, 32, 17, 30, 16, 3),
+        (4, 2, 32, 32, 16, 0, 32, 8, 4),
+        (4, 1, 16, 48, 8, 16, 48, 48, 5),
+        (2, 4, 48, 16, 16, 31, 7, 16, 6),
+        (1, 2, 32, 48, 32, 5, 41, 8, 7),
+    ]
+
+    @pytest.mark.parametrize(
+        "h_kv,group,p,n,d,past_len,new_len,block_k,seed", _FALLBACK_CASES)
+    def test_kernel_matches_ref_sweep(h_kv, group, p, n, d, past_len,
+                                      new_len, block_k, seed):
+        """Deterministic stand-in for the hypothesis sweep when the
+        hypothesis package is unavailable: a fixed grid over the same
+        shape axes (GQA group, bucket blocks, head dim, valid lengths,
+        K tiling)."""
+        _check(h=h_kv * group, h_kv=h_kv, p=p, n=n, d=d, past_len=past_len,
+               new_len=new_len, block_q=16, block_k=block_k, seed=seed)

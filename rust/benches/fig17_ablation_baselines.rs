@@ -1,5 +1,8 @@
 //! Fig 17 — prefill latency: PCR vs the simplified baselines
-//! (vLLM / CCache / SCCache) across models and rates.
+//! (vLLM / CCache / SCCache) across models and rates, plus an
+//! eviction-policy sweep pitting the registered policies (including the
+//! new SLRU / 2Q / LFUDA family) against the paper baselines on the
+//! same workload.
 //!
 //! Paper's shapes: tiers help (CCache ≥ vLLM, SCCache ≥ CCache in hit
 //! ratio) BUT SCCache is *not* universally faster than CCache — for
@@ -9,6 +12,7 @@
 
 use pcr::bench::scenario::{paper_config, Scale};
 use pcr::bench::{section, Table};
+use pcr::cache::policy::registry;
 use pcr::serve::engine;
 use pcr::serve::system::SystemSpec;
 use pcr::serve::workload::Workload;
@@ -54,4 +58,61 @@ fn main() {
         println!("PCR vs SCCache average TTFT reduction: {avg:.1}% \
                   (paper: 36.4% llama2-7b, 50.9% 13b, 3.9% qwen-7b, 14.2% 14b)");
     }
+
+    policy_sweep(scale);
+}
+
+/// Eviction-policy sweep: every registered policy on the PCR backbone
+/// vs the paper baselines (vLLM/SCCache anchors included for scale),
+/// one model, middle rate — the hit-ratio/TTFT comparison for the new
+/// SLRU / 2Q / LFUDA family.
+fn policy_sweep(scale: Scale) {
+    section("Fig 17b: eviction-policy sweep (PCR backbone, llama2-7b @ 0.75 req/s)");
+    let cfg = paper_config("llama2-7b", "a6000", true, 0.75, scale);
+    let wl = Workload::build(&cfg);
+
+    let mut t = Table::new(&["arm", "ttft-mean", "ttft-p99", "hit%", "vs lru"]);
+    let mut rows: Vec<(String, f64, f64, f64)> = Vec::new();
+    for name in ["vllm", "sccache"] {
+        let spec = SystemSpec::named(name, cfg.prefetch_window).unwrap();
+        let out = engine::run(&cfg, &spec, &wl);
+        rows.push((
+            format!("baseline:{name}"),
+            out.report.ttft.mean,
+            out.report.ttft.p99,
+            out.cache.hit_ratio(),
+        ));
+    }
+    let mut lru_ttft = f64::NAN;
+    for name in registry::NAMES {
+        let spec = SystemSpec::named("pcr", cfg.prefetch_window)
+            .unwrap()
+            .with_overrides(name, "");
+        let out = engine::run(&cfg, &spec, &wl);
+        if name == "lru" {
+            lru_ttft = out.report.ttft.mean;
+        }
+        rows.push((
+            format!("pcr:{name}"),
+            out.report.ttft.mean,
+            out.report.ttft.p99,
+            out.cache.hit_ratio(),
+        ));
+    }
+    assert!(lru_ttft.is_finite(), "lru arm present");
+    for (name, mean, p99, hit) in &rows {
+        t.row(&[
+            name.clone(),
+            fmt_secs(*mean),
+            fmt_secs(*p99),
+            format!("{:.1}", hit * 100.0),
+            format!("{:+.1}%", 100.0 * (mean / lru_ttft - 1.0)),
+        ]);
+    }
+    t.print();
+    println!(
+        "(queue-aware arms run with the look-ahead boost pass on; \
+         all arms share tiers, overlap, window {})",
+        cfg.prefetch_window
+    );
 }

@@ -8,7 +8,7 @@
 use pcr::bench::{black_box, section, Bench};
 use pcr::cache::chunk::{chain_hash, ChunkKey, ChunkedSeq};
 use pcr::cache::engine::{CacheConfig, CacheEngine};
-use pcr::cache::policy::PolicyKind;
+use pcr::cache::policy::registry;
 use pcr::cache::tier::Tier;
 use pcr::sim::pipeline::{makespan, LayerTimings, OverlapMode};
 use pcr::util::rng::Rng;
@@ -19,7 +19,7 @@ fn build_cache(chains: usize, depth: usize) -> (CacheEngine, Vec<Vec<ChunkKey>>)
         gpu_capacity: u64::MAX / 4,
         dram_capacity: u64::MAX / 4,
         ssd_capacity: u64::MAX / 4,
-        policy: PolicyKind::LookaheadLru,
+        policy: "lookahead-lru".into(),
     });
     let mut all = Vec::new();
     for c in 0..chains {
@@ -58,6 +58,18 @@ fn main() {
     {
         let r = Bench::new("evict_one under pressure (5k leaves)").min_time(1.0).run_setup();
         println!("{}", r.line());
+    }
+
+    section("perf: fused victim scan per registered policy (52k nodes)");
+    {
+        let (cache, _) = build_cache(2000, 26);
+        for name in registry::NAMES {
+            let policy = registry::parse(name).unwrap();
+            let r = Bench::new(format!("pick_victim_fused [{name}]")).run(|| {
+                black_box(policy.pick_victim_fused(&cache.tree, Tier::Dram))
+            });
+            println!("{}", r.line());
+        }
     }
     {
         let (mut cache, chains) = build_cache(500, 26);

@@ -5,7 +5,7 @@
 //! `hw::transfer` channels, real via `cache::store` + `runtime`).
 
 use crate::cache::chunk::ChunkKey;
-use crate::cache::policy::PolicyKind;
+use crate::cache::policy::{registry, EvictionPolicy};
 use crate::cache::prefix_tree::{NodeId, PrefixTree};
 use crate::cache::tier::{Tier, TierUsage};
 
@@ -18,7 +18,12 @@ pub struct CacheConfig {
     pub gpu_capacity: u64,
     pub dram_capacity: u64,
     pub ssd_capacity: u64,
-    pub policy: PolicyKind,
+    /// Eviction policy name, resolved through
+    /// [`cache::policy::registry`](crate::cache::policy::registry)
+    /// when the engine is built ([`CacheEngine::new`] panics on an
+    /// unregistered name; validate upstream via the registry, or hand
+    /// the engine a custom instance with [`CacheEngine::with_policy`]).
+    pub policy: String,
 }
 
 impl CacheConfig {
@@ -89,11 +94,33 @@ pub struct CacheEngine {
     pub usage: [TierUsage; 3],
     pub config: CacheConfig,
     pub stats: CacheStats,
+    /// The eviction policy instance driving victim selection; its
+    /// lifecycle hooks fire from [`lookup`](CacheEngine::lookup),
+    /// [`insert`](CacheEngine::insert) and
+    /// [`evict_one`](CacheEngine::evict_one).
+    pub policy: Box<dyn EvictionPolicy>,
     sweep_countdown: u32,
 }
 
 impl CacheEngine {
+    /// Build an engine with the policy named in `config` (resolved via
+    /// the registry). Panics on an unregistered name — callers validate
+    /// names upstream (`Config::validate`, CLI parsing).
     pub fn new(config: CacheConfig) -> Self {
+        let policy = registry::parse(&config.policy).unwrap_or_else(|| {
+            panic!(
+                "unknown eviction policy '{}' (registered: {})",
+                config.policy,
+                registry::names_joined()
+            )
+        });
+        Self::with_policy(config, policy)
+    }
+
+    /// Build an engine around a caller-supplied policy instance — the
+    /// escape hatch for policies not in the registry (see the `cache`
+    /// module docs for a worked example).
+    pub fn with_policy(config: CacheConfig, policy: Box<dyn EvictionPolicy>) -> Self {
         CacheEngine {
             tree: PrefixTree::new(),
             usage: [
@@ -103,6 +130,7 @@ impl CacheEngine {
             ],
             config,
             stats: CacheStats::default(),
+            policy,
             sweep_countdown: SWEEP_PERIOD,
         }
     }
@@ -122,6 +150,7 @@ impl CacheEngine {
                 .fastest()
                 .expect("matched node must be resident");
             self.tree.touch(id);
+            self.policy.on_hit(&mut self.tree, id);
             out.from[tier.idx()] += 1;
             self.stats.hit_chunks[tier.idx()] += 1;
             self.stats.hit_bytes[tier.idx()] += self.tree.node(id).bytes;
@@ -150,11 +179,12 @@ impl CacheEngine {
     /// the evicted node. Uses the fused allocation-free victim scan
     /// (EXPERIMENTS.md §Perf iteration 1).
     pub fn evict_one(&mut self, tier: Tier) -> Option<NodeId> {
-        let victim = self.config.policy.pick_victim_fused(&self.tree, tier)?;
+        let victim = self.policy.pick_victim_fused(&self.tree, tier)?;
         let bytes = self.tree.node(victim).bytes;
         let fully_gone = self.tree.remove_residency(victim, tier);
         self.usage[tier.idx()].sub(bytes);
         self.stats.evicted_chunks[tier.idx()] += 1;
+        self.policy.on_evict(&mut self.tree, victim);
         if fully_gone {
             self.maybe_sweep();
         }
@@ -192,10 +222,20 @@ impl CacheEngine {
             self.stats.rejected_inserts += 1;
             return None;
         }
+        // new-chunk detection AFTER reserve: eviction pressure may have
+        // fully evicted an existing node, making this a re-insertion
+        let was_present = self
+            .tree
+            .get(key)
+            .map(|id| !self.tree.node(id).tiers.is_empty())
+            .unwrap_or(false);
         let id = self.tree.ensure(parent, key, bytes);
         self.tree.add_residency(id, tier);
         self.usage[tier.idx()].add(bytes);
         self.stats.inserted_chunks[tier.idx()] += 1;
+        if !was_present {
+            self.policy.on_insert(&mut self.tree, id);
+        }
         Some(id)
     }
 
@@ -305,7 +345,7 @@ mod tests {
             gpu_capacity: gpu,
             dram_capacity: dram,
             ssd_capacity: ssd,
-            policy: PolicyKind::LookaheadLru,
+            policy: "lookahead-lru".into(),
         }
     }
 
@@ -491,7 +531,7 @@ mod tests {
                     gpu_capacity: 300,
                     dram_capacity: 500,
                     ssd_capacity: 800,
-                    policy: PolicyKind::LookaheadLru,
+                    policy: "lookahead-lru".into(),
                 });
                 let chains: Vec<Vec<ChunkKey>> =
                     (0..6).map(|t| chain_of(t, 1 + (t as usize % 4))).collect();

@@ -1,19 +1,84 @@
 //! The Cache Engine — the paper's core contribution (§4.2, Fig 6/7).
 //!
 //! * [`chunk`] — prefix-chain hashed chunk identity (`HashPrefix`).
-//! * [`prefix_tree`] — the chunk tree with per-tier residency and the
-//!   chain-presence / leaf-only-eviction invariants.
-//! * [`policy`] — LRU, **look-ahead LRU** (the contribution), FIFO and
-//!   PGDSF (RAGCache-baseline) eviction.
+//! * [`prefix_tree`] — the chunk tree with per-tier residency, the
+//!   chain-presence / leaf-only-eviction invariants, and the
+//!   policy-owned per-node metadata slot (`Node::policy_meta`).
+//! * [`policy`] — the open [`EvictionPolicy`](policy::EvictionPolicy)
+//!   trait + name registry: LRU, **look-ahead LRU** (the paper's
+//!   contribution), FIFO, PGDSF (RAGCache baseline), SLRU, 2Q, LFUDA
+//!   and a look-ahead-SLRU hybrid.
+//! * [`prefetch`] — the open
+//!   [`PrefetchStrategy`](prefetch::PrefetchStrategy) trait + registry:
+//!   `none`, `queue-window` (the paper's §4.4), `depth-bounded[:N]`.
 //! * [`tier`] — GPU/DRAM/SSD tiers and byte accounting.
 //! * [`engine`] — lookup/insert/promote/evict + prefetch target
 //!   selection over the tree.
 //! * [`store`] — actual chunk byte storage for the real PJRT path
 //!   (memory + spill-directory backends).
+//!
+//! # Writing a custom eviction policy
+//!
+//! Eviction is an open extension point: implement
+//! [`policy::EvictionPolicy`] and either register a name (add an arm in
+//! `policy::registry::parse` plus an entry in `registry::NAMES` so it
+//! becomes reachable from TOML/CLI config and the ablation sweeps) or
+//! hand an instance straight to
+//! [`engine::CacheEngine::with_policy`]. The contract:
+//!
+//! * **`rank`** is the only required method: map an evictable candidate
+//!   to a [`policy::VictimRank`] — the minimum `(class, score, tie)`
+//!   (tie-broken by `NodeId`) is evicted first. Deriving both
+//!   `pick_victim` (candidate list) and `pick_victim_fused` (single
+//!   allocation-free slab scan) from `rank` makes the two victim paths
+//!   agree by construction; if you override them instead, keep them
+//!   consistent — the test suite property-checks that parity for every
+//!   registered policy.
+//! * **Lifecycle hooks** (`on_insert`, `on_hit`, `on_evict`) fire from
+//!   the engine after its own bookkeeping. Per-chunk state lives in the
+//!   tree's `policy_meta` slot (a `u64` the tree never interprets);
+//!   policy-global state lives in your struct's fields.
+//!
+//! SLRU, condensed from `policy.rs`, shows the whole pattern — one
+//! segment bit in `policy_meta`, probation evicts before protected:
+//!
+//! ```ignore
+//! #[derive(Debug, Default)]
+//! struct Slru;
+//!
+//! impl EvictionPolicy for Slru {
+//!     fn name(&self) -> &'static str { "slru" }
+//!
+//!     fn rank(&self, tree: &PrefixTree, id: NodeId) -> VictimRank {
+//!         let n = tree.node(id);
+//!         // class 0 = probationary, 1 = protected; LRU within each
+//!         VictimRank::classed((n.policy_meta & 1) as u8, n.last_access)
+//!     }
+//!
+//!     fn on_insert(&mut self, tree: &mut PrefixTree, id: NodeId) {
+//!         tree.set_policy_meta(id, 0); // enter on probation
+//!     }
+//!     fn on_hit(&mut self, tree: &mut PrefixTree, id: NodeId) {
+//!         tree.set_policy_meta(id, 1); // reuse earns protection
+//!     }
+//!     fn on_evict(&mut self, tree: &mut PrefixTree, id: NodeId) {
+//!         tree.set_policy_meta(id, 0); // survivors re-earn it
+//!     }
+//! }
+//!
+//! // Unregistered use:
+//! let engine = CacheEngine::with_policy(config, Box::new(Slru));
+//! ```
+//!
+//! Prefetch-target selection follows the same shape: implement
+//! [`prefetch::PrefetchStrategy::select_targets`] over the waiting
+//! queue's look-ahead window and register it in
+//! `prefetch::registry::parse`.
 
 pub mod chunk;
 pub mod engine;
 pub mod policy;
+pub mod prefetch;
 pub mod prefix_tree;
 pub mod store;
 pub mod tier;

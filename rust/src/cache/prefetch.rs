@@ -1,0 +1,224 @@
+//! Pluggable prefetch-target selection (paper §4.4).
+//!
+//! The serving loop watches the waiting queue's look-ahead window and
+//! asks a [`PrefetchStrategy`] which SSD-resident chunks are worth
+//! promoting to DRAM ahead of demand; the mover (`serve::prefetcher`)
+//! then owns channel bookkeeping and completion draining. Strategies
+//! are an open trait + name-based [`registry`], mirroring
+//! `cache::policy`:
+//!
+//! * `none` — prefetch disabled (the vLLM/CCache/SCCache baselines).
+//! * `queue-window` — the paper's strategy: every SSD-only chunk of
+//!   every queued request in the window, walked farthest-first so the
+//!   soonest request's demand loads queue behind the fewest strangers.
+//! * `depth-bounded[:N]` — like `queue-window` but only the first N
+//!   chunks of each request's chain (default 8): caps per-request SSD
+//!   read amplification when chains are long and DRAM is tight.
+
+use crate::cache::chunk::ChunkedSeq;
+use crate::cache::engine::CacheEngine;
+use crate::cache::prefix_tree::NodeId;
+
+/// Chunk-chain depth `depth-bounded` uses when no `:N` suffix is given.
+pub const DEFAULT_DEPTH: usize = 8;
+
+/// Selects which chunks the prefetcher should pull SSD→DRAM, given the
+/// waiting queue's look-ahead window. Object-safe; the serving engine
+/// holds a `Box<dyn PrefetchStrategy>` created by [`registry::parse`].
+pub trait PrefetchStrategy: std::fmt::Debug + Send {
+    /// Canonical (registry) name.
+    fn name(&self) -> &'static str;
+
+    /// Pick prefetch targets from `window` (queued requests' chunk
+    /// chains, soonest-served first). Returned nodes are SSD-resident
+    /// and absent from DRAM/GPU at selection time; the mover re-checks
+    /// residency and de-duplicates in-flight loads, so duplicates and
+    /// stale entries are tolerated.
+    fn select_targets(&self, window: &[&ChunkedSeq], cache: &CacheEngine) -> Vec<NodeId>;
+}
+
+/// No prefetching.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoPrefetch;
+
+impl PrefetchStrategy for NoPrefetch {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn select_targets(&self, _window: &[&ChunkedSeq], _cache: &CacheEngine) -> Vec<NodeId> {
+        Vec::new()
+    }
+}
+
+/// The paper's queue-based strategy (Algorithm 1's
+/// `SubmitSSDToCPULoad` over the whole window).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueueWindow;
+
+impl PrefetchStrategy for QueueWindow {
+    fn name(&self) -> &'static str {
+        "queue-window"
+    }
+
+    fn select_targets(&self, window: &[&ChunkedSeq], cache: &CacheEngine) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        for chain in window.iter().rev() {
+            out.extend(cache.prefetch_targets(&chain.keys));
+        }
+        out
+    }
+}
+
+/// `queue-window` restricted to each chain's first `depth` chunks.
+#[derive(Clone, Copy, Debug)]
+pub struct DepthBounded {
+    pub depth: usize,
+}
+
+impl PrefetchStrategy for DepthBounded {
+    fn name(&self) -> &'static str {
+        "depth-bounded"
+    }
+
+    fn select_targets(&self, window: &[&ChunkedSeq], cache: &CacheEngine) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        for chain in window.iter().rev() {
+            let take = chain.keys.len().min(self.depth);
+            out.extend(cache.prefetch_targets(&chain.keys[..take]));
+        }
+        out
+    }
+}
+
+/// Name-based strategy registry. `parse` is case-insensitive and
+/// accepts a `depth-bounded:<n>` parameterisation.
+pub mod registry {
+    use super::*;
+
+    /// Canonical names of every registered strategy.
+    pub const NAMES: [&str; 3] = ["none", "queue-window", "depth-bounded"];
+
+    /// Create a strategy by name (case-insensitive; `queue` is an
+    /// alias for `queue-window`; `depth-bounded:<n>` overrides the
+    /// default depth). Returns None for unregistered names or a
+    /// malformed/zero depth.
+    pub fn parse(name: &str) -> Option<Box<dyn PrefetchStrategy>> {
+        let lower = name.to_ascii_lowercase();
+        let strategy: Box<dyn PrefetchStrategy> = match lower.as_str() {
+            "none" => Box::new(NoPrefetch),
+            "queue-window" | "queue" => Box::new(QueueWindow),
+            "depth-bounded" => Box::new(DepthBounded { depth: DEFAULT_DEPTH }),
+            s => match s.strip_prefix("depth-bounded:") {
+                Some(d) => {
+                    let depth: usize = d.parse().ok()?;
+                    if depth == 0 {
+                        return None;
+                    }
+                    Box::new(DepthBounded { depth })
+                }
+                None => return None,
+            },
+        };
+        Some(strategy)
+    }
+
+    /// Comma-separated registered names (for error messages).
+    pub fn names_joined() -> String {
+        NAMES.join(", ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::chunk::ChunkedSeq;
+    use crate::cache::engine::{CacheConfig, CacheEngine};
+    use crate::cache::tier::Tier;
+
+    const CB: u64 = 100;
+
+    fn engine() -> CacheEngine {
+        CacheEngine::new(CacheConfig {
+            chunk_tokens: 4,
+            gpu_capacity: 100 * CB,
+            dram_capacity: 100 * CB,
+            ssd_capacity: 100 * CB,
+            policy: "lookahead-lru".into(),
+        })
+    }
+
+    fn chain(tag: u32, chunks: usize) -> ChunkedSeq {
+        let tokens: Vec<u32> = (0..(chunks * 4) as u32)
+            .map(|i| i.wrapping_mul(31).wrapping_add(tag * 1_000_003))
+            .collect();
+        ChunkedSeq::new(&tokens, 4)
+    }
+
+    fn insert_ssd(cache: &mut CacheEngine, c: &ChunkedSeq) {
+        let mut parent = None;
+        for key in &c.keys {
+            parent = cache.insert(parent, *key, CB, Tier::Ssd);
+            assert!(parent.is_some());
+        }
+    }
+
+    #[test]
+    fn none_selects_nothing() {
+        let mut cache = engine();
+        let a = chain(1, 3);
+        insert_ssd(&mut cache, &a);
+        let s = registry::parse("none").unwrap();
+        assert!(s.select_targets(&[&a], &cache).is_empty());
+    }
+
+    #[test]
+    fn queue_window_covers_all_ssd_chunks_farthest_first() {
+        let mut cache = engine();
+        let a = chain(1, 2);
+        let b = chain(2, 3);
+        insert_ssd(&mut cache, &a);
+        insert_ssd(&mut cache, &b);
+        let s = registry::parse("queue-window").unwrap();
+        let targets = s.select_targets(&[&a, &b], &cache);
+        assert_eq!(targets.len(), 5);
+        // farthest request (b) first
+        let b0 = cache.tree.get(b.keys[0]).unwrap();
+        assert_eq!(targets[0], b0);
+    }
+
+    #[test]
+    fn queue_window_skips_dram_resident() {
+        let mut cache = engine();
+        let a = chain(3, 3);
+        insert_ssd(&mut cache, &a);
+        let id0 = cache.tree.get(a.keys[0]).unwrap();
+        cache.promote(id0, Tier::Dram);
+        let s = registry::parse("queue-window").unwrap();
+        assert_eq!(s.select_targets(&[&a], &cache).len(), 2);
+    }
+
+    #[test]
+    fn depth_bounded_truncates_each_chain() {
+        let mut cache = engine();
+        let a = chain(4, 6);
+        insert_ssd(&mut cache, &a);
+        let s = registry::parse("depth-bounded:2").unwrap();
+        let targets = s.select_targets(&[&a], &cache);
+        assert_eq!(targets.len(), 2);
+        assert_eq!(targets[0], cache.tree.get(a.keys[0]).unwrap());
+    }
+
+    #[test]
+    fn registry_parse_and_aliases() {
+        for name in registry::NAMES {
+            assert_eq!(registry::parse(name).unwrap().name(), name);
+        }
+        assert_eq!(registry::parse("QUEUE-WINDOW").unwrap().name(), "queue-window");
+        assert_eq!(registry::parse("queue").unwrap().name(), "queue-window");
+        assert_eq!(registry::parse("depth-bounded:4").unwrap().name(), "depth-bounded");
+        assert!(registry::parse("depth-bounded:0").is_none());
+        assert!(registry::parse("depth-bounded:x").is_none());
+        assert!(registry::parse("bogus").is_none());
+    }
+}

@@ -42,6 +42,11 @@ pub struct Node {
     /// Look-ahead protection: leaf is skipped by look-ahead LRU while
     /// `boost_until > now` (scheduler bumps this from the waiting queue).
     pub boost_until: u64,
+    /// Policy-owned metadata slot. The tree never interprets it; the
+    /// configured `EvictionPolicy` reads/writes it through its
+    /// lifecycle hooks (e.g. SLRU's segment bit, LFUDA's cached
+    /// priority). Reset to 0 on (re-)insertion via `on_insert`.
+    pub policy_meta: u64,
 }
 
 /// The prefix tree + global key index.
@@ -133,6 +138,7 @@ impl PrefixTree {
             inserted_at: now,
             freq: 0,
             boost_until: 0,
+            policy_meta: 0,
         };
         let id = match self.free.pop() {
             Some(slot) => {
@@ -249,6 +255,11 @@ impl PrefixTree {
     pub fn boost(&mut self, id: NodeId, until: u64) {
         let n = self.node_mut(id);
         n.boost_until = n.boost_until.max(until);
+    }
+
+    /// Write the policy-owned metadata slot (see [`Node::policy_meta`]).
+    pub fn set_policy_meta(&mut self, id: NodeId, meta: u64) {
+        self.node_mut(id).policy_meta = meta;
     }
 
     pub fn pin(&mut self, id: NodeId) {

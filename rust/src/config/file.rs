@@ -58,12 +58,19 @@ impl Value {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error on line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 /// Flat config map: keys are `section.key` (or bare `key` before any
 /// section header).

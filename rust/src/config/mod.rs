@@ -32,12 +32,20 @@ pub struct ExperimentConfig {
     pub dram_bytes: u64,
     /// SSD KV capacity in bytes (0 = platform SSD budget).
     pub ssd_bytes: u64,
-    /// Eviction policy name (see `cache::policy::PolicyKind`).
+    /// Eviction policy name, resolved through
+    /// `cache::policy::registry` (case-insensitive). Empty = use the
+    /// system variant's default (e.g. `pcr` runs look-ahead LRU, the
+    /// baselines run LRU).
     pub policy: String,
     /// Look-ahead LRU horizon: queued requests examined for protection.
     pub lookahead_window: usize,
     /// Queue-based prefetch window (paper: 4; Fig 18 sweeps it).
     pub prefetch_window: usize,
+    /// Prefetch strategy name, resolved through
+    /// `cache::prefetch::registry` (case-insensitive;
+    /// `depth-bounded:<n>` is accepted). Empty = the system variant's
+    /// default (`queue-window` for prefetching systems, else `none`).
+    pub prefetch_strategy: String,
     /// Layer-wise overlap mode: `sync` | `only-up` | `only-down` | `up-down`.
     pub overlap: String,
     /// Use batched chunk copies (`cudaMemcpyBatchAsync` analogue).
@@ -81,9 +89,10 @@ impl Default for ExperimentConfig {
             gpu_bytes: 0,
             dram_bytes: 0,
             ssd_bytes: 0,
-            policy: "lookahead-lru".into(),
+            policy: String::new(),
             lookahead_window: 4,
             prefetch_window: 4,
+            prefetch_strategy: String::new(),
             overlap: "up-down".into(),
             batch_async: true,
             n_inputs: 1000,
@@ -134,7 +143,10 @@ impl ExperimentConfig {
             "cache.ssd_bytes" => self.ssd_bytes = need_f64()? as u64,
             "cache.policy" => self.policy = need_str()?,
             "cache.lookahead_window" => self.lookahead_window = need_f64()? as usize,
-            "cache.prefetch_window" => self.prefetch_window = need_f64()? as usize,
+            "cache.prefetch_window" | "prefetch.window" => {
+                self.prefetch_window = need_f64()? as usize
+            }
+            "prefetch.strategy" => self.prefetch_strategy = need_str()?,
             "cache.overlap" => self.overlap = need_str()?,
             "cache.batch_async" => self.batch_async = need_bool()?,
             "workload.n_inputs" => self.n_inputs = need_f64()? as usize,
@@ -166,7 +178,7 @@ impl ExperimentConfig {
 
     /// Sanity-check cross-field constraints.
     pub fn validate(&self) -> Result<()> {
-        use crate::cache::policy::PolicyKind;
+        use crate::cache::{policy, prefetch};
         use crate::hw::spec::{model_spec, platform_spec};
         use crate::sim::pipeline::OverlapMode;
         if model_spec(&self.model).is_none() {
@@ -175,8 +187,21 @@ impl ExperimentConfig {
         if platform_spec(&self.platform).is_none() {
             bail!("unknown platform '{}'", self.platform);
         }
-        if PolicyKind::parse(&self.policy).is_none() {
-            bail!("unknown policy '{}'", self.policy);
+        if !self.policy.is_empty() && policy::registry::parse(&self.policy).is_none() {
+            bail!(
+                "unknown policy '{}' (registered: {})",
+                self.policy,
+                policy::registry::names_joined()
+            );
+        }
+        if !self.prefetch_strategy.is_empty()
+            && prefetch::registry::parse(&self.prefetch_strategy).is_none()
+        {
+            bail!(
+                "unknown prefetch strategy '{}' (registered: {})",
+                self.prefetch_strategy,
+                prefetch::registry::names_joined()
+            );
         }
         if OverlapMode::parse(&self.overlap).is_none() {
             bail!("unknown overlap mode '{}'", self.overlap);
@@ -245,5 +270,47 @@ oversample = false
         let mut cfg = ExperimentConfig::default();
         cfg.overlap = "diagonal".into();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn policy_errors_list_registered_names() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = "arc".into();
+        let msg = format!("{:#}", cfg.validate().unwrap_err());
+        for name in crate::cache::policy::registry::NAMES {
+            assert!(msg.contains(name), "policy error missing '{name}': {msg}");
+        }
+        let mut cfg = ExperimentConfig::default();
+        cfg.prefetch_strategy = "psychic".into();
+        let msg = format!("{:#}", cfg.validate().unwrap_err());
+        for name in crate::cache::prefetch::registry::NAMES {
+            assert!(msg.contains(name), "strategy error missing '{name}': {msg}");
+        }
+    }
+
+    #[test]
+    fn policy_names_are_case_insensitive() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.policy = "SLRU".into();
+        cfg.prefetch_strategy = "Depth-Bounded:4".into();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn prefetch_section_keys() {
+        let text = r#"
+[cache]
+policy = "2q"
+[prefetch]
+strategy = "depth-bounded:2"
+window = 6
+"#;
+        let map = file::parse(text).unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.policy, "2q");
+        assert_eq!(cfg.prefetch_strategy, "depth-bounded:2");
+        assert_eq!(cfg.prefetch_window, 6);
+        cfg.validate().unwrap();
     }
 }

@@ -65,6 +65,8 @@ fn experiment_flags(cli: Cli) -> Cli {
         .opt("inputs", "250", "distinct dataset inputs")
         .opt("system", "pcr", "system variant (vllm|ccache|sccache|lmcache|pcr)")
         .opt("window", "4", "prefetch look-ahead window")
+        .opt("policy", "", "eviction policy override (see cache::policy::registry; empty = system default)")
+        .opt("prefetch-strategy", "", "prefetch strategy override (none|queue-window|depth-bounded[:N]; empty = system default)")
         .opt("seed", "20260710", "master seed")
         .switch("workload2", "sample without replacement (workload 2)")
 }
@@ -84,6 +86,15 @@ fn build_config(args: &pcr::util::cli::Args) -> ExperimentConfig {
     cfg.n_requests = args.usize_of("requests");
     cfg.n_inputs = args.usize_of("inputs");
     cfg.prefetch_window = args.usize_of("window");
+    // empty = keep the config file's value (or the system default)
+    let policy = args.get("policy").unwrap_or("");
+    if !policy.is_empty() {
+        cfg.policy = policy.to_string();
+    }
+    let strategy = args.get("prefetch-strategy").unwrap_or("");
+    if !strategy.is_empty() {
+        cfg.prefetch_strategy = strategy.to_string();
+    }
     cfg.seed = args.parse_as("seed").unwrap();
     cfg.oversample = !args.flag("workload2");
     // CLI-scale corpus (full paper scale lives in the benches)
@@ -114,10 +125,11 @@ fn cmd_sim(argv: &[String]) -> i32 {
         wl.mean_input_tokens,
         wl.repetition_ratio * 100.0
     );
-    let spec = SystemSpec::named(&cfg.system, cfg.prefetch_window).expect("validated");
+    let spec = SystemSpec::from_config(&cfg).expect("validated");
     let out = engine::run(&cfg, &spec, &wl);
-    println!("system={} model={} platform={} rate={}",
-             out.system, cfg.model, cfg.platform, cfg.rate);
+    println!("system={} model={} platform={} rate={} policy={} prefetch={}",
+             out.system, cfg.model, cfg.platform, cfg.rate,
+             spec.policy, spec.prefetch_strategy);
     println!("{}", out.report.pretty());
     println!(
         "cache: hit-ratio {:.1}%  (gpu {} dram {} ssd {} chunks)  prefetch {}/{} (dropped {})",
@@ -145,6 +157,7 @@ fn cmd_compare(argv: &[String]) -> i32 {
         "hit%", "reuse%",
     ]);
     for spec in SystemSpec::all_baselines(cfg.prefetch_window) {
+        let spec = spec.with_overrides(&cfg.policy, &cfg.prefetch_strategy);
         let out = engine::run(&cfg, &spec, &wl);
         table.row(&[
             out.system.to_string(),
@@ -166,6 +179,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt("dram-chunks", "64", "DRAM tier size in chunks")
         .opt("ssd-chunks", "512", "SSD tier size in chunks")
         .opt("spill-dir", "/tmp/pcr-spill", "SSD tier directory")
+        .opt("policy", "lookahead-lru", "eviction policy (see cache::policy::registry)")
         .opt("workers", "4", "HTTP worker threads")
         .opt("corpus-docs", "300", "retriever corpus size (0 = no /rag route)");
     let args = match cli.parse(argv) {
@@ -184,9 +198,10 @@ fn cmd_serve(argv: &[String]) -> i32 {
     let dram = args.parse_as::<u64>("dram-chunks").unwrap();
     let ssd = args.parse_as::<u64>("ssd-chunks").unwrap();
     let spill = std::path::PathBuf::from(args.get("spill-dir").unwrap());
+    let policy = args.get("policy").unwrap().to_string();
     let vocab = manifest.vocab as u32;
     let executor = match pcr::runtime::executor::ExecutorHandle::spawn(move || {
-        pcr::runtime::executor::PjrtExecutor::new(manifest, dram, ssd, Some(&spill))
+        pcr::runtime::executor::PjrtExecutor::new(manifest, dram, ssd, Some(&spill), &policy)
     }) {
         Ok(e) => e,
         Err(e) => {

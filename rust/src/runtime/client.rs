@@ -14,6 +14,12 @@ use crate::runtime::manifest::Manifest;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 
+// Default build: the in-crate stub (fails at client creation with a
+// clear message). `--features pjrt` resolves `xla::` against the real
+// xla-rs crate instead (which must then be added as a dependency).
+#[cfg(not(feature = "pjrt"))]
+use crate::runtime::xla_shim as xla;
+
 /// Outputs of one prefill call.
 #[derive(Debug)]
 pub struct PrefillOut {

@@ -5,7 +5,7 @@
 
 use crate::cache::chunk::ChunkedSeq;
 use crate::cache::engine::{CacheConfig, CacheEngine};
-use crate::cache::policy::PolicyKind;
+use crate::cache::policy::registry as policy_registry;
 use crate::cache::store::{ChunkStore, FileStore, MemStore};
 use crate::cache::tier::Tier;
 use crate::runtime::client::{PjrtModel, PrefillOut};
@@ -42,16 +42,25 @@ pub struct PjrtExecutor {
 
 impl PjrtExecutor {
     /// `dram_chunks`/`ssd_chunks` size the tiers in whole chunks.
-    /// `spill_dir = None` disables the SSD tier.
+    /// `spill_dir = None` disables the SSD tier. `policy` is an
+    /// eviction-policy registry name (empty = `lookahead-lru`).
     pub fn new(
         manifest: Manifest,
         dram_chunks: u64,
         ssd_chunks: u64,
         spill_dir: Option<&Path>,
+        policy: &str,
     ) -> Result<PjrtExecutor> {
         let chunk_tokens = manifest.chunk_tokens;
         let dims = manifest.kv_dims();
         let chunk_bytes = dims.chunk_bytes(chunk_tokens) as u64;
+        let policy = if policy.is_empty() { "lookahead-lru" } else { policy };
+        anyhow::ensure!(
+            policy_registry::parse(policy).is_some(),
+            "unknown eviction policy '{}' (registered: {})",
+            policy,
+            policy_registry::names_joined()
+        );
         let model = PjrtModel::load(manifest)?;
         let ssd = match spill_dir {
             Some(dir) if ssd_chunks > 0 => Some(FileStore::new(dir)?),
@@ -62,7 +71,7 @@ impl PjrtExecutor {
             gpu_capacity: 0, // the CPU PJRT device has no separate HBM tier
             dram_capacity: dram_chunks * chunk_bytes,
             ssd_capacity: if ssd.is_some() { ssd_chunks * chunk_bytes } else { 0 },
-            policy: PolicyKind::LookaheadLru,
+            policy: policy.to_string(),
         });
         Ok(PjrtExecutor {
             model,
@@ -383,7 +392,7 @@ mod tests {
     fn executor(dram_chunks: u64) -> Option<PjrtExecutor> {
         let manifest = Manifest::load(default_artifacts_dir()).ok()?;
         let dir = std::env::temp_dir().join(format!("pcr-exec-{}", std::process::id()));
-        Some(PjrtExecutor::new(manifest, dram_chunks, 64, Some(&dir)).unwrap())
+        Some(PjrtExecutor::new(manifest, dram_chunks, 64, Some(&dir), "").unwrap())
     }
 
     fn input(seed: u64, len: usize) -> Vec<u32> {

@@ -7,3 +7,5 @@ pub mod client;
 pub mod executor;
 pub mod kv;
 pub mod manifest;
+#[cfg(not(feature = "pjrt"))]
+pub mod xla_shim;

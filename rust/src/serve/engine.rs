@@ -9,6 +9,7 @@
 //! "all methods share vLLM as their common backbone".
 
 use crate::cache::engine::{CacheConfig, CacheEngine, CacheStats};
+use crate::cache::prefetch;
 use crate::cache::tier::Tier;
 use crate::config::ExperimentConfig;
 use crate::hw::spec::{model_spec, platform_spec, ModelSpec, PlatformSpec};
@@ -77,7 +78,7 @@ pub fn cache_config(
         } else {
             0
         },
-        policy: spec.policy,
+        policy: spec.policy.clone(),
     }
 }
 
@@ -89,6 +90,13 @@ pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> Ru
     let mut fabric = TransferFabric::new(&platform);
     let exec = SimExecutor::new(&model, &platform, cfg.chunk_tokens);
     let mut prefetcher = SimPrefetcher::new();
+    let strategy = prefetch::registry::parse(&spec.prefetch_strategy).unwrap_or_else(|| {
+        panic!(
+            "unknown prefetch strategy '{}' (registered: {})",
+            spec.prefetch_strategy,
+            prefetch::registry::names_joined()
+        )
+    });
     let mut metrics = MetricsCollector::new();
     let mut breakdown = RunBreakdown::default();
     let chunk_bytes = model.kv_bytes_per_token() * cfg.chunk_tokens as u64;
@@ -143,14 +151,14 @@ pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> Ru
             apply_lookahead(&mut cache, chains.into_iter().rev(), boost_horizon);
         }
         if spec.prefetch_window > 0 && spec.ssd_tier {
-            let chains: Vec<_> = waiting
-                .window(spec.prefetch_window)
-                .rev()
-                .map(|r| r.chain.clone())
-                .collect();
-            for chain in chains {
-                prefetcher.submit_chain(&cache, &mut fabric.ssd_read, clock, &chain.keys);
-            }
+            let targets = {
+                let window: Vec<&crate::cache::chunk::ChunkedSeq> = waiting
+                    .window(spec.prefetch_window)
+                    .map(|r| r.chain.as_ref())
+                    .collect();
+                strategy.select_targets(&window, &cache)
+            };
+            prefetcher.submit_targets(&cache, &mut fabric.ssd_read, clock, &targets);
         }
         prefetcher.drain(&mut cache, clock);
 
@@ -380,6 +388,26 @@ mod tests {
             assert_eq!(out.report.finished, 120, "{sys}");
             assert!(out.report.ttft.mean > 0.0, "{sys}");
             assert!(out.virtual_duration > 0.0, "{sys}");
+        }
+    }
+
+    #[test]
+    fn every_policy_x_strategy_combination_finishes() {
+        let cfg = test_cfg("pcr", 0.8);
+        let wl = Workload::build(&cfg);
+        for (policy, strategy) in [
+            ("slru", "queue-window"),
+            ("2q", "depth-bounded:2"),
+            ("lfuda", "none"),
+            ("lookahead-slru", "depth-bounded"),
+            ("pgdsf", "queue-window"),
+        ] {
+            let spec = SystemSpec::named("pcr", cfg.prefetch_window)
+                .unwrap()
+                .with_overrides(policy, strategy);
+            let out = run(&cfg, &spec, &wl);
+            assert_eq!(out.report.finished, 120, "{policy} x {strategy}");
+            assert!(out.report.ttft.mean > 0.0, "{policy} x {strategy}");
         }
     }
 

@@ -1,10 +1,15 @@
-//! Queue-based SSD→DRAM prefetcher (paper §4.4, Fig 12).
+//! Queue-based SSD→DRAM prefetcher (paper §4.4, Fig 12): the *mover*
+//! half of prefetching.
 //!
-//! Watches the waiting queue's look-ahead window, finds chunks that are
-//! on SSD but not in DRAM, and submits asynchronous loads on the SSD
-//! read channel. Demand loads for the request being scheduled share the
-//! same FIFO channel, so prefetch backlog and demand traffic contend —
-//! exactly the trade-off the paper's bounded window manages.
+//! Target selection is the pluggable half — a
+//! [`PrefetchStrategy`](crate::cache::prefetch::PrefetchStrategy)
+//! inspects the waiting queue's look-ahead window and hands this mover
+//! the SSD-resident chunks worth promoting; the mover submits
+//! asynchronous loads on the SSD read channel, de-duplicates in-flight
+//! work, and drains completions into DRAM. Demand loads for the request
+//! being scheduled share the same FIFO channel, so prefetch backlog and
+//! demand traffic contend — exactly the trade-off the paper's bounded
+//! window manages.
 
 use crate::cache::engine::CacheEngine;
 use crate::cache::prefix_tree::NodeId;
@@ -28,19 +33,24 @@ impl SimPrefetcher {
         Self::default()
     }
 
-    /// Submit prefetch loads for every SSD-resident chunk of `chain`
-    /// (Algorithm 1's `SubmitSSDToCPULoad`), skipping chunks already in
-    /// flight. Returns the number of new submissions.
-    pub fn submit_chain(
+    /// Submit loads for strategy-selected `targets`, skipping chunks
+    /// already in flight and (defensively) targets that are no longer
+    /// SSD-only — a strategy may hand back stale or duplicate entries.
+    /// Returns the number of new submissions.
+    pub fn submit_targets(
         &mut self,
         cache: &CacheEngine,
         ssd_read: &mut Channel,
         now: f64,
-        chain: &[crate::cache::chunk::ChunkKey],
+        targets: &[NodeId],
     ) -> usize {
         let mut n = 0;
-        for id in cache.prefetch_targets(chain) {
+        for &id in targets {
             if self.inflight.contains_key(&id) {
+                continue;
+            }
+            let t = cache.tree.node(id).tiers;
+            if !t.contains(Tier::Ssd) || t.contains(Tier::Dram) || t.contains(Tier::Gpu) {
                 continue;
             }
             let bytes = cache.tree.node(id).bytes;
@@ -50,6 +60,20 @@ impl SimPrefetcher {
             n += 1;
         }
         n
+    }
+
+    /// Submit prefetch loads for every SSD-resident chunk of `chain`
+    /// (Algorithm 1's `SubmitSSDToCPULoad`) — the single-chain
+    /// convenience the `queue-window` strategy generalises.
+    pub fn submit_chain(
+        &mut self,
+        cache: &CacheEngine,
+        ssd_read: &mut Channel,
+        now: f64,
+        chain: &[crate::cache::chunk::ChunkKey],
+    ) -> usize {
+        let targets = cache.prefetch_targets(chain);
+        self.submit_targets(cache, ssd_read, now, &targets)
     }
 
     /// If `id` is being prefetched, when will it land in DRAM?
@@ -92,7 +116,6 @@ mod tests {
     use super::*;
     use crate::cache::chunk::{chain_hash, ChunkKey};
     use crate::cache::engine::{CacheConfig, CacheEngine};
-    use crate::cache::policy::PolicyKind;
 
     const CB: u64 = 1_000_000; // 1 MB chunks
 
@@ -102,7 +125,7 @@ mod tests {
             gpu_capacity: 100 * CB,
             dram_capacity: 3 * CB,
             ssd_capacity: 100 * CB,
-            policy: PolicyKind::LookaheadLru,
+            policy: "lookahead-lru".into(),
         });
         (cache, Channel::new("ssd-read", 0.001, 0.0)) // 1 MB/s => 1s per chunk
     }
@@ -187,6 +210,21 @@ mod tests {
         assert!(in_dram <= 3, "in_dram={in_dram}");
         assert!(in_dram >= 1);
         cache.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn stale_and_duplicate_targets_are_skipped() {
+        let (mut cache, mut ch) = setup();
+        let keys = chain(&mut cache, 6, 2);
+        let ids: Vec<NodeId> = keys
+            .iter()
+            .map(|k| cache.tree.get(*k).unwrap())
+            .collect();
+        cache.promote(ids[0], Tier::Dram); // no longer SSD-only
+        let mut pf = SimPrefetcher::new();
+        let n = pf.submit_targets(&cache, &mut ch, 0.0, &[ids[0], ids[1], ids[1]]);
+        assert_eq!(n, 1, "stale + in-call duplicate must be skipped");
+        assert_eq!(pf.submitted, 1);
     }
 
     #[test]

@@ -86,7 +86,6 @@ pub fn apply_lookahead<'a>(
 mod tests {
     use super::*;
     use crate::cache::engine::CacheConfig;
-    use crate::cache::policy::PolicyKind;
 
     const CB: u64 = 1000; // bytes per chunk in these tests
 
@@ -96,7 +95,7 @@ mod tests {
             gpu_capacity: 100 * CB,
             dram_capacity: 100 * CB,
             ssd_capacity: 100 * CB,
-            policy: PolicyKind::LookaheadLru,
+            policy: "lookahead-lru".into(),
         })
     }
 

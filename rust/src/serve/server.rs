@@ -276,7 +276,7 @@ mod tests {
         };
         let dir = std::env::temp_dir().join(format!("pcr-http-{}", std::process::id()));
         let executor = ExecutorHandle::spawn(move || {
-            crate::runtime::executor::PjrtExecutor::new(manifest, 32, 64, Some(&dir))
+            crate::runtime::executor::PjrtExecutor::new(manifest, 32, 64, Some(&dir), "")
         })
         .unwrap();
         let state = ServerState {

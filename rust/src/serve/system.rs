@@ -5,18 +5,23 @@
 //! transfers overlap, whether the queue drives prefetch, and the
 //! eviction policy — exactly how the paper frames its baselines:
 //!
-//! | variant  | DRAM | SSD | overlap  | prefetch | policy        |
-//! |----------|------|-----|----------|----------|---------------|
-//! | vllm     |  –   |  –  | –        | –        | LRU (GPU)     |
-//! | ccache   |  ✓   |  –  | sync     | –        | LRU           |
-//! | sccache  |  ✓   |  ✓  | sync     | –        | LRU           |
-//! | lmcache  |  ✓   |  ✓  | only-up  | window 1 | LRU           |
-//! | pcr      |  ✓   |  ✓  | up-down  | window W | look-ahead LRU|
+//! | variant  | DRAM | SSD | overlap  | prefetch     | policy        |
+//! |----------|------|-----|----------|--------------|---------------|
+//! | vllm     |  –   |  –  | –        | none         | LRU (GPU)     |
+//! | ccache   |  ✓   |  –  | sync     | none         | LRU           |
+//! | sccache  |  ✓   |  ✓  | sync     | none         | LRU           |
+//! | lmcache  |  ✓   |  ✓  | only-up  | queue (w=1)  | LRU           |
+//! | pcr      |  ✓   |  ✓  | up-down  | queue (w=W)  | look-ahead LRU|
+//!
+//! Policy and strategy are registry *names* (see `cache::policy` and
+//! `cache::prefetch`), so any registered combination — e.g. `slru` ×
+//! `depth-bounded:4` — is one [`SystemSpec`] field (or one config/CLI
+//! knob via [`SystemSpec::from_config`]) away.
 //!
 //! Table 1's arms: `pcr_base` (tiers only, sync, no prefetch),
 //! `pcr_overlap` (+layer-wise overlap), `pcr` (+queue prefetch).
 
-use crate::cache::policy::PolicyKind;
+use crate::config::ExperimentConfig;
 use crate::sim::pipeline::OverlapMode;
 
 /// Behaviour switches of one serving system.
@@ -30,7 +35,10 @@ pub struct SystemSpec {
     pub prefetch_window: usize,
     /// Look-ahead LRU protection from the waiting queue.
     pub lookahead_lru: bool,
-    pub policy: PolicyKind,
+    /// Eviction policy registry name (`cache::policy::registry`).
+    pub policy: String,
+    /// Prefetch strategy registry name (`cache::prefetch::registry`).
+    pub prefetch_strategy: String,
     /// Batched chunk copies (`cudaMemcpyBatchAsync`) vs block-by-block.
     pub batch_async: bool,
 }
@@ -46,7 +54,8 @@ impl SystemSpec {
                 overlap: OverlapMode::Sync,
                 prefetch_window: 0,
                 lookahead_lru: false,
-                policy: PolicyKind::Lru,
+                policy: "lru".into(),
+                prefetch_strategy: "none".into(),
                 batch_async: false,
             },
             "ccache" => SystemSpec {
@@ -56,7 +65,8 @@ impl SystemSpec {
                 overlap: OverlapMode::Sync,
                 prefetch_window: 0,
                 lookahead_lru: false,
-                policy: PolicyKind::Lru,
+                policy: "lru".into(),
+                prefetch_strategy: "none".into(),
                 batch_async: false,
             },
             "sccache" => SystemSpec {
@@ -66,7 +76,8 @@ impl SystemSpec {
                 overlap: OverlapMode::Sync,
                 prefetch_window: 0,
                 lookahead_lru: false,
-                policy: PolicyKind::Lru,
+                policy: "lru".into(),
+                prefetch_strategy: "none".into(),
                 batch_async: false,
             },
             "lmcache" => SystemSpec {
@@ -76,7 +87,8 @@ impl SystemSpec {
                 overlap: OverlapMode::OnlyUp,
                 prefetch_window: 1,
                 lookahead_lru: false,
-                policy: PolicyKind::Lru,
+                policy: "lru".into(),
+                prefetch_strategy: "queue-window".into(),
                 batch_async: true,
             },
             "pcr" => SystemSpec {
@@ -86,12 +98,37 @@ impl SystemSpec {
                 overlap: OverlapMode::UpDown,
                 prefetch_window,
                 lookahead_lru: true,
-                policy: PolicyKind::LookaheadLru,
+                policy: "lookahead-lru".into(),
+                prefetch_strategy: "queue-window".into(),
                 batch_async: true,
             },
             _ => return None,
         };
         Some(spec)
+    }
+
+    /// Apply experiment-config overrides: an empty name keeps the
+    /// system's default, so `cache.policy = "slru"` in a TOML file (or
+    /// `--policy slru` on the CLI) swaps eviction without touching the
+    /// rest of the variant. A policy override whose name starts with
+    /// `lookahead` also enables the queue-driven boost pass it needs.
+    pub fn with_overrides(mut self, policy: &str, prefetch_strategy: &str) -> SystemSpec {
+        if !policy.is_empty() {
+            self.policy = policy.to_ascii_lowercase();
+            self.lookahead_lru = self.policy.starts_with("lookahead");
+        }
+        if !prefetch_strategy.is_empty() {
+            self.prefetch_strategy = prefetch_strategy.to_ascii_lowercase();
+        }
+        self
+    }
+
+    /// The spec for `cfg.system` with `cfg`'s policy / prefetch
+    /// strategy / window applied — the one-knob path from a validated
+    /// config to any policy×strategy combination.
+    pub fn from_config(cfg: &ExperimentConfig) -> Option<SystemSpec> {
+        Self::named(&cfg.system, cfg.prefetch_window)
+            .map(|s| s.with_overrides(&cfg.policy, &cfg.prefetch_strategy))
     }
 
     /// Table 1 ablation arms (cumulative).
@@ -142,6 +179,7 @@ mod tests {
     fn named_variants_match_paper_table() {
         let v = SystemSpec::named("vllm", 4).unwrap();
         assert!(!v.dram_tier && !v.ssd_tier);
+        assert_eq!(v.prefetch_strategy, "none");
         let c = SystemSpec::named("ccache", 4).unwrap();
         assert!(c.dram_tier && !c.ssd_tier);
         assert_eq!(c.overlap, OverlapMode::Sync);
@@ -150,7 +188,8 @@ mod tests {
         let p = SystemSpec::named("pcr", 6).unwrap();
         assert_eq!(p.prefetch_window, 6);
         assert!(p.lookahead_lru);
-        assert_eq!(p.policy, PolicyKind::LookaheadLru);
+        assert_eq!(p.policy, "lookahead-lru");
+        assert_eq!(p.prefetch_strategy, "queue-window");
         assert!(SystemSpec::named("orca", 4).is_none());
     }
 
@@ -171,5 +210,31 @@ mod tests {
     #[test]
     fn all_baselines_count() {
         assert_eq!(SystemSpec::all_baselines(4).len(), 5);
+    }
+
+    #[test]
+    fn config_overrides_swap_policy_and_strategy() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = "pcr".into();
+        cfg.policy = "SLRU".into();
+        cfg.prefetch_strategy = "depth-bounded:4".into();
+        let spec = SystemSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.policy, "slru");
+        assert!(!spec.lookahead_lru, "non-lookahead policy disables boosting");
+        assert_eq!(spec.prefetch_strategy, "depth-bounded:4");
+
+        // lookahead-family override re-enables the boost pass, even on
+        // a baseline that never boosts by default
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = "sccache".into();
+        cfg.policy = "lookahead-slru".into();
+        let spec = SystemSpec::from_config(&cfg).unwrap();
+        assert!(spec.lookahead_lru);
+
+        // empty overrides keep system defaults
+        let cfg = ExperimentConfig::default();
+        let spec = SystemSpec::from_config(&cfg).unwrap();
+        assert_eq!(spec.policy, "lookahead-lru");
+        assert_eq!(spec.prefetch_strategy, "queue-window");
     }
 }

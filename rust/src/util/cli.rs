@@ -4,17 +4,26 @@
 
 use std::collections::BTreeMap;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag --{0}")]
     Unknown(String),
-    #[error("flag --{0} expects a value")]
     MissingValue(String),
-    #[error("invalid value for --{0}: {1}")]
     Invalid(String, String),
-    #[error("help requested")]
     Help,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(n) => write!(f, "unknown flag --{n}"),
+            CliError::MissingValue(n) => write!(f, "flag --{n} expects a value"),
+            CliError::Invalid(n, v) => write!(f, "invalid value for --{n}: {v}"),
+            CliError::Help => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 #[derive(Clone, Debug)]
 struct FlagSpec {
