@@ -2,8 +2,9 @@
 //!
 //! These are the before/after probes for the optimization pass recorded
 //! in EXPERIMENTS.md §Perf: prefix-tree matching, eviction-candidate
-//! scans, movement planning, pipeline makespan, a full engine step, and
-//! the substrate hot spots (HNSW search, JSON, PRNG).
+//! scans, movement planning, pipeline makespan, a full engine step, the
+//! substrate hot spots (HNSW search, JSON, PRNG), and the dual-lane
+//! transfer engine's demand-vs-prefetch contention on real disk (Fig 12).
 
 use pcr::bench::{black_box, section, Bench};
 use pcr::cache::chunk::{chain_hash, ChunkKey, ChunkedSeq};
@@ -146,6 +147,82 @@ fn main() {
         let mut rng = Rng::new(7);
         let r = Bench::new("rng exponential").run(|| black_box(rng.exponential(0.8)));
         println!("{}", r.line());
+    }
+
+    section("perf: tiered-transfer engine on real disk (Fig 12 contention)");
+    {
+        use pcr::cache::store::{ChunkStore, FileStore};
+        use pcr::io::{FetchSource, IoConfig, Lane, TransferEngine};
+        use std::sync::{Arc, RwLock};
+        use std::time::Duration;
+
+        const TIMEOUT: Duration = Duration::from_secs(10);
+        let dir = std::env::temp_dir().join(format!("pcr-bench-io-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut store = FileStore::new(&dir).expect("temp spill dir");
+        let chunk_bytes = 256 * 1024usize;
+        let blob = vec![0xA5u8; chunk_bytes];
+        // Disjoint key sets so the prefetch flood never dedups against
+        // the demand probes: the contention is purely for workers/disk.
+        let demand_keys: Vec<ChunkKey> =
+            (0..128).map(|i| chain_hash(ChunkKey::ROOT, &[1, i as u32])).collect();
+        let prefetch_keys: Vec<ChunkKey> =
+            (0..128).map(|i| chain_hash(ChunkKey::ROOT, &[2, i as u32])).collect();
+        for k in demand_keys.iter().chain(&prefetch_keys) {
+            store.put(*k, &blob).expect("seed spill chunk");
+        }
+        let source = Arc::new(RwLock::new(store));
+        let engine = TransferEngine::new(
+            IoConfig { workers: 4, demand_depth: 64, prefetch_depth: 512 },
+            source.clone() as Arc<dyn FetchSource>,
+        );
+
+        // (a) demand-fetch latency with an idle prefetch lane
+        let mut i = 0;
+        let idle = Bench::new("demand fetch 256 KiB (prefetch lane idle)")
+            .min_time(1.0)
+            .run(|| {
+                let k = demand_keys[i % demand_keys.len()];
+                i += 1;
+                engine.submit(k, Lane::Demand);
+                let c = engine.take_blocking(k, TIMEOUT).expect("demand completion");
+                black_box(c.data.expect("spill read").len())
+            });
+        println!("{}", idle.line());
+
+        // (b) same probe while the prefetch lane is saturated: top the
+        // queue up with background reads each iteration and let the
+        // demand submit cut the line. Fig 12's trade-off — priority
+        // keeps the slowdown at "one in-flight read", not "queue depth".
+        let mut i = 0;
+        let mut j = 0;
+        let busy = Bench::new("demand fetch 256 KiB (prefetch lane saturated)")
+            .min_time(1.0)
+            .run(|| {
+                for _ in 0..8 {
+                    engine.submit(prefetch_keys[j % prefetch_keys.len()], Lane::Prefetch);
+                    j += 1;
+                }
+                let k = demand_keys[i % demand_keys.len()];
+                i += 1;
+                engine.submit(k, Lane::Demand);
+                let c = engine.take_blocking(k, TIMEOUT).expect("demand completion");
+                engine.drain(); // keep the completion queue from pooling
+                black_box(c.data.expect("spill read").len())
+            });
+        println!("{}", busy.line());
+        println!(
+            "  -> contention slowdown: {:.2}x (demand preempts at queue granularity)",
+            busy.mean_ns / idle.mean_ns
+        );
+
+        engine.wait_quiescent(TIMEOUT);
+        engine.drain();
+        let stats = engine.stats();
+        println!("  {}", stats.pretty().replace('\n', "\n  "));
+        drop(engine);
+        drop(source);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }
 

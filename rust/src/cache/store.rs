@@ -72,28 +72,61 @@ pub struct FileStore {
 }
 
 impl FileStore {
+    /// Open (or create) a spill directory. Existing `*.kv` files from a
+    /// previous process are adopted into the index, so restarts see the
+    /// true SSD occupancy instead of undercounting `bytes_used` and
+    /// over-admitting spills; leftover `*.kv.tmp` files are torn writes
+    /// from a crash and are swept.
     pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)
             .with_context(|| format!("creating spill dir {dir:?}"))?;
-        Ok(FileStore {
-            dir,
-            index: HashMap::new(),
-            bytes: 0,
-        })
+        let mut index = HashMap::new();
+        let mut bytes = 0u64;
+        for entry in std::fs::read_dir(&dir)
+            .with_context(|| format!("scanning spill dir {dir:?}"))?
+        {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if name.ends_with(".kv.tmp") {
+                let _ = std::fs::remove_file(entry.path());
+                continue;
+            }
+            let Some(hex) = name.strip_suffix(".kv") else { continue };
+            let Ok(key) = u64::from_str_radix(hex, 16) else { continue };
+            let len = entry.metadata()?.len();
+            index.insert(ChunkKey(key), len);
+            bytes += len;
+        }
+        Ok(FileStore { dir, index, bytes })
     }
 
     fn path(&self, key: ChunkKey) -> PathBuf {
         self.dir.join(format!("{:016x}.kv", key.0))
     }
+
+    /// Keys currently indexed (restart reconciliation / store sweeps).
+    pub fn keys(&self) -> Vec<ChunkKey> {
+        self.index.keys().copied().collect()
+    }
 }
 
 impl ChunkStore for FileStore {
+    /// Crash-safe write: bytes go to a `.kv.tmp` sidecar first and are
+    /// renamed into place, so a torn write can never leave a truncated
+    /// chunk that a later `get` would return as valid KV bytes.
     fn put(&mut self, key: ChunkKey, data: &[u8]) -> Result<()> {
         let path = self.path(key);
-        let mut f = std::fs::File::create(&path)
-            .with_context(|| format!("creating {path:?}"))?;
-        f.write_all(data)?;
+        let tmp = path.with_extension("kv.tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {tmp:?}"))?;
+            f.write_all(data)?;
+            f.sync_all().ok(); // best effort on test filesystems
+        }
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming {tmp:?} into place"))?;
         if let Some(old) = self.index.insert(key, data.len() as u64) {
             self.bytes -= old;
         }
@@ -180,6 +213,51 @@ mod tests {
             .map(|d| d.count())
             .unwrap_or(0);
         assert_eq!(remaining, 0);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn file_store_reconciles_on_restart() {
+        let dir = std::env::temp_dir().join(format!("pcr-store-restart-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = FileStore::new(&dir).unwrap();
+        s.put(key(1), &[1; 100]).unwrap();
+        s.put(key(2), &[2; 50]).unwrap();
+        // simulate a crash: skip Drop so the spill files survive
+        std::mem::forget(s);
+        // ...including a torn write that never got renamed into place
+        std::fs::write(dir.join("00000000000000ff.kv.tmp"), [0u8; 7]).unwrap();
+        let s2 = FileStore::new(&dir).unwrap();
+        assert_eq!(s2.bytes_used(), 150, "restart must adopt existing spill bytes");
+        assert!(s2.contains(key(1)) && s2.contains(key(2)));
+        assert_eq!(s2.get(key(2)).unwrap().unwrap(), vec![2u8; 50]);
+        assert_eq!(s2.keys().len(), 2);
+        assert!(
+            !dir.join("00000000000000ff.kv.tmp").exists(),
+            "torn writes must be swept, not adopted"
+        );
+        drop(s2);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn put_is_atomic_rename_no_tmp_left() {
+        let dir = std::env::temp_dir().join(format!("pcr-store-atomic-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = FileStore::new(&dir).unwrap();
+        for i in 0..8 {
+            s.put(key(i), &[i as u8; 64]).unwrap();
+        }
+        let tmp_left = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .count();
+        assert_eq!(tmp_left, 0);
+        // overwrite goes through the same rename path
+        s.put(key(3), &[9; 16]).unwrap();
+        assert_eq!(s.get(key(3)).unwrap().unwrap(), vec![9u8; 16]);
+        drop(s);
         let _ = std::fs::remove_dir(&dir);
     }
 

@@ -51,6 +51,15 @@ pub struct ExperimentConfig {
     /// Use batched chunk copies (`cudaMemcpyBatchAsync` analogue).
     pub batch_async: bool,
 
+    // --- transfer engine (`[io]` section) ---
+    /// Dedicated I/O worker threads for the real-path transfer engine.
+    pub io_workers: usize,
+    /// Bound on queued demand tickets (backpressure beyond it).
+    pub io_demand_depth: usize,
+    /// Bound on in-flight prefetch loads (both the real engine's queue
+    /// and the simulator's in-flight window).
+    pub io_prefetch_depth: usize,
+
     // --- workload (paper §6.1) ---
     /// Distinct inputs in the dataset (paper: 1000 / 2000).
     pub n_inputs: usize,
@@ -95,6 +104,9 @@ impl Default for ExperimentConfig {
             prefetch_strategy: String::new(),
             overlap: "up-down".into(),
             batch_async: true,
+            io_workers: 2,
+            io_demand_depth: 64,
+            io_prefetch_depth: 64,
             n_inputs: 1000,
             oversample: true,
             n_requests: 2000,
@@ -149,6 +161,9 @@ impl ExperimentConfig {
             "prefetch.strategy" => self.prefetch_strategy = need_str()?,
             "cache.overlap" => self.overlap = need_str()?,
             "cache.batch_async" => self.batch_async = need_bool()?,
+            "io.workers" => self.io_workers = need_f64()? as usize,
+            "io.demand_depth" => self.io_demand_depth = need_f64()? as usize,
+            "io.prefetch_depth" => self.io_prefetch_depth = need_f64()? as usize,
             "workload.n_inputs" => self.n_inputs = need_f64()? as usize,
             "workload.oversample" => self.oversample = need_bool()?,
             "workload.n_requests" => self.n_requests = need_f64()? as usize,
@@ -215,7 +230,19 @@ impl ExperimentConfig {
         if self.chunk_tokens == 0 || self.rate <= 0.0 || self.n_requests == 0 {
             bail!("degenerate workload parameters");
         }
+        if self.io_workers == 0 || self.io_demand_depth == 0 || self.io_prefetch_depth == 0 {
+            bail!("io.workers / io.demand_depth / io.prefetch_depth must be >= 1");
+        }
         Ok(())
+    }
+
+    /// Transfer-engine sizing from the `[io]` section.
+    pub fn io_config(&self) -> crate::io::IoConfig {
+        crate::io::IoConfig {
+            workers: self.io_workers,
+            demand_depth: self.io_demand_depth,
+            prefetch_depth: self.io_prefetch_depth,
+        }
     }
 }
 
@@ -294,6 +321,29 @@ oversample = false
         cfg.policy = "SLRU".into();
         cfg.prefetch_strategy = "Depth-Bounded:4".into();
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn io_section_keys() {
+        let text = r#"
+[io]
+workers = 4
+demand_depth = 32
+prefetch_depth = 128
+"#;
+        let map = file::parse(text).unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.io_workers, 4);
+        assert_eq!(cfg.io_demand_depth, 32);
+        assert_eq!(cfg.io_prefetch_depth, 128);
+        cfg.validate().unwrap();
+        let io = cfg.io_config();
+        assert_eq!(io.workers, 4);
+        assert_eq!(io.demand_depth, 32);
+        assert_eq!(io.prefetch_depth, 128);
+        cfg.io_workers = 0;
+        assert!(cfg.validate().is_err(), "zero workers must be rejected");
     }
 
     #[test]

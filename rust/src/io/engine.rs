@@ -1,0 +1,687 @@
+//! The asynchronous [`TransferEngine`]: dual-lane SSD→DRAM chunk reads
+//! over `util::threadpool` workers.
+//!
+//! Design contract (see the module docs of [`crate::io`] for the lane
+//! semantics):
+//!
+//! * `submit` never blocks and never touches disk — it either queues a
+//!   ticket, coalesces onto an in-flight one (`Deduped` / `Upgraded`),
+//!   or refuses under backpressure (`Rejected`).
+//! * Workers drain the demand queue strictly before the prefetch queue
+//!   and FIFO within each lane.
+//! * At most one in-flight ticket exists per chunk key; a completed or
+//!   cancelled ticket frees the key for resubmission.
+//! * A cancelled token never produces a completion (checked both before
+//!   and after the read, so cancellation racing the read still wins).
+//! * Promotion into DRAM is the caller's job: completions carry raw
+//!   bytes so cache-metadata mutation stays on the scheduler thread.
+
+use crate::cache::chunk::ChunkKey;
+use crate::cache::store::ChunkStore;
+use crate::io::token::CancelToken;
+use crate::io::{IoConfig, IoStats, Lane};
+use crate::util::threadpool::ThreadPool;
+use anyhow::{anyhow, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Read-side source of chunk bytes, shared with the worker threads.
+///
+/// Blanket impls cover the repo's stores behind the standard locks:
+/// `RwLock<FileStore>` gives concurrent reads (`ChunkStore::get` takes
+/// `&self`); `Mutex<S>` serialises and suits tests.
+pub trait FetchSource: Send + Sync {
+    fn fetch(&self, key: ChunkKey) -> Result<Option<Vec<u8>>>;
+}
+
+impl<S: ChunkStore + Sync> FetchSource for RwLock<S> {
+    fn fetch(&self, key: ChunkKey) -> Result<Option<Vec<u8>>> {
+        self.read().expect("store lock poisoned").get(key)
+    }
+}
+
+impl<S: ChunkStore> FetchSource for Mutex<S> {
+    fn fetch(&self, key: ChunkKey) -> Result<Option<Vec<u8>>> {
+        self.lock().expect("store lock poisoned").get(key)
+    }
+}
+
+/// Outcome of one `submit` call.
+#[derive(Debug)]
+pub enum Submit {
+    /// Accepted; the token cancels this ticket.
+    Queued(CancelToken),
+    /// The key is already in flight on the same (or demand) lane.
+    Deduped,
+    /// A demand submit found an in-flight *prefetch* ticket and
+    /// promoted it: the chunk will be read once, at demand priority.
+    Upgraded,
+    /// The lane queue is full (backpressure).
+    Rejected,
+}
+
+impl Submit {
+    pub fn accepted(&self) -> bool {
+        !matches!(self, Submit::Rejected)
+    }
+}
+
+/// One finished (or failed) read, delivered via `drain`/`take_blocking`.
+#[derive(Debug)]
+pub struct Completion {
+    pub key: ChunkKey,
+    /// Lane the ticket was *served* on (demand after an upgrade).
+    pub lane: Lane,
+    /// True iff a prefetch ticket was upgraded to demand priority.
+    pub upgraded: bool,
+    pub data: Result<Vec<u8>>,
+    /// Seconds spent queued before a worker picked the ticket up.
+    pub wait_seconds: f64,
+    /// Seconds spent reading from the source.
+    pub read_seconds: f64,
+}
+
+struct Ticket {
+    key: ChunkKey,
+    enqueued: Instant,
+}
+
+struct Entry {
+    token: CancelToken,
+    lane: Lane,
+    upgraded: bool,
+}
+
+#[derive(Default)]
+struct State {
+    demand_q: VecDeque<Ticket>,
+    prefetch_q: VecDeque<Ticket>,
+    /// One entry per key with a queued or executing ticket.
+    inflight: HashMap<ChunkKey, Entry>,
+    completions: VecDeque<Completion>,
+    stats: IoStats,
+    paused: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Signalled when work arrives / pause lifts / shutdown starts.
+    work: Condvar,
+    /// Signalled when a completion lands or a ticket dies.
+    done: Condvar,
+}
+
+/// Asynchronous dual-lane chunk mover. See module docs.
+pub struct TransferEngine {
+    shared: Arc<Shared>,
+    cfg: IoConfig,
+    // Dropped after the custom Drop body flips `shutdown`, so the
+    // pool's join sees exiting workers.
+    _pool: ThreadPool,
+}
+
+impl TransferEngine {
+    pub fn new(cfg: IoConfig, source: Arc<dyn FetchSource>) -> TransferEngine {
+        let workers = cfg.workers.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State::default()),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let pool = ThreadPool::new(workers, "io");
+        for _ in 0..workers {
+            let shared = Arc::clone(&shared);
+            let source = Arc::clone(&source);
+            pool.submit(move || worker_loop(&shared, &*source));
+        }
+        TransferEngine {
+            shared,
+            cfg,
+            _pool: pool,
+        }
+    }
+
+    pub fn config(&self) -> IoConfig {
+        self.cfg
+    }
+
+    /// Queue a read of `key` on `lane`. Non-blocking; see [`Submit`].
+    pub fn submit(&self, key: ChunkKey, lane: Lane) -> Submit {
+        let mut st = self.shared.state.lock().unwrap();
+        if let Some(cur_lane) = st.inflight.get(&key).map(|e| e.lane) {
+            if lane == Lane::Demand && cur_lane == Lane::Prefetch {
+                // Upgrade: move the queued ticket to the demand lane; a
+                // ticket already at a worker keeps running but its
+                // completion is re-labelled demand.
+                if let Some(pos) = st.prefetch_q.iter().position(|t| t.key == key) {
+                    if let Some(t) = st.prefetch_q.remove(pos) {
+                        st.demand_q.push_back(t);
+                    }
+                }
+                let e = st.inflight.get_mut(&key).expect("entry just observed");
+                e.lane = Lane::Demand;
+                e.upgraded = true;
+                st.stats.upgraded += 1;
+                self.shared.work.notify_all();
+                return Submit::Upgraded;
+            }
+            st.stats.lane_mut(lane).deduped += 1;
+            return Submit::Deduped;
+        }
+        let full = match lane {
+            Lane::Demand => st.demand_q.len() >= self.cfg.demand_depth.max(1),
+            Lane::Prefetch => st.prefetch_q.len() >= self.cfg.prefetch_depth.max(1),
+        };
+        if full {
+            st.stats.lane_mut(lane).rejected += 1;
+            return Submit::Rejected;
+        }
+        let token = CancelToken::new();
+        st.inflight.insert(
+            key,
+            Entry {
+                token: token.clone(),
+                lane,
+                upgraded: false,
+            },
+        );
+        let ticket = Ticket {
+            key,
+            enqueued: Instant::now(),
+        };
+        match lane {
+            Lane::Demand => st.demand_q.push_back(ticket),
+            Lane::Prefetch => st.prefetch_q.push_back(ticket),
+        }
+        st.stats.lane_mut(lane).submitted += 1;
+        self.shared.work.notify_one();
+        Submit::Queued(token)
+    }
+
+    /// Cancel the in-flight ticket for `key`, if any. Returns whether a
+    /// ticket was found. (Equivalent to cancelling the submit token.)
+    pub fn cancel(&self, key: ChunkKey) -> bool {
+        let st = self.shared.state.lock().unwrap();
+        match st.inflight.get(&key) {
+            Some(e) => {
+                e.token.cancel();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Stop workers from picking up new tickets (submits still queue).
+    /// Used to stage a burst atomically; pair with [`Self::resume`].
+    pub fn pause(&self) {
+        self.shared.state.lock().unwrap().paused = true;
+    }
+
+    pub fn resume(&self) {
+        self.shared.state.lock().unwrap().paused = false;
+        self.shared.work.notify_all();
+    }
+
+    /// Pop every completion delivered so far (the scheduler's per-tick
+    /// drain; promotion into DRAM happens at the call site).
+    pub fn drain(&self) -> Vec<Completion> {
+        let mut st = self.shared.state.lock().unwrap();
+        st.completions.drain(..).collect()
+    }
+
+    /// Block until the completion for `key` arrives, then take it.
+    /// Returns `None` if `key` is neither in flight nor completed (e.g.
+    /// never submitted, or cancelled and reaped), or on timeout.
+    pub fn take_blocking(&self, key: ChunkKey, timeout: Duration) -> Option<Completion> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(pos) = st.completions.iter().position(|c| c.key == key) {
+                return st.completions.remove(pos);
+            }
+            if !st.inflight.contains_key(&key) {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self
+                .shared
+                .done
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = guard;
+        }
+    }
+
+    /// Busy-poll until no ticket is queued or executing (tests/benches).
+    pub fn wait_quiescent(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            {
+                let st = self.shared.state.lock().unwrap();
+                if st.inflight.is_empty() {
+                    return true;
+                }
+            }
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    pub fn stats(&self) -> IoStats {
+        self.shared.state.lock().unwrap().stats
+    }
+
+    /// Tickets currently queued (not yet picked up) on `lane`.
+    pub fn queue_depth(&self, lane: Lane) -> usize {
+        let st = self.shared.state.lock().unwrap();
+        match lane {
+            Lane::Demand => st.demand_q.len(),
+            Lane::Prefetch => st.prefetch_q.len(),
+        }
+    }
+
+    /// Keys with a queued or executing ticket.
+    pub fn inflight_count(&self) -> usize {
+        self.shared.state.lock().unwrap().inflight.len()
+    }
+
+    /// Completions delivered but not yet drained.
+    pub fn completed_pending(&self) -> usize {
+        self.shared.state.lock().unwrap().completions.len()
+    }
+}
+
+impl Drop for TransferEngine {
+    fn drop(&mut self) {
+        self.shared.state.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
+        // `_pool` drops next and joins the exiting workers.
+    }
+}
+
+fn worker_loop(shared: &Shared, source: &dyn FetchSource) {
+    loop {
+        // Pop the next ticket: demand first, FIFO within a lane. The
+        // cancellation check happens under the same lock, so a ticket
+        // observed cancelled here provably never reached the source.
+        let (ticket, token, wait_s) = {
+            let mut st = shared.state.lock().unwrap();
+            'pop: loop {
+                if st.shutdown {
+                    return;
+                }
+                if !st.paused {
+                    let popped = st
+                        .demand_q
+                        .pop_front()
+                        .or_else(|| st.prefetch_q.pop_front());
+                    if let Some(t) = popped {
+                        let (lane, token, cancelled) = match st.inflight.get(&t.key) {
+                            Some(e) => (e.lane, e.token.clone(), e.token.is_cancelled()),
+                            None => continue 'pop, // reaped: stale ticket
+                        };
+                        if cancelled {
+                            st.inflight.remove(&t.key);
+                            st.stats.lane_mut(lane).cancelled += 1;
+                            shared.done.notify_all();
+                            continue 'pop;
+                        }
+                        let wait = t.enqueued.elapsed().as_secs_f64();
+                        break 'pop (t, token, wait);
+                    }
+                }
+                st = shared.work.wait(st).unwrap();
+            }
+        };
+
+        let t0 = Instant::now();
+        let fetched = source.fetch(ticket.key);
+        let read_s = t0.elapsed().as_secs_f64();
+
+        let mut st = shared.state.lock().unwrap();
+        let entry = match st.inflight.remove(&ticket.key) {
+            Some(e) => e,
+            None => continue,
+        };
+        if token.is_cancelled() {
+            // Cancel raced the read: suppress the completion.
+            st.stats.lane_mut(entry.lane).cancelled += 1;
+            shared.done.notify_all();
+            continue;
+        }
+        let lane = entry.lane;
+        let data = {
+            let s = st.stats.lane_mut(lane);
+            s.wait_seconds += wait_s;
+            s.serve_seconds += read_s;
+            match fetched {
+                Ok(Some(bytes)) => {
+                    s.completed += 1;
+                    s.bytes_moved += bytes.len() as u64;
+                    Ok(bytes)
+                }
+                Ok(None) => {
+                    s.failed += 1;
+                    Err(anyhow!("chunk {:016x} missing from source", ticket.key.0))
+                }
+                Err(e) => {
+                    s.failed += 1;
+                    Err(e)
+                }
+            }
+        };
+        st.completions.push_back(Completion {
+            key: ticket.key,
+            lane,
+            upgraded: entry.upgraded,
+            data,
+            wait_seconds: wait_s,
+            read_seconds: read_s,
+        });
+        shared.done.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::store::MemStore;
+    use crate::util::proptest::{check, forall};
+
+    fn key(i: u64) -> ChunkKey {
+        ChunkKey(0x1000 + i)
+    }
+
+    /// A MemStore-backed source with optional per-read delay.
+    fn source(n_keys: u64, delay: Duration) -> Arc<dyn FetchSource> {
+        struct Slow {
+            store: Mutex<MemStore>,
+            delay: Duration,
+        }
+        impl FetchSource for Slow {
+            fn fetch(&self, k: ChunkKey) -> Result<Option<Vec<u8>>> {
+                if !self.delay.is_zero() {
+                    std::thread::sleep(self.delay);
+                }
+                self.store.lock().unwrap().get(k)
+            }
+        }
+        let mut store = MemStore::new();
+        for i in 0..n_keys {
+            store.put(key(i), &[i as u8; 8]).unwrap();
+        }
+        Arc::new(Slow {
+            store: Mutex::new(store),
+            delay,
+        })
+    }
+
+    fn cfg(workers: usize) -> IoConfig {
+        IoConfig {
+            workers,
+            demand_depth: 64,
+            prefetch_depth: 64,
+        }
+    }
+
+    const T: Duration = Duration::from_secs(10);
+
+    #[test]
+    fn demand_preempts_queued_prefetch_and_lanes_stay_fifo() {
+        let eng = TransferEngine::new(cfg(1), source(16, Duration::ZERO));
+        eng.pause();
+        for i in 0..4 {
+            assert!(matches!(eng.submit(key(i), Lane::Prefetch), Submit::Queued(_)));
+        }
+        for i in 4..6 {
+            assert!(matches!(eng.submit(key(i), Lane::Demand), Submit::Queued(_)));
+        }
+        eng.resume();
+        assert!(eng.wait_quiescent(T));
+        let done = eng.drain();
+        let order: Vec<u64> = done.iter().map(|c| c.key.0 - 0x1000).collect();
+        // demand (FIFO) first, then prefetch (FIFO)
+        assert_eq!(order, vec![4, 5, 0, 1, 2, 3]);
+        assert!(done[0].lane == Lane::Demand && done[2].lane == Lane::Prefetch);
+        let s = eng.stats();
+        assert_eq!(s.demand.completed, 2);
+        assert_eq!(s.prefetch.completed, 4);
+        assert_eq!(s.demand.bytes_moved, 16);
+    }
+
+    #[test]
+    fn demand_upgrade_serves_once() {
+        let eng = TransferEngine::new(cfg(2), source(8, Duration::ZERO));
+        eng.pause();
+        assert!(matches!(eng.submit(key(3), Lane::Prefetch), Submit::Queued(_)));
+        assert!(matches!(eng.submit(key(3), Lane::Demand), Submit::Upgraded));
+        // further demand submits coalesce
+        assert!(matches!(eng.submit(key(3), Lane::Demand), Submit::Deduped));
+        eng.resume();
+        let c = eng.take_blocking(key(3), T).expect("completion");
+        assert_eq!(c.lane, Lane::Demand);
+        assert!(c.upgraded);
+        assert_eq!(c.data.unwrap(), vec![3u8; 8]);
+        // exactly one completion existed for the key
+        assert!(eng.drain().is_empty());
+        let s = eng.stats();
+        assert_eq!(s.upgraded, 1);
+        assert_eq!(s.demand.deduped, 1);
+        assert_eq!(s.prefetch.submitted, 1);
+        assert_eq!(s.demand.submitted, 0);
+        // key is free again after completion
+        assert!(matches!(eng.submit(key(3), Lane::Demand), Submit::Queued(_)));
+        assert!(eng.take_blocking(key(3), T).is_some());
+    }
+
+    #[test]
+    fn duplicate_prefetch_submits_dedup() {
+        let eng = TransferEngine::new(cfg(1), source(4, Duration::ZERO));
+        eng.pause();
+        assert!(matches!(eng.submit(key(0), Lane::Prefetch), Submit::Queued(_)));
+        assert!(matches!(eng.submit(key(0), Lane::Prefetch), Submit::Deduped));
+        eng.resume();
+        assert!(eng.wait_quiescent(T));
+        assert_eq!(eng.drain().len(), 1);
+        assert_eq!(eng.stats().prefetch.deduped, 1);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_lane_full() {
+        let eng = TransferEngine::new(
+            IoConfig {
+                workers: 1,
+                demand_depth: 64,
+                prefetch_depth: 2,
+            },
+            source(8, Duration::ZERO),
+        );
+        eng.pause();
+        assert!(eng.submit(key(0), Lane::Prefetch).accepted());
+        assert!(eng.submit(key(1), Lane::Prefetch).accepted());
+        assert!(matches!(eng.submit(key(2), Lane::Prefetch), Submit::Rejected));
+        assert!(matches!(eng.submit(key(3), Lane::Prefetch), Submit::Rejected));
+        eng.resume();
+        assert!(eng.wait_quiescent(T));
+        assert_eq!(eng.stats().prefetch.rejected, 2);
+        assert_eq!(eng.drain().len(), 2);
+    }
+
+    #[test]
+    fn missing_key_fails_but_completes() {
+        let eng = TransferEngine::new(cfg(1), source(1, Duration::ZERO));
+        eng.submit(ChunkKey(0xDEAD), Lane::Demand);
+        let c = eng.take_blocking(ChunkKey(0xDEAD), T).expect("completion");
+        assert!(c.data.is_err());
+        assert_eq!(eng.stats().demand.failed, 1);
+        assert_eq!(eng.stats().demand.completed, 0);
+    }
+
+    #[test]
+    fn cancelled_ticket_is_reaped_without_completion() {
+        let eng = TransferEngine::new(cfg(1), source(4, Duration::ZERO));
+        eng.pause();
+        let tok = match eng.submit(key(1), Lane::Prefetch) {
+            Submit::Queued(t) => t,
+            other => panic!("{other:?}"),
+        };
+        eng.submit(key(2), Lane::Prefetch);
+        tok.cancel();
+        eng.resume();
+        assert!(eng.wait_quiescent(T));
+        let done = eng.drain();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].key, key(2));
+        assert_eq!(eng.stats().prefetch.cancelled, 1);
+        // take_blocking on the reaped key returns None, promptly
+        assert!(eng.take_blocking(key(1), Duration::from_millis(50)).is_none());
+    }
+
+    #[test]
+    fn cancel_by_key_matches_token_cancel() {
+        let eng = TransferEngine::new(cfg(1), source(4, Duration::ZERO));
+        eng.pause();
+        eng.submit(key(0), Lane::Prefetch);
+        assert!(eng.cancel(key(0)));
+        assert!(!eng.cancel(key(3))); // nothing in flight
+        eng.resume();
+        assert!(eng.wait_quiescent(T));
+        assert!(eng.drain().is_empty());
+        assert_eq!(eng.stats().prefetch.cancelled, 1);
+    }
+
+    /// Satellite: property — no completion is ever delivered for a
+    /// cancelled token, and every surviving submit completes exactly
+    /// once. Pausing the engine guarantees cancellation happens before
+    /// any ticket reaches a worker.
+    #[test]
+    fn prop_cancelled_tokens_never_complete() {
+        forall(
+            0xC0FFEE,
+            12,
+            |rng| {
+                let n = 1 + rng.below(10) as usize;
+                (0..n)
+                    .map(|_| (rng.below(8), rng.below(2)))
+                    .collect::<Vec<(u64, u64)>>()
+            },
+            |plan| {
+                let eng = TransferEngine::new(cfg(2), source(8, Duration::ZERO));
+                eng.pause();
+                let mut tokens: Vec<(u64, CancelToken, bool)> = Vec::new();
+                for &(k, do_cancel) in plan {
+                    if let Submit::Queued(tok) = eng.submit(key(k), Lane::Prefetch) {
+                        tokens.push((k, tok, do_cancel == 1));
+                    }
+                }
+                for (_, tok, do_cancel) in &tokens {
+                    if *do_cancel {
+                        tok.cancel();
+                    }
+                }
+                eng.resume();
+                if !eng.wait_quiescent(T) {
+                    return Err("engine did not quiesce".into());
+                }
+                let done = eng.drain();
+                for (k, _, do_cancel) in &tokens {
+                    let got = done.iter().filter(|c| c.key == key(*k)).count();
+                    let want = if *do_cancel { 0 } else { 1 };
+                    check(
+                        got == want,
+                        format!("key {k}: {got} completions, want {want} (cancel={do_cancel})"),
+                    )?;
+                }
+                let s = eng.stats();
+                let cancelled = tokens.iter().filter(|(_, _, c)| *c).count() as u64;
+                check(
+                    s.prefetch.cancelled == cancelled,
+                    format!("cancelled {} != {}", s.prefetch.cancelled, cancelled),
+                )
+            },
+        );
+    }
+
+    /// Satellite: multi-threaded stress over submit/cancel/upgrade
+    /// races. Invariant: every accepted ticket resolves exactly once —
+    /// completed + cancelled + failed == queued — and the engine
+    /// quiesces with no stuck tickets.
+    #[test]
+    fn stress_submit_cancel_upgrade_races() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let eng = Arc::new(TransferEngine::new(
+            IoConfig {
+                workers: 4,
+                demand_depth: 256,
+                prefetch_depth: 256,
+            },
+            source(32, Duration::from_micros(20)),
+        ));
+        let queued = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let eng = Arc::clone(&eng);
+            let queued = Arc::clone(&queued);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(0xBEEF ^ t);
+                for _ in 0..300 {
+                    let k = key(rng.below(32));
+                    match rng.below(4) {
+                        0 => {
+                            if matches!(eng.submit(k, Lane::Demand), Submit::Queued(_)) {
+                                queued.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                        1 | 2 => {
+                            if matches!(eng.submit(k, Lane::Prefetch), Submit::Queued(_)) {
+                                queued.fetch_add(1, Ordering::SeqCst);
+                            }
+                        }
+                        _ => {
+                            eng.cancel(k);
+                        }
+                    }
+                    if rng.below(8) == 0 {
+                        eng.drain();
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(eng.wait_quiescent(T), "stuck tickets");
+        eng.drain();
+        let s = eng.stats();
+        let resolved = s.demand.completed
+            + s.demand.cancelled
+            + s.demand.failed
+            + s.prefetch.completed
+            + s.prefetch.cancelled
+            + s.prefetch.failed;
+        assert_eq!(
+            resolved,
+            queued.load(Ordering::SeqCst),
+            "every accepted ticket must resolve exactly once: {s:?}"
+        );
+        assert_eq!(s.demand.rejected + s.prefetch.rejected, 0, "depth 256 never fills");
+        assert_eq!(eng.queue_depth(Lane::Demand), 0);
+        assert_eq!(eng.queue_depth(Lane::Prefetch), 0);
+    }
+
+    #[test]
+    fn drop_with_queued_work_does_not_hang() {
+        let eng = TransferEngine::new(cfg(2), source(16, Duration::from_micros(50)));
+        for i in 0..16 {
+            eng.submit(key(i), Lane::Prefetch);
+        }
+        drop(eng); // must join cleanly mid-flight
+    }
+}

@@ -1,0 +1,184 @@
+//! Virtual-time dual-lane model of one shared bandwidth resource.
+//!
+//! [`VirtualLanes`] gives the serving *simulator* the same lane
+//! semantics the real [`TransferEngine`](crate::io::engine::TransferEngine)
+//! enforces with worker threads: demand transfers never wait behind
+//! **queued** prefetch work (strict priority at queue granularity),
+//! while prefetch transfers wait behind everything. Both lanes draw on
+//! one bandwidth figure, so saturating the prefetch lane still delays
+//! later prefetches — the Fig 12 contention — but cannot inflate the
+//! demand lane.
+//!
+//! Accounting note: in virtual time a transfer's finish is known at
+//! enqueue, so `submitted`/`bytes_moved`/`wait`/`serve` are booked at
+//! enqueue; `completed` is booked by the caller when it acts on the
+//! finish time (the prefetcher's drain, or the demand path awaiting
+//! `ssd_ready`), and `cancelled` when a not-yet-started transfer is
+//! abandoned.
+
+use crate::hw::transfer::Channel;
+use crate::io::{IoStats, Lane};
+
+/// Two priority cursors over one virtual-time bandwidth resource.
+#[derive(Clone, Debug)]
+pub struct VirtualLanes {
+    pub bytes_per_s: f64,
+    pub launch_overhead_s: f64,
+    demand_free_at: f64,
+    prefetch_free_at: f64,
+    /// Lane counters, shared shape with the real engine's report.
+    pub stats: IoStats,
+}
+
+impl VirtualLanes {
+    pub fn new(gbps: f64, launch_overhead_s: f64) -> VirtualLanes {
+        VirtualLanes {
+            bytes_per_s: gbps * 1e9,
+            launch_overhead_s,
+            demand_free_at: 0.0,
+            prefetch_free_at: 0.0,
+            stats: IoStats::default(),
+        }
+    }
+
+    /// Adopt the bandwidth/overhead of an existing fabric channel.
+    pub fn from_channel(ch: &Channel) -> VirtualLanes {
+        VirtualLanes {
+            bytes_per_s: ch.bytes_per_s,
+            launch_overhead_s: ch.launch_overhead_s,
+            demand_free_at: 0.0,
+            prefetch_free_at: 0.0,
+            stats: IoStats::default(),
+        }
+    }
+
+    /// Pure cost of one transfer of `bytes` (no queueing).
+    pub fn copy_time(&self, bytes: u64) -> f64 {
+        self.launch_overhead_s + bytes as f64 / self.bytes_per_s
+    }
+
+    /// Advance the lane cursors for one transfer submitted at `now`
+    /// without touching counters (used for in-place lane upgrades).
+    /// Returns `(start, finish)`.
+    pub fn reserve(&mut self, lane: Lane, now: f64, bytes: u64) -> (f64, f64) {
+        let cost = self.copy_time(bytes);
+        match lane {
+            Lane::Demand => {
+                // Demand bypasses queued prefetch work entirely; it only
+                // queues behind other demand transfers.
+                let start = now.max(self.demand_free_at);
+                let finish = start + cost;
+                self.demand_free_at = finish;
+                // The shared resource is busy: queued prefetch work is
+                // pushed back behind the demand transfer.
+                self.prefetch_free_at = self.prefetch_free_at.max(finish);
+                (start, finish)
+            }
+            Lane::Prefetch => {
+                let start = now.max(self.prefetch_free_at).max(self.demand_free_at);
+                let finish = start + cost;
+                self.prefetch_free_at = finish;
+                (start, finish)
+            }
+        }
+    }
+
+    /// Enqueue a transfer at `now`: cursor math plus lane accounting.
+    /// Returns `(start, finish)`.
+    pub fn enqueue(&mut self, lane: Lane, now: f64, bytes: u64) -> (f64, f64) {
+        let (start, finish) = self.reserve(lane, now, bytes);
+        let s = self.stats.lane_mut(lane);
+        s.submitted += 1;
+        s.bytes_moved += bytes;
+        s.wait_seconds += start - now;
+        s.serve_seconds += finish - start;
+        (start, finish)
+    }
+
+    /// Seconds of committed work beyond `now` on `lane`.
+    pub fn backlog(&self, lane: Lane, now: f64) -> f64 {
+        let free_at = match lane {
+            Lane::Demand => self.demand_free_at,
+            Lane::Prefetch => self.prefetch_free_at,
+        };
+        (free_at - now).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lanes() -> VirtualLanes {
+        VirtualLanes::new(1.0, 0.0) // 1 GB/s, no launch overhead
+    }
+
+    const GB: u64 = 1_000_000_000;
+
+    #[test]
+    fn demand_bypasses_queued_prefetch_backlog() {
+        let mut l = lanes();
+        // 3 s of prefetch backlog...
+        for _ in 0..3 {
+            l.enqueue(Lane::Prefetch, 0.0, GB);
+        }
+        assert!((l.backlog(Lane::Prefetch, 0.0) - 3.0).abs() < 1e-9);
+        // ...yet a demand read at t=0 starts immediately
+        let (s, f) = l.enqueue(Lane::Demand, 0.0, GB);
+        assert_eq!(s, 0.0);
+        assert!((f - 1.0).abs() < 1e-9);
+        // and pushes the queued prefetch work back behind it
+        let (_, pf) = l.enqueue(Lane::Prefetch, 0.0, GB);
+        assert!(pf >= 4.0 - 1e-9, "prefetch finish {pf} must trail backlog + demand");
+    }
+
+    #[test]
+    fn prefetch_waits_behind_demand() {
+        let mut l = lanes();
+        l.enqueue(Lane::Demand, 0.0, 2 * GB); // busy until t=2
+        let (s, f) = l.enqueue(Lane::Prefetch, 0.0, GB);
+        assert!((s - 2.0).abs() < 1e-9);
+        assert!((f - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lanes_are_fifo_internally() {
+        let mut l = lanes();
+        let (_, f1) = l.enqueue(Lane::Prefetch, 0.0, GB);
+        let (s2, f2) = l.enqueue(Lane::Prefetch, 0.5, GB);
+        assert!((s2 - f1).abs() < 1e-9);
+        assert!((f2 - 2.0).abs() < 1e-9);
+        let (s3, _) = l.enqueue(Lane::Prefetch, 10.0, GB); // idle resumes at now
+        assert_eq!(s3, 10.0);
+    }
+
+    #[test]
+    fn accounting_books_at_enqueue() {
+        let mut l = lanes();
+        l.enqueue(Lane::Prefetch, 0.0, GB);
+        l.enqueue(Lane::Prefetch, 0.0, GB); // waits 1s
+        l.enqueue(Lane::Demand, 0.0, GB);
+        let st = l.stats;
+        assert_eq!(st.prefetch.submitted, 2);
+        assert_eq!(st.demand.submitted, 1);
+        assert_eq!(st.prefetch.bytes_moved, 2 * GB);
+        assert!((st.prefetch.wait_seconds - 1.0).abs() < 1e-9);
+        assert!((st.prefetch.serve_seconds - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reserve_skips_counters() {
+        let mut l = lanes();
+        l.reserve(Lane::Demand, 0.0, GB);
+        assert_eq!(l.stats.demand.submitted, 0);
+        assert!((l.backlog(Lane::Demand, 0.0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn from_channel_copies_rate() {
+        let ch = Channel::new("t", 3.0, 10e-6);
+        let l = VirtualLanes::from_channel(&ch);
+        assert_eq!(l.bytes_per_s, 3.0e9);
+        assert!((l.copy_time(3 * GB) - (1.0 + 10e-6)).abs() < 1e-9);
+    }
+}

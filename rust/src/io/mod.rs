@@ -1,0 +1,222 @@
+//! The tiered-transfer I/O subsystem: asynchronous SSD↔DRAM chunk
+//! movement with **dual priority lanes**, in-flight dedup, cancellation,
+//! and backpressure (paper §4.3/§4.4 made real — the counterpart of the
+//! simulator's virtual-time channels on actual disk).
+//!
+//! # Architecture
+//!
+//! * [`engine`] — the real-path [`TransferEngine`](engine::TransferEngine):
+//!   `util::threadpool` workers pull read tickets from two bounded
+//!   queues and fetch chunk bytes from a shared
+//!   [`FetchSource`](engine::FetchSource) (e.g. the SSD
+//!   [`FileStore`](crate::cache::store::FileStore)). Completed reads
+//!   land in a completion queue the scheduler drains each tick;
+//!   promotion into DRAM stays on the caller's thread because the cache
+//!   metadata engine is single-threaded by design.
+//! * [`lanes`] — the same dual-lane semantics as a virtual-time cost
+//!   model ([`VirtualLanes`](lanes::VirtualLanes)), used by
+//!   `serve::engine` so the simulator and the real path share one
+//!   contention vocabulary (and one [`IoStats`] report shape).
+//! * [`token`] — [`CancelToken`](token::CancelToken): lazy cancellation
+//!   observed by workers before (and re-checked after) the disk read.
+//!
+//! # Lane semantics
+//!
+//! * **Demand lane** — chunks the request being scheduled needs *now*.
+//!   Workers always drain the demand queue first: a demand ticket never
+//!   waits behind queued prefetch work (it can still wait for reads
+//!   already on the device — preemption is at queue granularity).
+//! * **Prefetch lane** — speculative SSD→DRAM promotions selected from
+//!   the waiting queue's look-ahead window. Served only when the demand
+//!   queue is empty, so a prefetch backlog cannot inflate TTFT — the
+//!   Fig 12 trade-off the paper's bounded window manages.
+//! * **Dedup / upgrade** — at most one in-flight ticket per chunk key.
+//!   Re-submitting an in-flight key is counted `deduped`; a *demand*
+//!   submit for a key that is in flight on the *prefetch* lane upgrades
+//!   that ticket in place (moves it to the demand queue if still
+//!   queued), so the chunk is read **once** and served at demand
+//!   priority — counted `upgraded`.
+//! * **Backpressure** — both queues are bounded
+//!   ([`IoConfig::demand_depth`] / [`IoConfig::prefetch_depth`]);
+//!   submits beyond the bound are rejected and counted, never silently
+//!   dropped or unboundedly buffered.
+//!
+//! Configured via the `[io]` TOML section (`io.workers`,
+//! `io.demand_depth`, `io.prefetch_depth`) — see
+//! [`crate::config::ExperimentConfig`].
+
+pub mod engine;
+pub mod lanes;
+pub mod token;
+
+pub use engine::{Completion, FetchSource, Submit, TransferEngine};
+pub use lanes::VirtualLanes;
+pub use token::CancelToken;
+
+/// The two transfer priority classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// Blocking the request being scheduled; always served first.
+    Demand,
+    /// Speculative look-ahead work; served when the demand lane is idle.
+    Prefetch,
+}
+
+impl Lane {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Lane::Demand => "demand",
+            Lane::Prefetch => "prefetch",
+        }
+    }
+}
+
+/// Sizing of the transfer engine (the `[io]` config section).
+#[derive(Clone, Copy, Debug)]
+pub struct IoConfig {
+    /// Dedicated I/O worker threads (paper: "dedicated thread" design).
+    pub workers: usize,
+    /// Bound on queued demand tickets before submits are rejected.
+    pub demand_depth: usize,
+    /// Bound on queued prefetch tickets before submits are rejected.
+    pub prefetch_depth: usize,
+}
+
+impl Default for IoConfig {
+    fn default() -> IoConfig {
+        IoConfig {
+            workers: 2,
+            demand_depth: 64,
+            prefetch_depth: 64,
+        }
+    }
+}
+
+/// Counters for one lane. All monotonically non-decreasing over a run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneStats {
+    /// Tickets accepted into the queue.
+    pub submitted: u64,
+    /// Reads finished and delivered as completions.
+    pub completed: u64,
+    /// Tickets dropped because their token was cancelled.
+    pub cancelled: u64,
+    /// Submits coalesced onto an already-in-flight ticket for the key.
+    pub deduped: u64,
+    /// Submits refused because the lane queue was full (backpressure).
+    pub rejected: u64,
+    /// Reads that errored or found the key missing.
+    pub failed: u64,
+    /// Payload bytes delivered.
+    pub bytes_moved: u64,
+    /// Total seconds tickets spent queued before a worker picked them up.
+    pub wait_seconds: f64,
+    /// Total seconds spent actually reading.
+    pub serve_seconds: f64,
+}
+
+impl LaneStats {
+    /// Mean queue wait per completed read (0 if none completed).
+    pub fn mean_wait(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.wait_seconds / self.completed as f64
+        }
+    }
+
+    /// Mean read time per completed read (0 if none completed).
+    pub fn mean_serve(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.serve_seconds / self.completed as f64
+        }
+    }
+}
+
+/// Snapshot of both lanes plus cross-lane events.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IoStats {
+    pub demand: LaneStats,
+    pub prefetch: LaneStats,
+    /// Prefetch tickets promoted to demand priority (read once, served
+    /// at demand priority instead of being re-read).
+    pub upgraded: u64,
+}
+
+impl IoStats {
+    pub fn lane(&self, lane: Lane) -> &LaneStats {
+        match lane {
+            Lane::Demand => &self.demand,
+            Lane::Prefetch => &self.prefetch,
+        }
+    }
+
+    pub fn lane_mut(&mut self, lane: Lane) -> &mut LaneStats {
+        match lane {
+            Lane::Demand => &mut self.demand,
+            Lane::Prefetch => &mut self.prefetch,
+        }
+    }
+
+    /// Two-line human-readable block (mirrors `Report::pretty` rows).
+    pub fn pretty(&self) -> String {
+        let row = |name: &str, s: &LaneStats| {
+            format!(
+                "{name} sub={} done={} cancel={} dedup={} reject={} fail={} \
+                 bytes={} wait={:.4}s serve={:.4}s",
+                s.submitted,
+                s.completed,
+                s.cancelled,
+                s.deduped,
+                s.rejected,
+                s.failed,
+                s.bytes_moved,
+                s.wait_seconds,
+                s.serve_seconds,
+            )
+        };
+        format!(
+            "{}\n  {} upgraded={}",
+            row("demand  ", &self.demand),
+            row("prefetch", &self.prefetch),
+            self.upgraded
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_accessors_agree() {
+        let mut s = IoStats::default();
+        s.lane_mut(Lane::Demand).submitted = 3;
+        s.lane_mut(Lane::Prefetch).rejected = 2;
+        assert_eq!(s.lane(Lane::Demand).submitted, 3);
+        assert_eq!(s.lane(Lane::Prefetch).rejected, 2);
+        assert_eq!(Lane::Demand.name(), "demand");
+    }
+
+    #[test]
+    fn mean_times_guard_division() {
+        let mut s = LaneStats::default();
+        assert_eq!(s.mean_wait(), 0.0);
+        s.completed = 4;
+        s.wait_seconds = 2.0;
+        s.serve_seconds = 1.0;
+        assert!((s.mean_wait() - 0.5).abs() < 1e-12);
+        assert!((s.mean_serve() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pretty_mentions_both_lanes() {
+        let s = IoStats::default();
+        let p = s.pretty();
+        assert!(p.contains("demand"));
+        assert!(p.contains("prefetch"));
+        assert!(p.contains("upgraded"));
+    }
+}

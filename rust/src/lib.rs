@@ -15,6 +15,30 @@
 //!   the PJRT CPU client ([`runtime`]). Python never runs on the
 //!   request path.
 //!
+//! # The tiered-transfer I/O subsystem
+//!
+//! Chunk *metadata* placement (which tier holds what) is decided by the
+//! cache engine; chunk *bytes* are moved by the [`io`] subsystem — an
+//! asynchronous [`TransferEngine`](io::TransferEngine) with two
+//! priority lanes over dedicated `util::threadpool` workers:
+//!
+//! * the **demand lane** (chunks the request being scheduled needs now)
+//!   strictly preempts the **prefetch lane** (speculative SSD→DRAM
+//!   promotions from the waiting queue's look-ahead window), so a
+//!   prefetch backlog can never inflate TTFT;
+//! * at most one read is in flight per chunk — a demand fetch
+//!   *upgrades* an in-flight prefetch instead of re-reading;
+//! * cancellation tokens drop evicted/stale targets before they hit
+//!   disk, and bounded queues reject (and count) overflow instead of
+//!   buffering it.
+//!
+//! The real path ([`runtime::executor::PjrtExecutor`]) submits to the
+//! engine and drains completions between requests; the virtual-time
+//! simulator ([`serve::engine`]) models the identical lane semantics
+//! with [`io::VirtualLanes`], so both report the same
+//! [`IoStats`](io::IoStats) shape. Sized via the `[io]` config section
+//! (`io.workers`, `io.demand_depth`, `io.prefetch_depth`).
+//!
 //! Experiments (every table & figure of the paper) live in
 //! `rust/benches/`; see DESIGN.md for the experiment index and
 //! EXPERIMENTS.md for paper-vs-measured results.
@@ -23,6 +47,7 @@ pub mod bench;
 pub mod cache;
 pub mod config;
 pub mod hw;
+pub mod io;
 pub mod rag;
 pub mod runtime;
 pub mod serve;

@@ -181,6 +181,9 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt("spill-dir", "/tmp/pcr-spill", "SSD tier directory")
         .opt("policy", "lookahead-lru", "eviction policy (see cache::policy::registry)")
         .opt("workers", "4", "HTTP worker threads")
+        .opt("io-workers", "2", "transfer-engine I/O worker threads")
+        .opt("io-demand-depth", "64", "transfer-engine demand queue bound")
+        .opt("io-prefetch-depth", "64", "transfer-engine prefetch queue bound")
         .opt("corpus-docs", "300", "retriever corpus size (0 = no /rag route)");
     let args = match cli.parse(argv) {
         Ok(a) => a,
@@ -199,9 +202,16 @@ fn cmd_serve(argv: &[String]) -> i32 {
     let ssd = args.parse_as::<u64>("ssd-chunks").unwrap();
     let spill = std::path::PathBuf::from(args.get("spill-dir").unwrap());
     let policy = args.get("policy").unwrap().to_string();
+    let io_cfg = pcr::io::IoConfig {
+        workers: args.usize_of("io-workers").max(1),
+        demand_depth: args.usize_of("io-demand-depth").max(1),
+        prefetch_depth: args.usize_of("io-prefetch-depth").max(1),
+    };
     let vocab = manifest.vocab as u32;
     let executor = match pcr::runtime::executor::ExecutorHandle::spawn(move || {
-        pcr::runtime::executor::PjrtExecutor::new(manifest, dram, ssd, Some(&spill), &policy)
+        pcr::runtime::executor::PjrtExecutor::with_io(
+            manifest, dram, ssd, Some(&spill), &policy, io_cfg,
+        )
     }) {
         Ok(e) => e,
         Err(e) => {

@@ -8,12 +8,14 @@ use crate::cache::engine::{CacheConfig, CacheEngine};
 use crate::cache::policy::registry as policy_registry;
 use crate::cache::store::{ChunkStore, FileStore, MemStore};
 use crate::cache::tier::Tier;
+use crate::io::{FetchSource, IoConfig, IoStats, Lane, TransferEngine};
 use crate::runtime::client::{PjrtModel, PrefillOut};
 use crate::runtime::kv;
 use crate::runtime::manifest::Manifest;
 use anyhow::{anyhow, Result};
 use std::path::Path;
-use std::time::Instant;
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
 
 /// Result of serving one request on the real model.
 #[derive(Debug)]
@@ -31,12 +33,25 @@ pub struct ServeResult {
     pub passes: usize,
 }
 
+/// How long a demand fetch may wait on the transfer engine before the
+/// executor falls back to a direct read. Generous: it only fires if
+/// the disk stalls or a submit was rejected under backpressure.
+const DEMAND_FETCH_TIMEOUT: Duration = Duration::from_secs(30);
+
 /// Real-model executor with a DRAM (mem) + SSD (spill-dir) chunk cache.
+/// SSD↔DRAM byte movement goes through the asynchronous
+/// [`TransferEngine`]: demand fetches are submitted up front and run on
+/// the engine's workers (overlapping each other and any in-flight
+/// prefetch), and [`PjrtExecutor::prefetch_chain`] warms upcoming
+/// requests on the prefetch lane without ever delaying demand reads.
 pub struct PjrtExecutor {
     pub model: PjrtModel,
     pub cache: CacheEngine,
     dram: MemStore,
-    ssd: Option<FileStore>,
+    // Declared before `ssd`: drop order shuts the engine's workers down
+    // before the FileStore's Drop sweeps the spill files they read.
+    io: Option<TransferEngine>,
+    ssd: Option<Arc<RwLock<FileStore>>>,
     pub chunk_tokens: usize,
 }
 
@@ -51,6 +66,26 @@ impl PjrtExecutor {
         spill_dir: Option<&Path>,
         policy: &str,
     ) -> Result<PjrtExecutor> {
+        Self::with_io(
+            manifest,
+            dram_chunks,
+            ssd_chunks,
+            spill_dir,
+            policy,
+            IoConfig::default(),
+        )
+    }
+
+    /// Like [`PjrtExecutor::new`] with explicit transfer-engine sizing
+    /// (the `[io]` config section: worker count and lane depths).
+    pub fn with_io(
+        manifest: Manifest,
+        dram_chunks: u64,
+        ssd_chunks: u64,
+        spill_dir: Option<&Path>,
+        policy: &str,
+        io_cfg: IoConfig,
+    ) -> Result<PjrtExecutor> {
         let chunk_tokens = manifest.chunk_tokens;
         let dims = manifest.kv_dims();
         let chunk_bytes = dims.chunk_bytes(chunk_tokens) as u64;
@@ -63,9 +98,17 @@ impl PjrtExecutor {
         );
         let model = PjrtModel::load(manifest)?;
         let ssd = match spill_dir {
-            Some(dir) if ssd_chunks > 0 => Some(FileStore::new(dir)?),
+            Some(dir) if ssd_chunks > 0 => {
+                Some(Arc::new(RwLock::new(FileStore::new(dir)?)))
+            }
             _ => None,
         };
+        // The engine reads through the RwLock'd store, so worker fetches
+        // proceed concurrently with each other; writes (put/delete on
+        // this thread) take the write lock.
+        let io = ssd
+            .as_ref()
+            .map(|s| TransferEngine::new(io_cfg, s.clone() as Arc<dyn FetchSource>));
         let cache = CacheEngine::new(CacheConfig {
             chunk_tokens,
             gpu_capacity: 0, // the CPU PJRT device has no separate HBM tier
@@ -77,6 +120,7 @@ impl PjrtExecutor {
             model,
             cache,
             dram: MemStore::new(),
+            io,
             ssd,
             chunk_tokens,
         })
@@ -86,6 +130,10 @@ impl PjrtExecutor {
     /// many prefill passes as the buckets require, store new chunks.
     pub fn serve(&mut self, tokens: &[u32]) -> Result<ServeResult> {
         let t0 = Instant::now();
+        // Land any prefetch completions first: chunks the engine already
+        // pulled off SSD promote into DRAM before the prefix lookup, so
+        // a warmed chunk is a DRAM hit rather than a demand read.
+        self.drain_io();
         let dims = self.model.kv_dims();
         let chunk = self.chunk_tokens;
         let (max_p, max_n) = self.model.manifest.max_bucket();
@@ -112,8 +160,23 @@ impl PjrtExecutor {
         let mut from_dram = 0;
         let mut from_ssd = 0;
 
-        // Fetch reused chunk blobs (SSD blobs promote into DRAM — the
-        // real analogue of the prefetcher's SSD→DRAM copy).
+        // Fetch reused chunk blobs. Demand reads are submitted to the
+        // transfer engine up front — they run on its workers (demand
+        // lane, preempting queued prefetch work; an in-flight prefetch
+        // of the same key is *upgraded*, so the chunk is read once) —
+        // then collected in order. This thread never touches the disk
+        // itself unless the engine rejects or times out.
+        if let Some(io) = &self.io {
+            // A paused engine (test/demo staging) must not deadlock a
+            // demand fetch.
+            io.resume();
+            for i in 0..reuse_chunks {
+                let key = chain.keys[i];
+                if !self.dram.contains(key) {
+                    io.submit(key, Lane::Demand);
+                }
+            }
+        }
         let mut blobs: Vec<Vec<u8>> = Vec::with_capacity(reuse_chunks);
         for i in 0..reuse_chunks {
             let key = chain.keys[i];
@@ -121,9 +184,18 @@ impl PjrtExecutor {
                 from_dram += 1;
                 b
             } else if let Some(ssd) = &self.ssd {
-                let b = ssd
-                    .get(key)?
-                    .ok_or_else(|| anyhow!("chunk metadata present but bytes missing"))?;
+                let fetched = self
+                    .io
+                    .as_ref()
+                    .and_then(|io| io.take_blocking(key, DEMAND_FETCH_TIMEOUT))
+                    .map(|c| c.data)
+                    // engine rejected the submit (backpressure) or timed
+                    // out: direct read keeps the request correct
+                    .unwrap_or_else(|| ssd.read().unwrap().get(key).and_then(|b| {
+                        b.ok_or_else(|| anyhow!("chunk {:016x} missing from source", key.0))
+                    }));
+                let b = fetched
+                    .map_err(|e| anyhow!("demand fetch of chunk {:016x}: {e}", key.0))?;
                 from_ssd += 1;
                 // promote into DRAM (metadata + bytes)
                 let id = self.cache.tree.get(key).unwrap();
@@ -187,10 +259,10 @@ impl PjrtExecutor {
                 self.dram.put(key, blob)?;
             }
             let mut id = dram_id;
-            if let Some(ssd) = &mut self.ssd {
+            if let Some(ssd) = &self.ssd {
                 let ssd_id = self.cache.insert(parent, key, chunk_bytes, Tier::Ssd);
                 if ssd_id.is_some() {
-                    ssd.put(key, blob)?;
+                    ssd.write().unwrap().put(key, blob)?;
                 }
                 id = id.or(ssd_id);
             }
@@ -213,6 +285,60 @@ impl PjrtExecutor {
             reused_from_ssd: from_ssd,
             passes,
         })
+    }
+
+    /// Submit prefetch-lane loads for every chunk of `chain` whose
+    /// metadata says SSD-resident but whose bytes are not in DRAM yet —
+    /// the real-path analogue of the simulator's queue-window prefetch.
+    /// Returns the number of accepted submissions (in-flight duplicates
+    /// dedup, full queues reject; both only show up in the counters).
+    pub fn prefetch_chain(&mut self, chain: &ChunkedSeq) -> usize {
+        let Some(io) = &self.io else { return 0 };
+        let mut n = 0;
+        for key in &chain.keys {
+            let Some(id) = self.cache.tree.get(*key) else { continue };
+            let tiers = self.cache.tree.node(id).tiers;
+            if !tiers.contains(Tier::Ssd) || tiers.contains(Tier::Dram) {
+                continue;
+            }
+            if self.dram.contains(*key) {
+                continue;
+            }
+            if io.submit(*key, Lane::Prefetch).accepted() {
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Promote completed engine reads into DRAM (metadata + bytes).
+    /// Called at the top of every `serve`; cheap no-op when idle.
+    pub fn drain_io(&mut self) {
+        let Some(io) = &self.io else { return };
+        for c in io.drain() {
+            let Ok(data) = c.data else { continue }; // failures are counted by the engine
+            let Some(id) = self.cache.tree.get(c.key) else { continue };
+            let tiers = self.cache.tree.node(id).tiers;
+            if !tiers.contains(Tier::Ssd) || tiers.contains(Tier::Dram) {
+                continue; // evicted or already promoted since submission
+            }
+            if self.cache.promote(id, Tier::Dram) {
+                let _ = self.dram.put(c.key, &data);
+            }
+        }
+    }
+
+    /// Pause the engine's workers (deterministic staging for tests and
+    /// the e2e upgrade demo). `serve` resumes automatically.
+    pub fn io_pause(&self) {
+        if let Some(io) = &self.io {
+            io.pause();
+        }
+    }
+
+    /// Lane counters of the transfer engine (`None` without an SSD tier).
+    pub fn io_stats(&self) -> Option<IoStats> {
+        self.io.as_ref().map(|io| io.stats())
     }
 
     /// Drop store bytes for chunks the metadata engine evicted.
@@ -243,13 +369,22 @@ impl PjrtExecutor {
         for k in stale_dram {
             let _ = self.dram.delete(k);
         }
-        if let Some(ssd) = &mut self.ssd {
-            let stale: Vec<_> = ssd_keys(ssd)
+        if let Some(ssd) = &self.ssd {
+            let stale: Vec<_> = ssd
+                .read()
+                .unwrap()
+                .keys()
                 .into_iter()
                 .filter(|k| !ssd_live.contains(&k.0))
                 .collect();
+            let mut store = ssd.write().unwrap();
             for k in stale {
-                let _ = ssd.delete(k);
+                // an in-flight read of an evicted chunk is pointless:
+                // cancel it before it hits the disk
+                if let Some(io) = &self.io {
+                    io.cancel(k);
+                }
+                let _ = store.delete(k);
             }
         }
     }
@@ -265,20 +400,13 @@ impl PjrtExecutor {
     }
 }
 
-fn ssd_keys(ssd: &FileStore) -> Vec<crate::cache::chunk::ChunkKey> {
-    // FileStore tracks its index internally; reuse contains() via tree
-    // in sync_stores. Here we just return an empty list — eviction sync
-    // for SSD files happens through delete() calls above when metadata
-    // disagrees. (Orphan files are cleaned up on drop.)
-    let _ = ssd;
-    Vec::new()
-}
-
 /// Cache statistics snapshot safe to ship across threads.
 #[derive(Clone, Copy, Debug)]
 pub struct ExecStats {
     pub cache: crate::cache::engine::CacheStats,
     pub vocab: usize,
+    /// Transfer-engine lane counters (`None` without an SSD tier).
+    pub io: Option<IoStats>,
 }
 
 enum Job {
@@ -327,6 +455,7 @@ impl ExecutorHandle {
                             let _ = reply.send(ExecStats {
                                 cache: exec.cache.stats,
                                 vocab: exec.model.manifest.vocab,
+                                io: exec.io_stats(),
                             });
                         }
                     }
@@ -389,9 +518,12 @@ mod tests {
     use crate::runtime::manifest::default_artifacts_dir;
 
     /// Real-model integration tests only run when artifacts exist.
-    fn executor(dram_chunks: u64) -> Option<PjrtExecutor> {
+    /// `tag` keeps spill dirs disjoint: FileStore adopts existing files
+    /// on open, so parallel tests must not share a directory.
+    fn executor(dram_chunks: u64, tag: &str) -> Option<PjrtExecutor> {
         let manifest = Manifest::load(default_artifacts_dir()).ok()?;
-        let dir = std::env::temp_dir().join(format!("pcr-exec-{}", std::process::id()));
+        let dir = std::env::temp_dir().join(format!("pcr-exec-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
         Some(PjrtExecutor::new(manifest, dram_chunks, 64, Some(&dir), "").unwrap())
     }
 
@@ -402,7 +534,7 @@ mod tests {
 
     #[test]
     fn serve_then_reuse_matches_cold_logits() {
-        let Some(mut ex) = executor(64) else {
+        let Some(mut ex) = executor(64, "reuse") else {
             eprintln!("skipping: artifacts not built");
             return;
         };
@@ -428,7 +560,7 @@ mod tests {
 
     #[test]
     fn shared_prefix_partial_reuse() {
-        let Some(mut ex) = executor(64) else { return };
+        let Some(mut ex) = executor(64, "shared") else { return };
         let mut a = input(2, 256);
         let mut b = a.clone();
         a.extend(input(3, 100));
@@ -440,7 +572,7 @@ mod tests {
 
     #[test]
     fn long_input_multi_pass() {
-        let Some(mut ex) = executor(64) else { return };
+        let Some(mut ex) = executor(64, "multipass") else { return };
         let toks = input(5, 900);
         let r = ex.serve(&toks).unwrap();
         assert!(r.passes >= 2, "900 fresh tokens need 2 passes, got {}", r.passes);
@@ -452,8 +584,42 @@ mod tests {
 
     #[test]
     fn rejects_oversized_input() {
-        let Some(mut ex) = executor(8) else { return };
+        let Some(mut ex) = executor(8, "oversized") else { return };
         let toks = input(6, 2000);
         assert!(ex.serve(&toks).is_err());
+    }
+
+    #[test]
+    fn demand_reads_and_prefetch_upgrades_go_through_the_engine() {
+        // tiny DRAM (2 chunks) so a second request pushes the first
+        // one's chunks to SSD-only
+        let Some(mut ex) = executor(2, "io") else { return };
+        let toks = input(7, 700);
+        let other = input(8, 700);
+        let r1 = ex.serve(&toks).unwrap();
+        assert_eq!(r1.reused_tokens, 0);
+        let _ = ex.serve(&other).unwrap(); // evicts `toks` chunks from DRAM
+        let r2 = ex.serve(&toks).unwrap();
+        let io = ex.io_stats().unwrap();
+        if r2.reused_from_ssd > 0 {
+            assert!(
+                io.demand.submitted > 0,
+                "SSD demand reads must go through the engine"
+            );
+            assert_eq!(io.demand.failed, 0);
+        }
+        // stage prefetches for the now-SSD-resident `other` chain while
+        // the engine is paused; the next serve's demand submits must
+        // upgrade them (read once, at demand priority)
+        let _ = ex.serve(&toks).unwrap(); // make `other` SSD-only again
+        ex.io_pause();
+        let chain = ChunkedSeq::new(&other, ex.chunk_tokens);
+        let staged = ex.prefetch_chain(&chain);
+        let before = ex.io_stats().unwrap().upgraded;
+        let r3 = ex.serve(&other).unwrap(); // resumes the engine itself
+        if staged > 0 && r3.reused_from_ssd > 0 {
+            let after = ex.io_stats().unwrap().upgraded;
+            assert!(after > before, "queued prefetches must be upgraded, not re-read");
+        }
     }
 }

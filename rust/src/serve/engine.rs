@@ -14,6 +14,7 @@ use crate::cache::tier::Tier;
 use crate::config::ExperimentConfig;
 use crate::hw::spec::{model_spec, platform_spec, ModelSpec, PlatformSpec};
 use crate::hw::transfer::TransferFabric;
+use crate::io::{IoStats, Lane, VirtualLanes};
 use crate::serve::executor::SimExecutor;
 use crate::serve::metrics::{MetricsCollector, Report};
 use crate::serve::prefetcher::SimPrefetcher;
@@ -46,6 +47,9 @@ pub struct RunOutcome {
     pub prefetch_submitted: u64,
     pub prefetch_completed: u64,
     pub prefetch_dropped: u64,
+    pub prefetch_cancelled: u64,
+    /// Dual-lane transfer counters for the SSD read resource.
+    pub io: IoStats,
     /// Mean chunks reused per tier per request.
     pub reused_gpu_chunks: u64,
     pub reused_dram_chunks: u64,
@@ -88,6 +92,11 @@ pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> Ru
     let platform = platform_spec(&cfg.platform).expect("validated platform");
     let mut cache = CacheEngine::new(cache_config(cfg, spec, &model, &platform));
     let mut fabric = TransferFabric::new(&platform);
+    // Dual-lane virtual-time view of the SSD read resource: demand
+    // reads preempt queued prefetch work for async-I/O systems; for
+    // synchronous systems both classes share the prefetch-lane FIFO,
+    // reproducing the single shared channel they model.
+    let mut lanes = VirtualLanes::from_channel(&fabric.ssd_read);
     let exec = SimExecutor::new(&model, &platform, cfg.chunk_tokens);
     let mut prefetcher = SimPrefetcher::new();
     let strategy = prefetch::registry::parse(&spec.prefetch_strategy).unwrap_or_else(|| {
@@ -158,9 +167,18 @@ pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> Ru
                     .collect();
                 strategy.select_targets(&window, &cache)
             };
-            prefetcher.submit_targets(&cache, &mut fabric.ssd_read, clock, &targets);
+            prefetcher.submit_targets(
+                &cache,
+                &mut lanes,
+                clock,
+                &targets,
+                cfg.io_prefetch_depth,
+            );
         }
-        prefetcher.drain(&mut cache, clock);
+        // drop queued loads whose target was evicted or promoted since
+        // submission (the engine's cancellation tokens, in virtual time)
+        prefetcher.cancel_stale(&cache, &mut lanes, clock);
+        prefetcher.drain(&mut cache, &mut lanes, clock);
 
         // 3. serve the head request's prefill (one pass), or a decode
         // round if nothing is waiting.
@@ -168,15 +186,39 @@ pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> Ru
             req.started_at = Some(clock);
             let plan = plan_movement(&mut cache, &req.chain);
 
-            // demand SSD loads: in-flight prefetches are awaited, the
-            // rest are enqueued now on the shared (contended) channel
+            // demand SSD loads: in-flight prefetches are claimed (an
+            // async system upgrades queued ones to demand priority —
+            // read once, served sooner), the rest are enqueued on the
+            // demand lane; without async I/O, demand reads take the
+            // same FIFO the prefetch traffic uses, so a prefetch
+            // backlog delays them — the contention PCR removes.
             let mut ssd_ready = clock;
             for id in &plan.ssd_nodes {
-                let t = match prefetcher.ready_at(*id) {
-                    Some(t) => t,
-                    None => {
-                        let bytes = cache.tree.node(*id).bytes;
-                        fabric.ssd_read.enqueue(clock, bytes).1
+                let t = if spec.async_io {
+                    match prefetcher.upgrade(&cache, &mut lanes, clock, *id) {
+                        Some(t) => t,
+                        None => {
+                            let bytes = cache.tree.node(*id).bytes;
+                            let (_, f) = lanes.enqueue(Lane::Demand, clock, bytes);
+                            lanes.stats.demand.completed += 1;
+                            f
+                        }
+                    }
+                } else {
+                    match prefetcher.ready_at(*id) {
+                        Some(t) => t,
+                        None => {
+                            let bytes = cache.tree.node(*id).bytes;
+                            // shared-FIFO timing, booked as demand work
+                            let (s, f) = lanes.reserve(Lane::Prefetch, clock, bytes);
+                            let st = &mut lanes.stats.demand;
+                            st.submitted += 1;
+                            st.completed += 1;
+                            st.bytes_moved += bytes;
+                            st.wait_seconds += s - clock;
+                            st.serve_seconds += f - s;
+                            f
+                        }
                     }
                 };
                 ssd_ready = ssd_ready.max(t);
@@ -282,6 +324,7 @@ pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> Ru
 
     let finished = metrics.finished;
     debug_assert_eq!(finished, items.len(), "all requests must finish");
+    metrics.io = lanes.stats;
     RunOutcome {
         system: spec.name,
         report: metrics.report(),
@@ -291,6 +334,8 @@ pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> Ru
         prefetch_submitted: prefetcher.submitted,
         prefetch_completed: prefetcher.completed,
         prefetch_dropped: prefetcher.dropped,
+        prefetch_cancelled: prefetcher.cancelled,
+        io: lanes.stats,
         reused_gpu_chunks: reused_gpu,
         reused_dram_chunks: reused_dram,
         reused_ssd_chunks: reused_ssd,
@@ -468,6 +513,29 @@ mod tests {
         assert_eq!(a.report.e2el.p99, b.report.e2el.p99);
         assert_eq!(a.cache.total_hits(), b.cache.total_hits());
         assert_eq!(a.prefetch_submitted, b.prefetch_submitted);
+        assert_eq!(a.io.upgraded, b.io.upgraded);
+        assert_eq!(a.io.demand.submitted, b.io.demand.submitted);
+    }
+
+    #[test]
+    fn io_lanes_report_lane_traffic() {
+        let pcr = run_system("pcr", 0.8);
+        // the prefetcher's counters and the lane counters must agree
+        assert!(pcr.io.prefetch.submitted > 0, "no prefetch lane traffic");
+        assert_eq!(pcr.io.prefetch.submitted, pcr.prefetch_submitted);
+        assert_eq!(pcr.io.prefetch.completed, pcr.prefetch_completed);
+        assert_eq!(pcr.io.prefetch.cancelled, pcr.prefetch_cancelled);
+        // the report carries the same snapshot the outcome does
+        assert_eq!(
+            pcr.report.io.prefetch.submitted,
+            pcr.io.prefetch.submitted
+        );
+        assert!(pcr.report.pretty().contains("upgraded"));
+        // non-prefetching baselines move demand bytes only
+        let scc = run_system("sccache", 0.8);
+        assert_eq!(scc.io.prefetch.submitted, 0);
+        assert!(scc.io.demand.submitted > 0, "sccache serves SSD demand reads");
+        assert_eq!(scc.io.upgraded, 0);
     }
 
     #[test]

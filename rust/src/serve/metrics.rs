@@ -1,6 +1,7 @@
 //! Serving metrics: TTFT / E2EL / ITL / queueing collectors and the
 //! per-run report every bench prints (the paper's Figs 14–16 rows).
 
+use crate::io::IoStats;
 use crate::serve::request::Request;
 use crate::util::stats::{Samples, Summary};
 
@@ -16,6 +17,8 @@ pub struct MetricsCollector {
     /// Per-request reuse ratio (reused / total tokens).
     pub reuse_ratio: Samples,
     pub finished: usize,
+    /// Transfer-lane counters (set by the engine before `report`).
+    pub io: IoStats,
 }
 
 impl MetricsCollector {
@@ -56,6 +59,7 @@ impl MetricsCollector {
             queue_time: self.queue_time.summary(),
             compute_time: self.compute_time.summary(),
             mean_reuse_ratio: self.reuse_ratio.mean(),
+            io: self.io,
         }
     }
 }
@@ -70,12 +74,14 @@ pub struct Report {
     pub queue_time: Summary,
     pub compute_time: Summary,
     pub mean_reuse_ratio: f64,
+    /// Dual-lane transfer counters (demand vs prefetch, upgrades).
+    pub io: IoStats,
 }
 
 impl Report {
     /// Multi-line human-readable block (seconds).
     pub fn pretty(&self) -> String {
-        format!(
+        let mut s = format!(
             "finished={} reuse={:.1}%\n  TTFT  {}\n  E2EL  {}\n  ITL   {}\n  queue {}\n  comp  {}",
             self.finished,
             self.mean_reuse_ratio * 100.0,
@@ -84,7 +90,12 @@ impl Report {
             self.itl.row(1.0),
             self.queue_time.row(1.0),
             self.compute_time.row(1.0),
-        )
+        );
+        if self.io.demand.submitted + self.io.prefetch.submitted > 0 {
+            s.push_str("\n  ");
+            s.push_str(&self.io.pretty().replace('\n', "\n  "));
+        }
+        s
     }
 }
 

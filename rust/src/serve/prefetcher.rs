@@ -4,28 +4,40 @@
 //! Target selection is the pluggable half — a
 //! [`PrefetchStrategy`](crate::cache::prefetch::PrefetchStrategy)
 //! inspects the waiting queue's look-ahead window and hands this mover
-//! the SSD-resident chunks worth promoting; the mover submits
-//! asynchronous loads on the SSD read channel, de-duplicates in-flight
-//! work, and drains completions into DRAM. Demand loads for the request
-//! being scheduled share the same FIFO channel, so prefetch backlog and
-//! demand traffic contend — exactly the trade-off the paper's bounded
-//! window manages.
+//! the SSD-resident chunks worth promoting; the mover submits loads on
+//! the **prefetch lane** of the dual-lane transfer model
+//! ([`VirtualLanes`](crate::io::VirtualLanes) — the virtual-time twin
+//! of the real [`io::TransferEngine`](crate::io::TransferEngine)),
+//! de-duplicates in-flight work, honours the bounded-queue depth
+//! (backpressure), cancels loads whose target became stale before the
+//! read started, upgrades loads the demand path claims, and drains
+//! completions into DRAM. Demand loads run on the demand lane, which
+//! preempts queued prefetch work — exactly the trade-off the paper's
+//! bounded window manages.
 
 use crate::cache::engine::CacheEngine;
 use crate::cache::prefix_tree::NodeId;
 use crate::cache::tier::Tier;
-use crate::hw::transfer::Channel;
+use crate::io::{Lane, VirtualLanes};
 use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug)]
+struct Inflight {
+    start: f64,
+    finish: f64,
+}
 
 /// Virtual-time prefetcher state.
 #[derive(Debug, Default)]
 pub struct SimPrefetcher {
-    /// node -> absolute completion time of its in-flight SSD read.
-    inflight: BTreeMap<NodeId, f64>,
+    /// node -> (start, finish) of its in-flight SSD read.
+    inflight: BTreeMap<NodeId, Inflight>,
     pub submitted: u64,
     pub completed: u64,
     /// Prefetched chunks that could not be promoted (DRAM full).
     pub dropped: u64,
+    /// Loads abandoned before their read started (stale target).
+    pub cancelled: u64,
 }
 
 impl SimPrefetcher {
@@ -33,16 +45,20 @@ impl SimPrefetcher {
         Self::default()
     }
 
-    /// Submit loads for strategy-selected `targets`, skipping chunks
-    /// already in flight and (defensively) targets that are no longer
-    /// SSD-only — a strategy may hand back stale or duplicate entries.
-    /// Returns the number of new submissions.
+    /// Submit prefetch-lane loads for strategy-selected `targets`,
+    /// skipping chunks already in flight and (defensively) targets that
+    /// are no longer SSD-only — a strategy may hand back stale or
+    /// duplicate entries. At most `depth` loads may be in flight at
+    /// once; targets beyond the bound are rejected (counted on the
+    /// prefetch lane) rather than queued unboundedly. Returns the
+    /// number of new submissions.
     pub fn submit_targets(
         &mut self,
         cache: &CacheEngine,
-        ssd_read: &mut Channel,
+        lanes: &mut VirtualLanes,
         now: f64,
         targets: &[NodeId],
+        depth: usize,
     ) -> usize {
         let mut n = 0;
         for &id in targets {
@@ -53,9 +69,13 @@ impl SimPrefetcher {
             if !t.contains(Tier::Ssd) || t.contains(Tier::Dram) || t.contains(Tier::Gpu) {
                 continue;
             }
+            if self.inflight.len() >= depth.max(1) {
+                lanes.stats.prefetch.rejected += 1;
+                continue;
+            }
             let bytes = cache.tree.node(id).bytes;
-            let (_, finish) = ssd_read.enqueue(now, bytes);
-            self.inflight.insert(id, finish);
+            let (start, finish) = lanes.enqueue(Lane::Prefetch, now, bytes);
+            self.inflight.insert(id, Inflight { start, finish });
             self.submitted += 1;
             n += 1;
         }
@@ -68,32 +88,90 @@ impl SimPrefetcher {
     pub fn submit_chain(
         &mut self,
         cache: &CacheEngine,
-        ssd_read: &mut Channel,
+        lanes: &mut VirtualLanes,
         now: f64,
         chain: &[crate::cache::chunk::ChunkKey],
+        depth: usize,
     ) -> usize {
         let targets = cache.prefetch_targets(chain);
-        self.submit_targets(cache, ssd_read, now, &targets)
+        self.submit_targets(cache, lanes, now, &targets, depth)
     }
 
     /// If `id` is being prefetched, when will it land in DRAM?
     pub fn ready_at(&self, id: NodeId) -> Option<f64> {
-        self.inflight.get(&id).copied()
+        self.inflight.get(&id).map(|f| f.finish)
+    }
+
+    /// Demand-claim an in-flight prefetch of `id` (the engine's demand
+    /// path found the chunk already on its way): the load is served
+    /// once. If the read has not started yet it is re-issued at demand
+    /// priority (the real engine moves the ticket between queues);
+    /// if it is already on the device it completes on schedule.
+    /// Returns the upgraded ready time, or `None` if `id` is not in
+    /// flight.
+    pub fn upgrade(
+        &mut self,
+        cache: &CacheEngine,
+        lanes: &mut VirtualLanes,
+        now: f64,
+        id: NodeId,
+    ) -> Option<f64> {
+        let entry = self.inflight.get_mut(&id)?;
+        lanes.stats.upgraded += 1;
+        if entry.start > now {
+            let bytes = cache.tree.node(id).bytes;
+            let (start, finish) = lanes.reserve(Lane::Demand, now, bytes);
+            entry.start = start;
+            entry.finish = finish;
+        }
+        Some(entry.finish)
+    }
+
+    /// Drop in-flight loads whose read has not started by `now` and
+    /// whose target is no longer worth moving (evicted from SSD, or
+    /// already DRAM/GPU-resident) — the virtual-time analogue of
+    /// cancellation tokens: stale work is dropped before it hits disk.
+    /// Returns the number of cancelled loads.
+    pub fn cancel_stale(
+        &mut self,
+        cache: &CacheEngine,
+        lanes: &mut VirtualLanes,
+        now: f64,
+    ) -> usize {
+        let stale: Vec<NodeId> = self
+            .inflight
+            .iter()
+            .filter(|(id, f)| {
+                if f.start <= now {
+                    return false; // already on the device: let it finish
+                }
+                let t = cache.tree.node(**id).tiers;
+                !t.contains(Tier::Ssd) || t.contains(Tier::Dram) || t.contains(Tier::Gpu)
+            })
+            .map(|(id, _)| *id)
+            .collect();
+        for id in &stale {
+            self.inflight.remove(id);
+            self.cancelled += 1;
+            lanes.stats.prefetch.cancelled += 1;
+        }
+        stale.len()
     }
 
     /// Promote every load that has completed by `now` into DRAM
     /// (Algorithm 1's `DrainCompletedSSDLoads`). Chunks that no longer
     /// fit (DRAM pressure) stay on SSD and count as `dropped`.
-    pub fn drain(&mut self, cache: &mut CacheEngine, now: f64) {
+    pub fn drain(&mut self, cache: &mut CacheEngine, lanes: &mut VirtualLanes, now: f64) {
         let done: Vec<NodeId> = self
             .inflight
             .iter()
-            .filter(|(_, t)| **t <= now)
+            .filter(|(_, f)| f.finish <= now)
             .map(|(id, _)| *id)
             .collect();
         for id in done {
             self.inflight.remove(&id);
             self.completed += 1;
+            lanes.stats.prefetch.completed += 1;
             // The chunk may have been evicted from SSD meanwhile; only
             // promote if it is still resident somewhere.
             if cache.tree.node(id).tiers.contains(Tier::Ssd)
@@ -118,8 +196,9 @@ mod tests {
     use crate::cache::engine::{CacheConfig, CacheEngine};
 
     const CB: u64 = 1_000_000; // 1 MB chunks
+    const DEEP: usize = usize::MAX; // unbounded depth for legacy cases
 
-    fn setup() -> (CacheEngine, Channel) {
+    fn setup() -> (CacheEngine, VirtualLanes) {
         let cache = CacheEngine::new(CacheConfig {
             chunk_tokens: 256,
             gpu_capacity: 100 * CB,
@@ -127,7 +206,7 @@ mod tests {
             ssd_capacity: 100 * CB,
             policy: "lookahead-lru".into(),
         });
-        (cache, Channel::new("ssd-read", 0.001, 0.0)) // 1 MB/s => 1s per chunk
+        (cache, VirtualLanes::new(0.001, 0.0)) // 1 MB/s => 1s per chunk
     }
 
     fn chain(cache: &mut CacheEngine, tag: u32, n: usize) -> Vec<ChunkKey> {
@@ -145,53 +224,55 @@ mod tests {
 
     #[test]
     fn submits_and_drains_in_order() {
-        let (mut cache, mut ch) = setup();
+        let (mut cache, mut lanes) = setup();
         let keys = chain(&mut cache, 1, 2);
         let mut pf = SimPrefetcher::new();
-        let n = pf.submit_chain(&cache, &mut ch, 0.0, &keys);
+        let n = pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP);
         assert_eq!(n, 2);
         assert_eq!(pf.inflight_count(), 2);
         // nothing ready at t=0.5
-        pf.drain(&mut cache, 0.5);
+        pf.drain(&mut cache, &mut lanes, 0.5);
         assert_eq!(pf.completed, 0);
-        // first chunk lands at 1.0, second at 2.0 (FIFO channel)
-        pf.drain(&mut cache, 1.0);
+        // first chunk lands at 1.0, second at 2.0 (FIFO lane)
+        pf.drain(&mut cache, &mut lanes, 1.0);
         assert_eq!(pf.completed, 1);
         let id0 = cache.tree.get(keys[0]).unwrap();
         assert!(cache.tree.node(id0).tiers.contains(Tier::Dram));
-        pf.drain(&mut cache, 2.0);
+        pf.drain(&mut cache, &mut lanes, 2.0);
         assert_eq!(pf.completed, 2);
+        assert_eq!(lanes.stats.prefetch.completed, 2);
         cache.check_accounting().unwrap();
     }
 
     #[test]
     fn no_duplicate_submission() {
-        let (mut cache, mut ch) = setup();
+        let (mut cache, mut lanes) = setup();
         let keys = chain(&mut cache, 2, 2);
         let mut pf = SimPrefetcher::new();
-        assert_eq!(pf.submit_chain(&cache, &mut ch, 0.0, &keys), 2);
-        assert_eq!(pf.submit_chain(&cache, &mut ch, 0.1, &keys), 0);
+        assert_eq!(pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP), 2);
+        assert_eq!(pf.submit_chain(&cache, &mut lanes, 0.1, &keys, DEEP), 0);
         assert_eq!(pf.submitted, 2);
+        assert_eq!(lanes.stats.prefetch.submitted, 2);
     }
 
     #[test]
-    fn ready_at_reports_channel_finish() {
-        let (mut cache, mut ch) = setup();
+    fn ready_at_reports_lane_finish() {
+        let (mut cache, mut lanes) = setup();
         let keys = chain(&mut cache, 3, 1);
         let mut pf = SimPrefetcher::new();
-        pf.submit_chain(&cache, &mut ch, 0.0, &keys);
+        pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP);
         let id = cache.tree.get(keys[0]).unwrap();
         assert!((pf.ready_at(id).unwrap() - 1.0).abs() < 1e-9);
     }
 
     #[test]
     fn dram_pressure_counts_drops() {
-        let (mut cache, mut ch) = setup();
+        let (mut cache, mut lanes) = setup();
         // DRAM fits 3 chunks; chain of 5 on SSD
         let keys = chain(&mut cache, 4, 5);
         let mut pf = SimPrefetcher::new();
-        pf.submit_chain(&cache, &mut ch, 0.0, &keys);
-        pf.drain(&mut cache, 100.0);
+        pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP);
+        pf.drain(&mut cache, &mut lanes, 100.0);
         assert_eq!(pf.completed, 5);
         // DRAM holds at most 3 chunks; later promotions may evict
         // earlier ones (legal — they keep their SSD copies), so the
@@ -214,7 +295,7 @@ mod tests {
 
     #[test]
     fn stale_and_duplicate_targets_are_skipped() {
-        let (mut cache, mut ch) = setup();
+        let (mut cache, mut lanes) = setup();
         let keys = chain(&mut cache, 6, 2);
         let ids: Vec<NodeId> = keys
             .iter()
@@ -222,18 +303,75 @@ mod tests {
             .collect();
         cache.promote(ids[0], Tier::Dram); // no longer SSD-only
         let mut pf = SimPrefetcher::new();
-        let n = pf.submit_targets(&cache, &mut ch, 0.0, &[ids[0], ids[1], ids[1]]);
+        let n = pf.submit_targets(&cache, &mut lanes, 0.0, &[ids[0], ids[1], ids[1]], DEEP);
         assert_eq!(n, 1, "stale + in-call duplicate must be skipped");
         assert_eq!(pf.submitted, 1);
     }
 
     #[test]
     fn dram_resident_chunks_not_prefetched() {
-        let (mut cache, mut ch) = setup();
+        let (mut cache, mut lanes) = setup();
         let keys = chain(&mut cache, 5, 2);
         let id0 = cache.tree.get(keys[0]).unwrap();
         cache.promote(id0, Tier::Dram);
         let mut pf = SimPrefetcher::new();
-        assert_eq!(pf.submit_chain(&cache, &mut ch, 0.0, &keys), 1);
+        assert_eq!(pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP), 1);
+    }
+
+    #[test]
+    fn bounded_depth_applies_backpressure() {
+        let (mut cache, mut lanes) = setup();
+        let keys = chain(&mut cache, 7, 5);
+        let mut pf = SimPrefetcher::new();
+        let n = pf.submit_chain(&cache, &mut lanes, 0.0, &keys, 2);
+        assert_eq!(n, 2, "depth 2 admits two loads");
+        assert_eq!(lanes.stats.prefetch.rejected, 3);
+        // drain frees slots: resubmission admits the rest
+        pf.drain(&mut cache, &mut lanes, 10.0);
+        let n2 = pf.submit_chain(&cache, &mut lanes, 10.0, &keys, 2);
+        assert_eq!(n2, 2);
+    }
+
+    #[test]
+    fn upgrade_claims_queued_load_at_demand_priority() {
+        let (mut cache, mut lanes) = setup();
+        let keys = chain(&mut cache, 8, 3);
+        let ids: Vec<NodeId> = keys.iter().map(|k| cache.tree.get(*k).unwrap()).collect();
+        let mut pf = SimPrefetcher::new();
+        pf.submit_targets(&cache, &mut lanes, 0.0, &ids, DEEP);
+        // third load queues behind two others: starts at 2.0
+        assert!((pf.ready_at(ids[2]).unwrap() - 3.0).abs() < 1e-9);
+        // a demand claim at t=0 re-issues it on the demand lane (1s)
+        let t = pf.upgrade(&cache, &mut lanes, 0.0, ids[2]).unwrap();
+        assert!((t - 1.0).abs() < 1e-9, "upgraded ready {t}");
+        assert_eq!(lanes.stats.upgraded, 1);
+        // a load already on the device keeps its schedule
+        let t0 = pf.upgrade(&cache, &mut lanes, 0.5, ids[0]).unwrap();
+        assert!((t0 - 1.0).abs() < 1e-9);
+        // unknown node: no upgrade
+        pf.drain(&mut cache, &mut lanes, 10.0);
+        assert!(pf.upgrade(&cache, &mut lanes, 10.0, ids[0]).is_none());
+    }
+
+    #[test]
+    fn cancel_stale_drops_unstarted_loads_only() {
+        let (mut cache, mut lanes) = setup();
+        let keys = chain(&mut cache, 9, 3);
+        let ids: Vec<NodeId> = keys.iter().map(|k| cache.tree.get(*k).unwrap()).collect();
+        let mut pf = SimPrefetcher::new();
+        pf.submit_targets(&cache, &mut lanes, 0.0, &ids, DEEP);
+        // loads start at 0.0 / 1.0 / 2.0; make all targets stale
+        for &id in &ids {
+            cache.promote(id, Tier::Dram);
+        }
+        // at t=0.5 only the 2nd and 3rd loads haven't started
+        let n = pf.cancel_stale(&cache, &mut lanes, 0.5);
+        assert_eq!(n, 2);
+        assert_eq!(pf.cancelled, 2);
+        assert_eq!(lanes.stats.prefetch.cancelled, 2);
+        assert_eq!(pf.inflight_count(), 1, "started load keeps going");
+        pf.drain(&mut cache, &mut lanes, 10.0);
+        assert_eq!(pf.completed, 1);
+        cache.check_accounting().unwrap();
     }
 }

@@ -164,10 +164,12 @@ fn err_json(e: &anyhow::Error) -> Json {
 fn stats_json(state: &ServerState) -> Json {
     let mut ttft = state.ttft.lock().unwrap();
     let requests = *state.requests.lock().unwrap();
-    let stats = match state.executor.stats() {
-        Ok(s) => s.cache,
+    let exec_stats = match state.executor.stats() {
+        Ok(s) => s,
         Err(e) => return err_json(&e),
     };
+    let stats = exec_stats.cache;
+    let io = exec_stats.io.unwrap_or_default();
     Json::from_pairs(vec![
         ("requests", requests.into()),
         ("ttft_mean_s", if ttft.is_empty() { Json::Null } else { ttft.mean().into() }),
@@ -176,6 +178,14 @@ fn stats_json(state: &ServerState) -> Json {
         ("hits_dram", stats.hit_chunks[1].into()),
         ("hits_ssd", stats.hit_chunks[2].into()),
         ("evictions_dram", stats.evicted_chunks[1].into()),
+        // transfer-engine lane counters (all zero without an SSD tier)
+        ("io_demand_completed", io.demand.completed.into()),
+        ("io_prefetch_completed", io.prefetch.completed.into()),
+        ("io_prefetch_cancelled", io.prefetch.cancelled.into()),
+        ("io_deduped", (io.demand.deduped + io.prefetch.deduped).into()),
+        ("io_upgraded", io.upgraded.into()),
+        ("io_demand_mean_wait_s", io.demand.mean_wait().into()),
+        ("io_prefetch_mean_wait_s", io.prefetch.mean_wait().into()),
     ])
 }
 
@@ -315,6 +325,10 @@ mod tests {
         let (code, stats) = http_request(&addr, "GET", "/stats", "").unwrap();
         assert_eq!(code, 200);
         assert_eq!(stats.get("requests").unwrap().as_usize(), Some(2));
+        // transfer-engine counters are exported (zeros are fine here —
+        // both requests hit DRAM)
+        assert!(stats.get("io_upgraded").is_some());
+        assert!(stats.get("io_demand_completed").is_some());
 
         // error paths
         let (code, _) = http_request(&addr, "POST", "/generate", "{}").unwrap();

@@ -41,6 +41,12 @@ pub struct SystemSpec {
     pub prefetch_strategy: String,
     /// Batched chunk copies (`cudaMemcpyBatchAsync`) vs block-by-block.
     pub batch_async: bool,
+    /// Dual-lane async SSD I/O (`io::VirtualLanes`): demand reads
+    /// preempt queued prefetch work instead of sharing one FIFO with
+    /// it. Systems without it serve demand reads behind whatever the
+    /// shared channel is already doing — the synchronous-loading cost
+    /// the paper's asynchronous design removes.
+    pub async_io: bool,
 }
 
 impl SystemSpec {
@@ -57,6 +63,7 @@ impl SystemSpec {
                 policy: "lru".into(),
                 prefetch_strategy: "none".into(),
                 batch_async: false,
+                async_io: false,
             },
             "ccache" => SystemSpec {
                 name: "ccache",
@@ -68,6 +75,7 @@ impl SystemSpec {
                 policy: "lru".into(),
                 prefetch_strategy: "none".into(),
                 batch_async: false,
+                async_io: false,
             },
             "sccache" => SystemSpec {
                 name: "sccache",
@@ -79,6 +87,7 @@ impl SystemSpec {
                 policy: "lru".into(),
                 prefetch_strategy: "none".into(),
                 batch_async: false,
+                async_io: false,
             },
             "lmcache" => SystemSpec {
                 name: "lmcache",
@@ -90,6 +99,7 @@ impl SystemSpec {
                 policy: "lru".into(),
                 prefetch_strategy: "queue-window".into(),
                 batch_async: true,
+                async_io: true,
             },
             "pcr" => SystemSpec {
                 name: "pcr",
@@ -101,6 +111,7 @@ impl SystemSpec {
                 policy: "lookahead-lru".into(),
                 prefetch_strategy: "queue-window".into(),
                 batch_async: true,
+                async_io: true,
             },
             _ => return None,
         };
@@ -185,9 +196,11 @@ mod tests {
         assert_eq!(c.overlap, OverlapMode::Sync);
         let s = SystemSpec::named("sccache", 4).unwrap();
         assert!(s.dram_tier && s.ssd_tier);
+        assert!(!s.async_io, "sccache loads demand reads synchronously");
         let p = SystemSpec::named("pcr", 6).unwrap();
         assert_eq!(p.prefetch_window, 6);
         assert!(p.lookahead_lru);
+        assert!(p.async_io && SystemSpec::named("lmcache", 4).unwrap().async_io);
         assert_eq!(p.policy, "lookahead-lru");
         assert_eq!(p.prefetch_strategy, "queue-window");
         assert!(SystemSpec::named("orca", 4).is_none());
