@@ -2,9 +2,16 @@
 //!
 //! These are the before/after probes for the optimization pass recorded
 //! in EXPERIMENTS.md §Perf: prefix-tree matching, eviction-candidate
-//! scans, movement planning, pipeline makespan, a full engine step, the
-//! substrate hot spots (HNSW search, JSON, PRNG), and the dual-lane
-//! transfer engine's demand-vs-prefetch contention on real disk (Fig 12).
+//! scans, the eviction-pressure A/B of the fused O(n) scan vs the
+//! indexed O(log n) heap (§Perf iteration 3 — emitted as machine-
+//! readable `BENCH_eviction_pressure.json`), movement planning,
+//! pipeline makespan, a full engine step, the substrate hot spots
+//! (HNSW search, JSON, PRNG), and the dual-lane transfer engine's
+//! demand-vs-prefetch contention on real disk (Fig 12).
+//!
+//! Args (after `cargo bench --bench perf_hotpath --`):
+//!   --eviction-pressure   run only the eviction-pressure section
+//!   --smoke               small trees + short timing (CI smoke mode)
 
 use pcr::bench::{black_box, section, Bench};
 use pcr::cache::chunk::{chain_hash, ChunkKey, ChunkedSeq};
@@ -12,6 +19,7 @@ use pcr::cache::engine::{CacheConfig, CacheEngine};
 use pcr::cache::policy::registry;
 use pcr::cache::tier::Tier;
 use pcr::sim::pipeline::{makespan, LayerTimings, OverlapMode};
+use pcr::util::json::Json;
 use pcr::util::rng::Rng;
 
 fn build_cache(chains: usize, depth: usize) -> (CacheEngine, Vec<Vec<ChunkKey>>) {
@@ -38,7 +46,91 @@ fn build_cache(chains: usize, depth: usize) -> (CacheEngine, Vec<Vec<ChunkKey>>)
     (cache, all)
 }
 
+/// One steady-state cache under eviction pressure: `n` independent
+/// DRAM leaves at exact capacity, then evict_one + insert per op (each
+/// eviction frees exactly the slot the next insert needs, so the tree
+/// holds `n` live nodes throughout). Returns (evictions/sec,
+/// stale_discarded, compactions).
+fn pressure_rate(n: usize, indexed: bool, min_time: f64) -> (f64, u64, u64) {
+    const CB: u64 = 1_000_000;
+    let mut cache = CacheEngine::new(CacheConfig {
+        chunk_tokens: 256,
+        gpu_capacity: 0,
+        dram_capacity: n as u64 * CB,
+        ssd_capacity: 0,
+        policy: "lookahead-lru".into(),
+    });
+    cache.use_indexed_eviction = indexed;
+    for i in 0..n {
+        let k = chain_hash(ChunkKey::ROOT, &[0xBEEF, i as u32]);
+        cache.insert(None, k, CB, Tier::Dram).expect("seed insert");
+    }
+    let mut fresh = 0u32;
+    let mut ops = 0u64;
+    let t0 = std::time::Instant::now();
+    while t0.elapsed().as_secs_f64() < min_time {
+        for _ in 0..200 {
+            black_box(cache.evict_one(Tier::Dram)).expect("nonempty tier");
+            let k = chain_hash(ChunkKey::ROOT, &[0xF00D, fresh]);
+            fresh = fresh.wrapping_add(1);
+            cache.insert(None, k, CB, Tier::Dram).expect("steady insert");
+            ops += 1;
+        }
+    }
+    let rate = ops as f64 / t0.elapsed().as_secs_f64();
+    (rate, cache.victim_index.stale_discarded, cache.victim_index.compactions)
+}
+
+/// The §Perf iteration 3 headline probe: evictions/sec under insert
+/// pressure, fused scan vs incremental index, across tree sizes. The
+/// fused path is O(n) per eviction, the indexed path amortized
+/// O(log n) — the gap must widen with n. Emits
+/// `BENCH_eviction_pressure.json` next to the manifest (CI uploads it
+/// as an artifact; EXPERIMENTS.md tracks the trajectory).
+fn eviction_pressure(smoke: bool) {
+    section("perf: eviction pressure — fused O(n) scan vs indexed lazy rank heap");
+    let (sizes, min_time): (&[usize], f64) = if smoke {
+        (&[1_000, 4_000], 0.25)
+    } else {
+        (&[1_000, 10_000, 100_000], 1.0)
+    };
+    let mut rows: Vec<Json> = Vec::new();
+    for &n in sizes {
+        let (fused, _, _) = pressure_rate(n, false, min_time);
+        let (indexed, stale, compactions) = pressure_rate(n, true, min_time);
+        let speedup = indexed / fused;
+        println!(
+            "  {n:>7} nodes: fused {fused:>10.0} ev/s, indexed {indexed:>10.0} ev/s ({speedup:.1}x)"
+        );
+        rows.push(Json::from_pairs(vec![
+            ("nodes", n.into()),
+            ("fused_evictions_per_sec", fused.into()),
+            ("indexed_evictions_per_sec", indexed.into()),
+            ("speedup", speedup.into()),
+            ("stale_discarded", stale.into()),
+            ("compactions", compactions.into()),
+        ]));
+    }
+    let doc = Json::from_pairs(vec![
+        ("bench", "eviction_pressure".into()),
+        ("policy", "lookahead-lru".into()),
+        ("smoke", smoke.into()),
+        ("workload", "steady state: evict_one + insert per op, DRAM at capacity".into()),
+        ("sizes", rows.into()),
+    ]);
+    let path = "BENCH_eviction_pressure.json";
+    std::fs::write(path, doc.dump() + "\n").expect("write bench json");
+    println!("  -> wrote {path}");
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    if args.iter().any(|a| a == "--eviction-pressure") {
+        eviction_pressure(smoke);
+        return;
+    }
+
     section("perf: prefix-tree hot path");
     {
         let (cache, chains) = build_cache(2000, 26); // 52k nodes
@@ -60,6 +152,8 @@ fn main() {
         let r = Bench::new("evict_one under pressure (5k leaves)").min_time(1.0).run_setup();
         println!("{}", r.line());
     }
+
+    eviction_pressure(smoke);
 
     section("perf: fused victim scan per registered policy (52k nodes)");
     {

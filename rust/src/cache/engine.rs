@@ -8,6 +8,7 @@ use crate::cache::chunk::ChunkKey;
 use crate::cache::policy::{registry, EvictionPolicy};
 use crate::cache::prefix_tree::{NodeId, PrefixTree};
 use crate::cache::tier::{Tier, TierUsage};
+use crate::cache::victim_index::VictimIndex;
 
 /// Capacity/policy configuration of one cache engine instance. A tier
 /// with zero capacity is disabled (e.g. the vLLM baseline has DRAM=0,
@@ -99,6 +100,16 @@ pub struct CacheEngine {
     /// [`insert`](CacheEngine::insert) and
     /// [`evict_one`](CacheEngine::evict_one).
     pub policy: Box<dyn EvictionPolicy>,
+    /// Per-tier lazy rank heaps for amortized O(log n) victim selection
+    /// (§Perf iteration 3, EXPERIMENTS.md). Consistency bookkeeping
+    /// lives in the tree, so direct tree mutations (scheduler pins,
+    /// prefetcher promotes) keep the index honest automatically.
+    pub victim_index: VictimIndex,
+    /// Pick victims through the incremental index (the default). Turn
+    /// off to fall back to the fused O(n) reference scan — the parity
+    /// oracle, and the baseline the eviction-pressure bench measures
+    /// against.
+    pub use_indexed_eviction: bool,
     sweep_countdown: u32,
 }
 
@@ -131,6 +142,8 @@ impl CacheEngine {
             config,
             stats: CacheStats::default(),
             policy,
+            victim_index: VictimIndex::new(),
+            use_indexed_eviction: true,
             sweep_countdown: SWEEP_PERIOD,
         }
     }
@@ -176,10 +189,16 @@ impl CacheEngine {
     }
 
     /// Evict one chunk from `tier` per the configured policy. Returns
-    /// the evicted node. Uses the fused allocation-free victim scan
-    /// (EXPERIMENTS.md §Perf iteration 1).
+    /// the evicted node. Victim selection goes through the incremental
+    /// index (§Perf iteration 3) when enabled and the policy permits,
+    /// else the fused allocation-free scan (§Perf iteration 1).
     pub fn evict_one(&mut self, tier: Tier) -> Option<NodeId> {
-        let victim = self.policy.pick_victim_fused(&self.tree, tier)?;
+        let victim = if self.use_indexed_eviction && self.policy.indexable() {
+            let CacheEngine { policy, tree, victim_index, .. } = self;
+            policy.pick_victim_indexed(tree, tier, victim_index)?
+        } else {
+            self.policy.pick_victim_fused(&self.tree, tier)?
+        };
         let bytes = self.tree.node(victim).bytes;
         let fully_gone = self.tree.remove_residency(victim, tier);
         self.usage[tier.idx()].sub(bytes);
@@ -317,6 +336,16 @@ impl CacheEngine {
             }
         }
         Ok(())
+    }
+
+    /// Drop the victim index and queue a lazy rebuild over every live
+    /// node. Needed only after rank inputs changed *outside* the
+    /// tree's event bookkeeping — e.g. a custom policy re-ranking
+    /// through hidden global state (see the `cache` module docs). O(n)
+    /// queueing now; re-ranking happens incrementally at pick time.
+    pub fn force_reindex(&mut self) {
+        self.victim_index.clear();
+        self.tree.requeue_all();
     }
 
     fn maybe_sweep(&mut self) {
@@ -510,6 +539,65 @@ mod tests {
         // reinsert the dropped chunk
         let id2 = e.insert(Some(ids[0]), c[1], CHUNK_BYTES, Tier::Dram);
         assert!(id2.is_some());
+        e.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn indexed_and_fused_paths_evict_identically() {
+        for name in crate::cache::policy::registry::NAMES {
+            let mk = || {
+                CacheEngine::new(CacheConfig {
+                    chunk_tokens: 4,
+                    gpu_capacity: 0,
+                    dram_capacity: u64::MAX / 4,
+                    ssd_capacity: u64::MAX / 4,
+                    policy: name.to_string(),
+                })
+            };
+            let mut a = mk(); // indexed (the default)
+            let mut b = mk();
+            b.use_indexed_eviction = false;
+            assert!(a.use_indexed_eviction && a.policy.indexable());
+            // identical op sequences on both engines
+            for e in [&mut a, &mut b] {
+                for tag in 0..8u32 {
+                    insert_chain(e, &chain_of(tag, 1 + tag as usize % 3), Tier::Dram);
+                }
+                e.lookup(&chain_of(2, 3));
+                e.lookup(&chain_of(5, 3));
+                e.boost_chain(&chain_of(0, 1), 500);
+                for id in e.prefetch_targets(&chain_of(3, 1)) {
+                    e.promote(id, Tier::Dram);
+                }
+            }
+            // drain both to empty: every victim must match, in order
+            loop {
+                let va = a.evict_one(Tier::Dram);
+                let vb = b.evict_one(Tier::Dram);
+                assert_eq!(va, vb, "eviction order diverged for {name}");
+                if va.is_none() {
+                    break;
+                }
+            }
+            a.check_accounting().unwrap();
+        }
+    }
+
+    #[test]
+    fn force_reindex_recovers_from_out_of_band_rank_change() {
+        let mut e = CacheEngine::new(cfg(0, 1000, 0));
+        let a = chain_of(1, 1);
+        let b = chain_of(2, 1);
+        let ia = insert_chain(&mut e, &a, Tier::Dram)[0];
+        insert_chain(&mut e, &b, Tier::Dram);
+        // warm the index, then clear it to simulate drift
+        let CacheEngine { policy, tree, victim_index, .. } = &mut e;
+        let warm = policy.pick_victim_indexed(tree, Tier::Dram, victim_index);
+        assert_eq!(warm, Some(ia));
+        e.force_reindex();
+        // index rebuilt lazily from requeue_all: same answer, and
+        // eviction proceeds normally
+        assert_eq!(e.evict_one(Tier::Dram), Some(ia));
         e.check_accounting().unwrap();
     }
 

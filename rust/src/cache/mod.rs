@@ -14,6 +14,8 @@
 //! * [`tier`] — GPU/DRAM/SSD tiers and byte accounting.
 //! * [`engine`] — lookup/insert/promote/evict + prefetch target
 //!   selection over the tree.
+//! * [`victim_index`] — per-tier lazy rank heaps behind the amortized
+//!   O(log n) indexed eviction path (§Perf iteration 3).
 //! * [`store`] — actual chunk byte storage for the real PJRT path
 //!   (memory + spill-directory backends).
 //!
@@ -70,6 +72,33 @@
 //! let engine = CacheEngine::with_policy(config, Box::new(Slru));
 //! ```
 //!
+//! ## When a policy must force re-indexing
+//!
+//! The hot eviction path does not rescan the tree: the engine keeps a
+//! [`victim_index::VictimIndex`] of generation-stamped rank entries,
+//! and every tree event that can change a rank (touch, boost,
+//! `set_policy_meta`, pin/unpin, residency and `present_children`
+//! changes) invalidates the affected entries automatically. A custom
+//! policy gets the indexed path for free **iff** its `rank` is a pure
+//! function of those tracked inputs. Clock dependence is allowed only
+//! through `boost_until > tree.now()` comparisons — that one flip is
+//! covered by the tree's boost-expiry queue (`expire_boosts`).
+//!
+//! If your ranks depend on anything else — say, a policy-global knob
+//! read inside `rank` (LFUDA's `age` is safe: it feeds ranks only via
+//! `policy_meta` writes, which the tree tracks) — you have two options:
+//!
+//! * override `indexable()` to return `false`: the engine quietly falls
+//!   back to the fused scan for this policy; or
+//! * keep the index but call
+//!   [`engine::CacheEngine::force_reindex`] after every out-of-band
+//!   change (it drops the heaps and lazily re-ranks all live nodes).
+//!
+//! Getting this wrong does not corrupt the tree — it makes victim
+//! selection disagree with the fused oracle, which the three-way
+//! parity proptest (`prop_indexed_fused_unfused_victim_parity`)
+//! catches for registered policies.
+//!
 //! Prefetch-target selection follows the same shape: implement
 //! [`prefetch::PrefetchStrategy::select_targets`] over the waiting
 //! queue's look-ahead window and register it in
@@ -82,3 +111,4 @@ pub mod prefetch;
 pub mod prefix_tree;
 pub mod store;
 pub mod tier;
+pub mod victim_index;

@@ -36,6 +36,7 @@
 
 use crate::cache::prefix_tree::{NodeId, PrefixTree};
 use crate::cache::tier::Tier;
+use crate::cache::victim_index::VictimIndex;
 use std::cmp::Ordering;
 
 /// Total-order ranking key for victim selection: the candidate with the
@@ -67,7 +68,12 @@ impl VictimRank {
     }
 }
 
-fn rank_cmp(a: &(VictimRank, NodeId), b: &(VictimRank, NodeId)) -> Ordering {
+/// The total victim order every selection path shares: `(class, score,
+/// tie, NodeId)` lexicographically, minimum first. The trailing NodeId
+/// makes it a strict total order (no ties), which the victim index
+/// relies on: two heap entries compare equal only if they name the
+/// same node.
+pub fn rank_cmp(a: &(VictimRank, NodeId), b: &(VictimRank, NodeId)) -> Ordering {
     a.0.class
         .cmp(&b.0.class)
         .then(a.0.score.total_cmp(&b.0.score))
@@ -120,6 +126,35 @@ pub trait EvictionPolicy: std::fmt::Debug + Send {
             .map(|id| (self.rank(tree, id), id))
             .min_by(rank_cmp)
             .map(|(_, id)| id)
+    }
+
+    /// Indexed victim selection (§Perf iteration 3): consult the
+    /// engine's per-tier lazy rank heap instead of scanning the slab.
+    /// Amortized O(log n) per pick; agrees with `pick_victim_fused` by
+    /// construction because both rank through
+    /// [`rank`](EvictionPolicy::rank) — the three-way parity proptest
+    /// pins this for every registered policy. Override only to swap in
+    /// a policy-specific ordered index; most policies (including all
+    /// registered ones) use this default.
+    fn pick_victim_indexed(
+        &self,
+        tree: &mut PrefixTree,
+        tier: Tier,
+        index: &mut VictimIndex,
+    ) -> Option<NodeId> {
+        index.pick(tree, tier, &|t, id| self.rank(t, id))
+    }
+
+    /// Whether this policy's ranks are safe for the incremental index:
+    /// `rank` must be a pure function of the node's tracked inputs
+    /// (recency, frequency, bytes, `policy_meta`, pins, residency),
+    /// with clock dependence only through `boost_until > now()`
+    /// comparisons. Policies that rank through hidden mutable state
+    /// must return `false` (falling back to the fused scan) or call
+    /// `CacheEngine::force_reindex` after out-of-band changes — see
+    /// the `cache` module docs.
+    fn indexable(&self) -> bool {
+        true
     }
 
     /// A chunk became resident (first insertion or re-insertion after a
@@ -595,14 +630,20 @@ mod tests {
         assert!(registry::names_joined().contains("slru"));
     }
 
-    /// Drive a cache engine with `ops` (inserts across tiers, lookups,
-    /// boosts, explicit evictions) so hooks fire and metadata/state
-    /// accumulate, checking after every op that the fused victim scan
-    /// agrees with the candidate-list path — for every registered
-    /// policy and every tier. This is the parity contract the fused
-    /// hot path relies on.
+    /// Drive a cache engine with `ops` — inserts across tiers, lookups,
+    /// boosts, pins/unpins, promotes/demotes and explicit evictions —
+    /// so hooks fire, metadata accumulates, boost horizons expire, and
+    /// the victim index piles up stale generation-stamped entries.
+    /// After every op, for every registered policy and every tier, all
+    /// three victim paths must agree:
+    ///
+    ///   indexed (lazy rank heap) == fused (slab scan)
+    ///                            == unfused (candidate list)
+    ///
+    /// The fused scan is the reference oracle; this is the parity
+    /// contract both hot paths rely on.
     #[test]
-    fn prop_fused_unfused_victim_parity() {
+    fn prop_indexed_fused_unfused_victim_parity() {
         fn chain_of(tag: u32, n: usize) -> Vec<ChunkKey> {
             let mut keys = Vec::new();
             let mut parent = ChunkKey::ROOT;
@@ -619,7 +660,7 @@ mod tests {
                 0x9A117 + pi as u64,
                 40,
                 |rng| {
-                    let n = 3 + rng.below(30) as usize;
+                    let n = 3 + rng.below(40) as usize;
                     (0..n).map(|_| rng.next_u64()).collect::<Vec<u64>>()
                 },
                 |ops| {
@@ -632,10 +673,12 @@ mod tests {
                     });
                     let chains: Vec<Vec<ChunkKey>> =
                         (0..6).map(|t| chain_of(t, 1 + (t as usize % 4))).collect();
+                    // LIFO of pins we own, so unpin never underflows
+                    let mut pinned: Vec<NodeId> = Vec::new();
                     for op in ops {
                         let chain = &chains[(op % 6) as usize];
                         let tier = Tier::ALL[((op >> 4) % 3) as usize];
-                        match (op >> 8) % 5 {
+                        match (op >> 8) % 8 {
                             0 | 1 => {
                                 let mut parent = None;
                                 for k in chain {
@@ -651,18 +694,51 @@ mod tests {
                             3 => {
                                 e.boost_chain(chain, (op >> 16) % 64);
                             }
-                            _ => {
+                            4 => {
                                 e.evict_one(tier);
+                            }
+                            5 => {
+                                // pin the deepest present chunk (what
+                                // the scheduler does around decode)
+                                if let Some(&id) = e.tree.match_chain(chain).last() {
+                                    e.tree.pin(id);
+                                    pinned.push(id);
+                                }
+                            }
+                            6 => {
+                                if let Some(id) = pinned.pop() {
+                                    e.tree.unpin(id);
+                                }
+                            }
+                            _ => {
+                                if (op >> 16) % 2 == 0 {
+                                    // prefetcher path: SSD-only -> DRAM
+                                    for id in e.prefetch_targets(chain) {
+                                        e.promote(id, Tier::Dram);
+                                    }
+                                } else {
+                                    let present = e.tree.match_chain(chain);
+                                    for id in present {
+                                        if e.tree.evictable_from(id, tier) {
+                                            e.demote(id, tier);
+                                            break;
+                                        }
+                                    }
+                                }
                             }
                         }
                         for t in Tier::ALL {
                             let fused = e.policy.pick_victim_fused(&e.tree, t);
                             let cands = e.tree.eviction_candidates(t);
                             let unfused = e.policy.pick_victim(&e.tree, t, &cands);
-                            if fused != unfused {
+                            let indexed = {
+                                let CacheEngine { policy, tree, victim_index, .. } = &mut e;
+                                policy.pick_victim_indexed(tree, t, victim_index)
+                            };
+                            if fused != unfused || fused != indexed {
                                 return Err(format!(
-                                    "{name}: fused {fused:?} != unfused {unfused:?} \
-                                     over {} candidates in {}",
+                                    "{name}: indexed {indexed:?} / fused {fused:?} / \
+                                     unfused {unfused:?} over {} candidates in {}",
                                     cands.len(),
                                     t.name()
                                 ));

@@ -16,6 +16,8 @@
 use crate::cache::chunk::ChunkKey;
 use crate::cache::tier::{Tier, TierSet};
 use crate::util::fxhash::FxHashMap;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// Slab index of a tree node.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -62,6 +64,26 @@ pub struct PrefixTree {
     /// Children adjacency (node -> child ids). Parallel to `nodes`.
     children: Vec<Vec<NodeId>>,
     clock: u64,
+    /// Per-slot rank generation (§Perf iteration 3). Every event that
+    /// can change a node's victim rank or evictability — touch, boost,
+    /// policy-meta writes, pin/unpin, residency and `present_children`
+    /// changes, slot reuse — bumps the slot's generation. The victim
+    /// index stamps heap entries with the generation at push time and
+    /// discards mismatched (stale) entries lazily at pick time.
+    gens: Vec<u64>,
+    /// Per-slot 3-bit mask, parallel to `nodes`: bit `t` set ⟺ the
+    /// slot has exactly one entry waiting in `pending[t]`. Keeps the
+    /// pending queues duplicate-free without a hash set.
+    queued: Vec<u8>,
+    /// Per-tier queues of nodes whose rank inputs changed since they
+    /// were last indexed for that tier. O(1) amortized per event;
+    /// drained by the victim index before each indexed pick.
+    pending: [Vec<NodeId>; 3],
+    /// Boost horizons yet to expire, ordered soonest-first. Boost
+    /// *expiry* is the one rank change driven by clock movement alone
+    /// (no per-node mutation), so it gets an explicit queue: see
+    /// [`PrefixTree::expire_boosts`].
+    boost_expiry: BinaryHeap<Reverse<(u64, NodeId)>>,
 }
 
 impl PrefixTree {
@@ -151,6 +173,8 @@ impl PrefixTree {
                 self.nodes.push(node);
                 self.children.push(Vec::new());
                 self.live.push(true);
+                self.gens.push(0);
+                self.queued.push(0);
                 NodeId(self.nodes.len() as u32 - 1)
             }
         };
@@ -158,6 +182,9 @@ impl PrefixTree {
             self.children[p.0 as usize].push(id);
         }
         self.index.insert(key, id);
+        // Rank inputs (inserted_at, bytes, ...) are fresh for this slot:
+        // invalidate any heap entry left over from a previous occupant.
+        self.mark(id);
         id
     }
 
@@ -175,9 +202,13 @@ impl PrefixTree {
                     "chain-presence violated: parent absent"
                 );
                 self.node_mut(p).present_children += 1;
+                // parent may have just stopped being evictable
+                self.mark(p);
             }
         }
         self.node_mut(id).tiers.insert(tier);
+        // gaining a copy can make the *other* tiers' copies evictable
+        self.mark(id);
     }
 
     /// Drop `id`'s copy in `tier`. Returns true if the node is now
@@ -189,6 +220,9 @@ impl PrefixTree {
             return self.node(id).tiers.is_empty();
         }
         self.node_mut(id).tiers.remove(tier);
+        // losing a copy can make the remaining (now last) copy
+        // non-evictable; requeue whatever tiers are left
+        self.mark(id);
         if self.node(id).tiers.is_empty() {
             debug_assert_eq!(
                 self.node(id).present_children, 0,
@@ -196,6 +230,8 @@ impl PrefixTree {
             );
             if let Some(p) = self.node(id).parent {
                 self.node_mut(p).present_children -= 1;
+                // parent may have just become an evictable leaf
+                self.mark(p);
             }
             true
         } else {
@@ -216,6 +252,9 @@ impl PrefixTree {
         }
         let key = self.node(id).key;
         self.index.remove(&key);
+        // invalidate any heap entries still pointing at this slot
+        // before it can be reused for a different key
+        self.gens[id.0 as usize] = self.gens[id.0 as usize].wrapping_add(1);
         self.free.push(id.0);
         self.live[id.0 as usize] = false;
     }
@@ -248,28 +287,110 @@ impl PrefixTree {
         let n = self.node_mut(id);
         n.last_access = now;
         n.freq += 1;
+        self.mark(id);
     }
 
     /// Look-ahead protection: the look-ahead LRU policy will avoid
     /// evicting this node while `now < until`.
     pub fn boost(&mut self, id: NodeId, until: u64) {
+        let now = self.clock;
         let n = self.node_mut(id);
+        let grew = until > n.boost_until;
         n.boost_until = n.boost_until.max(until);
+        if grew {
+            if until > now {
+                // schedule the flip back to unprotected — the only
+                // rank change that happens by clock movement alone
+                self.boost_expiry.push(Reverse((until, id)));
+            }
+            self.mark(id);
+        }
     }
 
     /// Write the policy-owned metadata slot (see [`Node::policy_meta`]).
     pub fn set_policy_meta(&mut self, id: NodeId, meta: u64) {
-        self.node_mut(id).policy_meta = meta;
+        if self.node(id).policy_meta != meta {
+            self.node_mut(id).policy_meta = meta;
+            self.mark(id);
+        }
     }
 
     pub fn pin(&mut self, id: NodeId) {
         self.node_mut(id).pins += 1;
+        self.mark(id);
     }
 
     pub fn unpin(&mut self, id: NodeId) {
         let n = self.node_mut(id);
         assert!(n.pins > 0, "unpin without pin");
         n.pins -= 1;
+        self.mark(id);
+    }
+
+    /// Record a rank-affecting event on `id`: bump its generation
+    /// (invalidating stale victim-index entries) and queue it for
+    /// re-indexing in every tier it is resident in. O(1) amortized —
+    /// the `queued` bitmask guarantees at most one pending entry per
+    /// (slot, tier).
+    fn mark(&mut self, id: NodeId) {
+        let i = id.0 as usize;
+        self.gens[i] = self.gens[i].wrapping_add(1);
+        let tiers = self.nodes[i].tiers;
+        for t in Tier::ALL {
+            let bit = 1u8 << t.idx();
+            if tiers.contains(t) && self.queued[i] & bit == 0 {
+                self.queued[i] |= bit;
+                self.pending[t.idx()].push(id);
+            }
+        }
+    }
+
+    /// Current rank generation of `id`. A victim-index entry stamped
+    /// with an older generation is stale: some rank input changed after
+    /// it was pushed.
+    pub fn rank_gen(&self, id: NodeId) -> u64 {
+        self.gens[id.0 as usize]
+    }
+
+    /// Pop one node queued for (re-)indexing in `tier`, if any.
+    pub fn take_pending(&mut self, tier: Tier) -> Option<NodeId> {
+        let id = self.pending[tier.idx()].pop()?;
+        self.queued[id.0 as usize] &= !(1u8 << tier.idx());
+        Some(id)
+    }
+
+    /// Nodes currently queued for (re-)indexing in `tier`.
+    pub fn pending_len(&self, tier: Tier) -> usize {
+        self.pending[tier.idx()].len()
+    }
+
+    /// Requeue boosted nodes whose protection horizon has passed. Their
+    /// look-ahead class flipped without any per-node event, so the
+    /// victim index calls this before every pick to keep lazily-stored
+    /// ranks from under-reporting staleness. Amortized O(log n) per
+    /// boost over the whole run.
+    pub fn expire_boosts(&mut self) {
+        while let Some(&Reverse((until, id))) = self.boost_expiry.peek() {
+            if until > self.clock {
+                break;
+            }
+            self.boost_expiry.pop();
+            // the slot may have been erased/reused since the boost was
+            // scheduled; mark is still safe (gen bump + requeue of
+            // whatever is resident there now, which is conservative)
+            self.mark(id);
+        }
+    }
+
+    /// Queue every live node for re-indexing in all its resident tiers
+    /// — the big hammer behind `CacheEngine::force_reindex`, for
+    /// policies whose ranks changed out of band.
+    pub fn requeue_all(&mut self) {
+        for i in 0..self.nodes.len() {
+            if self.live[i] {
+                self.mark(NodeId(i as u32));
+            }
+        }
     }
 
     /// Whether dropping `id` from `tier` is allowed right now:
@@ -283,23 +404,21 @@ impl PrefixTree {
     }
 
     /// All nodes currently evictable from `tier` (the policy's
-    /// candidate set). O(nodes) scan — see EXPERIMENTS.md §Perf for the
-    /// indexed variant used on the hot path.
+    /// candidate set). O(nodes) slab walk (§Perf iteration 2) — the hot
+    /// path avoids even that via the victim index (§Perf iteration 3,
+    /// EXPERIMENTS.md); this stays as the unfused reference oracle.
     pub fn eviction_candidates(&self, tier: Tier) -> Vec<NodeId> {
-        self.index
-            .values()
-            .copied()
+        self.ids_slab()
             .filter(|id| self.evictable_from(*id, tier))
             .collect()
     }
 
     /// Resident bytes per tier (for invariant checks; the engine keeps
-    /// its own running counters).
+    /// its own running counters). Slab walk, not a hash iteration.
     pub fn resident_bytes(&self, tier: Tier) -> u64 {
-        self.index
-            .values()
-            .filter(|id| self.node(**id).tiers.contains(tier))
-            .map(|id| self.node(*id).bytes)
+        self.ids_slab()
+            .filter(|id| self.node(*id).tiers.contains(tier))
+            .map(|id| self.node(id).bytes)
             .sum()
     }
 
@@ -347,6 +466,19 @@ impl PrefixTree {
                 return Err(format!(
                     "present_children mismatch at {:?}: stored {} actual {}",
                     n.key, n.present_children, actual
+                ));
+            }
+        }
+        // pending/queued bookkeeping: each set bit corresponds to
+        // exactly one queue entry (push only happens on a clear bit)
+        for t in Tier::ALL {
+            let bit = 1u8 << t.idx();
+            let bits = self.queued.iter().filter(|q| **q & bit != 0).count();
+            if bits != self.pending[t.idx()].len() {
+                return Err(format!(
+                    "pending/queued mismatch in {}: {bits} bits, {} entries",
+                    t.name(),
+                    self.pending[t.idx()].len()
                 ));
             }
         }
@@ -512,5 +644,115 @@ mod tests {
         insert_chain(&mut t, &keys, Tier::Dram);
         assert_eq!(t.resident_bytes(Tier::Dram), 300);
         assert_eq!(t.resident_bytes(Tier::Ssd), 0);
+    }
+
+    fn drain_pending(t: &mut PrefixTree, tier: Tier) -> Vec<NodeId> {
+        let mut out = Vec::new();
+        while let Some(id) = t.take_pending(tier) {
+            out.push(id);
+        }
+        out
+    }
+
+    #[test]
+    fn rank_events_bump_gen_and_queue_once() {
+        let mut t = PrefixTree::new();
+        let keys = chain(1);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        drain_pending(&mut t, Tier::Dram);
+        let g0 = t.rank_gen(ids[0]);
+        // several events before any drain: gen moves per event, but the
+        // pending queue holds exactly one entry (the `queued` bitmask)
+        t.touch(ids[0]);
+        t.touch(ids[0]);
+        t.pin(ids[0]);
+        t.unpin(ids[0]);
+        assert!(t.rank_gen(ids[0]) > g0);
+        assert_eq!(drain_pending(&mut t, Tier::Dram), vec![ids[0]]);
+        assert_eq!(t.pending_len(Tier::Dram), 0);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn residency_changes_requeue_parent() {
+        let mut t = PrefixTree::new();
+        let keys = chain(2);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        drain_pending(&mut t, Tier::Dram);
+        let pg = t.rank_gen(ids[0]);
+        // evicting the leaf flips the parent to evictable: the parent
+        // must be requeued so the index re-admits it
+        t.remove_residency(ids[1], Tier::Dram);
+        assert!(t.rank_gen(ids[0]) > pg);
+        assert_eq!(drain_pending(&mut t, Tier::Dram), vec![ids[0]]);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn mark_queues_all_resident_tiers() {
+        let mut t = PrefixTree::new();
+        let keys = chain(1);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        t.add_residency(ids[0], Tier::Ssd);
+        drain_pending(&mut t, Tier::Dram);
+        drain_pending(&mut t, Tier::Ssd);
+        t.touch(ids[0]);
+        assert_eq!(drain_pending(&mut t, Tier::Dram), vec![ids[0]]);
+        assert_eq!(drain_pending(&mut t, Tier::Ssd), vec![ids[0]]);
+        assert_eq!(t.pending_len(Tier::Gpu), 0);
+    }
+
+    #[test]
+    fn boost_expiry_requeues_on_clock_passing() {
+        let mut t = PrefixTree::new();
+        let keys = chain(1);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        let until = t.now() + 3;
+        t.boost(ids[0], until);
+        drain_pending(&mut t, Tier::Dram);
+        // horizon not reached: nothing to requeue
+        t.expire_boosts();
+        assert_eq!(t.pending_len(Tier::Dram), 0);
+        while t.now() < until {
+            t.tick();
+        }
+        t.expire_boosts();
+        assert_eq!(drain_pending(&mut t, Tier::Dram), vec![ids[0]]);
+        // queue is drained: a second call is a no-op
+        t.expire_boosts();
+        assert_eq!(t.pending_len(Tier::Dram), 0);
+    }
+
+    #[test]
+    fn erase_bumps_gen_for_slot_reuse() {
+        let mut t = PrefixTree::new();
+        let keys = chain(2);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        t.remove_residency(ids[1], Tier::Dram);
+        drain_pending(&mut t, Tier::Dram);
+        let g_dead = t.rank_gen(ids[1]);
+        t.erase(ids[1]);
+        // the freed slot's generation moved: entries stamped before the
+        // erase can never validate against the slot's next occupant
+        assert!(t.rank_gen(ids[1]) > g_dead);
+        let k2 = chain_hash(keys[0], &[7]);
+        let id2 = t.ensure(Some(ids[0]), k2, 50);
+        assert_eq!(id2.0, ids[1].0);
+        t.add_residency(id2, Tier::Dram);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn requeue_all_touches_every_live_node() {
+        let mut t = PrefixTree::new();
+        let keys = chain(3);
+        let ids = insert_chain(&mut t, &keys, Tier::Dram);
+        drain_pending(&mut t, Tier::Dram);
+        t.requeue_all();
+        let mut got = drain_pending(&mut t, Tier::Dram);
+        got.sort();
+        let mut want = ids.clone();
+        want.sort();
+        assert_eq!(got, want);
     }
 }

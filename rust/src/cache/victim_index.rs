@@ -1,0 +1,287 @@
+//! Incremental victim selection (§Perf iteration 3, EXPERIMENTS.md).
+//!
+//! The fused scan (`EvictionPolicy::pick_victim_fused`) walks every
+//! live slab slot per eviction — O(n), fine at paper scale (a few
+//! thousand chunks), quadratic pain during an insert burst on a
+//! million-chunk tree. This module replaces the scan with per-tier
+//! **lazy min-heaps** keyed by [`VictimRank`]:
+//!
+//! * Every heap entry is stamped with the node's *rank generation* at
+//!   push time ([`PrefixTree::rank_gen`]). Any event that can change a
+//!   node's rank or evictability bumps the generation (see
+//!   `PrefixTree::mark`), so a mismatched entry is provably stale and
+//!   is discarded when it surfaces at the top of the heap.
+//! * Nodes whose rank inputs changed sit in the tree's per-tier
+//!   `pending` queues (O(1) per event, deduplicated by a bitmask).
+//!   [`VictimIndex::pick`] drains the queue — pushing fresh entries for
+//!   nodes that are currently evictable — then peeks past stale tops.
+//! * Boost expiry is the one rank change driven purely by the clock;
+//!   `PrefixTree::expire_boosts` converts it into ordinary marks before
+//!   each pick.
+//!
+//! The invariant that makes lazy deletion sound: **a generation-valid
+//! entry's stored rank equals the node's true current rank**, because
+//! every rank input feeds the generation. Stale entries may shadow the
+//! heap top, but each is popped exactly once (amortized O(log n) per
+//! rank event), and the heap is rebuilt from the slab whenever dead
+//! weight exceeds twice the live-node count.
+//!
+//! `pick` *peeks* rather than pops: the entry for the returned victim
+//! stays in the heap, and the eviction that follows bumps the node's
+//! generation (residency change), turning that entry stale. This keeps
+//! the index correct even if the caller ignores the returned victim.
+
+use crate::cache::policy::{rank_cmp, VictimRank};
+use crate::cache::prefix_tree::{NodeId, PrefixTree};
+use crate::cache::tier::Tier;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// One heap slot: a candidate with the rank and generation it had when
+/// pushed. Ordering is by rank only (reversed, so `BinaryHeap`'s max
+/// heap yields the minimum rank); the generation is payload.
+#[derive(Clone, Copy, Debug)]
+struct HeapEntry {
+    rank: VictimRank,
+    id: NodeId,
+    gen_stamp: u64,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+impl Eq for HeapEntry {}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: smallest rank at the top of the max-heap.
+        // rank_cmp is a total order with the id tiebreak, so two
+        // entries compare Equal only when they refer to the same node.
+        rank_cmp(&(other.rank, other.id), &(self.rank, self.id))
+    }
+}
+
+/// Per-tier lazy rank heaps. Owned by `CacheEngine`, consulted through
+/// `EvictionPolicy::pick_victim_indexed`; all consistency bookkeeping
+/// lives in [`PrefixTree`] so callers that mutate the tree directly
+/// (scheduler pins, prefetcher promotes) keep the index honest for
+/// free.
+#[derive(Debug, Default)]
+pub struct VictimIndex {
+    heaps: [BinaryHeap<HeapEntry>; 3],
+    /// Stale entries discarded at pick time (observability).
+    pub stale_discarded: u64,
+    /// Full heap rebuilds triggered by the dead-weight bound.
+    pub compactions: u64,
+}
+
+impl VictimIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Entries (live + stale) currently held for `tier`.
+    pub fn len(&self, tier: Tier) -> usize {
+        self.heaps[tier.idx()].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heaps.iter().all(|h| h.is_empty())
+    }
+
+    /// Drop all entries. The tree's pending queues are *not* touched;
+    /// pair with [`PrefixTree::requeue_all`] to rebuild (that is what
+    /// `CacheEngine::force_reindex` does).
+    pub fn clear(&mut self) {
+        for h in &mut self.heaps {
+            h.clear();
+        }
+    }
+
+    /// Select the minimum-rank node evictable from `tier`, or `None`
+    /// if nothing is evictable. `rank` is the policy's rank function;
+    /// amortized O(log n) per call against O(n) for the fused scan.
+    pub fn pick(
+        &mut self,
+        tree: &mut PrefixTree,
+        tier: Tier,
+        rank: &dyn Fn(&PrefixTree, NodeId) -> VictimRank,
+    ) -> Option<NodeId> {
+        // 1. turn clock-driven boost expiries into ordinary marks
+        tree.expire_boosts();
+        // 2. (re-)index everything whose rank inputs changed
+        while let Some(id) = tree.take_pending(tier) {
+            if tree.evictable_from(id, tier) {
+                self.heaps[tier.idx()].push(HeapEntry {
+                    rank: rank(tree, id),
+                    id,
+                    gen_stamp: tree.rank_gen(id),
+                });
+            }
+            // not evictable: any older entry for it is already stale
+            // (the event that disqualified it bumped the generation)
+        }
+        // 3. bound dead weight: rebuild from the slab when stale
+        //    entries dominate
+        if self.heaps[tier.idx()].len() > 2 * tree.len() + 64 {
+            self.compact(tree, tier, rank);
+        }
+        // 4. peek past stale tops to the first generation-valid entry
+        loop {
+            let top = *self.heaps[tier.idx()].peek()?;
+            if top.gen_stamp == tree.rank_gen(top.id) && tree.evictable_from(top.id, tier) {
+                return Some(top.id);
+            }
+            self.heaps[tier.idx()].pop();
+            self.stale_discarded += 1;
+        }
+    }
+
+    /// Rebuild `tier`'s heap from the live slab, discarding all stale
+    /// entries at once. O(n); amortized away by the 2n + 64 trigger.
+    fn compact(
+        &mut self,
+        tree: &PrefixTree,
+        tier: Tier,
+        rank: &dyn Fn(&PrefixTree, NodeId) -> VictimRank,
+    ) {
+        let entries: Vec<HeapEntry> = tree
+            .ids_slab()
+            .filter(|id| tree.evictable_from(*id, tier))
+            .map(|id| HeapEntry {
+                rank: rank(tree, id),
+                id,
+                gen_stamp: tree.rank_gen(id),
+            })
+            .collect();
+        self.heaps[tier.idx()] = BinaryHeap::from(entries);
+        self.compactions += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::chunk::{chain_hash, ChunkKey};
+    use crate::cache::policy::registry;
+
+    fn lru_rank() -> impl Fn(&PrefixTree, NodeId) -> VictimRank {
+        let p = registry::parse("lru").unwrap();
+        move |t: &PrefixTree, id: NodeId| p.rank(t, id)
+    }
+
+    /// n independent root-level leaves, all DRAM-resident.
+    fn leaves(n: usize) -> (PrefixTree, Vec<NodeId>) {
+        let mut t = PrefixTree::new();
+        let mut ids = Vec::new();
+        for i in 0..n {
+            let id = t.ensure(None, chain_hash(ChunkKey::ROOT, &[i as u32]), 100);
+            t.add_residency(id, Tier::Dram);
+            ids.push(id);
+        }
+        (t, ids)
+    }
+
+    #[test]
+    fn picks_lru_minimum() {
+        let (mut t, ids) = leaves(4);
+        let rank = lru_rank();
+        let mut idx = VictimIndex::new();
+        // ids[0] is oldest by insertion order
+        assert_eq!(idx.pick(&mut t, Tier::Dram, &rank), Some(ids[0]));
+        // touching it moves it to the back; pick follows
+        t.touch(ids[0]);
+        assert_eq!(idx.pick(&mut t, Tier::Dram, &rank), Some(ids[1]));
+    }
+
+    #[test]
+    fn peek_semantics_survive_ignored_picks() {
+        let (mut t, ids) = leaves(3);
+        let rank = lru_rank();
+        let mut idx = VictimIndex::new();
+        // picking twice without evicting returns the same victim
+        let a = idx.pick(&mut t, Tier::Dram, &rank);
+        let b = idx.pick(&mut t, Tier::Dram, &rank);
+        assert_eq!(a, b);
+        assert_eq!(a, Some(ids[0]));
+    }
+
+    #[test]
+    fn eviction_invalidates_the_picked_entry() {
+        let (mut t, ids) = leaves(3);
+        let rank = lru_rank();
+        let mut idx = VictimIndex::new();
+        let v = idx.pick(&mut t, Tier::Dram, &rank).unwrap();
+        assert_eq!(v, ids[0]);
+        t.remove_residency(v, Tier::Dram); // bumps gen -> entry stale
+        assert_eq!(idx.pick(&mut t, Tier::Dram, &rank), Some(ids[1]));
+        assert!(idx.stale_discarded > 0);
+    }
+
+    #[test]
+    fn pinned_nodes_are_skipped_until_unpinned() {
+        let (mut t, ids) = leaves(2);
+        let rank = lru_rank();
+        let mut idx = VictimIndex::new();
+        t.pin(ids[0]);
+        assert_eq!(idx.pick(&mut t, Tier::Dram, &rank), Some(ids[1]));
+        t.unpin(ids[0]);
+        assert_eq!(idx.pick(&mut t, Tier::Dram, &rank), Some(ids[0]));
+    }
+
+    #[test]
+    fn empty_tier_returns_none() {
+        let (mut t, _) = leaves(2);
+        let rank = lru_rank();
+        let mut idx = VictimIndex::new();
+        assert_eq!(idx.pick(&mut t, Tier::Gpu, &rank), None);
+    }
+
+    #[test]
+    fn compaction_bounds_heap_size() {
+        let (mut t, ids) = leaves(8);
+        let rank = lru_rank();
+        let mut idx = VictimIndex::new();
+        // repeatedly re-rank the *newest* node: its stale entries sink
+        // to the bottom of the heap and never surface at peek time, so
+        // only the dead-weight bound can reclaim them
+        let hot = ids[7];
+        for _ in 0..200 {
+            t.touch(hot);
+            assert_eq!(idx.pick(&mut t, Tier::Dram, &rank), Some(ids[0]));
+        }
+        assert!(idx.compactions >= 1, "dead weight never compacted");
+        assert!(idx.len(Tier::Dram) <= 2 * t.len() + 64);
+        // index still agrees with a fresh fused answer
+        let p = registry::parse("lru").unwrap();
+        assert_eq!(idx.pick(&mut t, Tier::Dram, &rank), p.pick_victim_fused(&t, Tier::Dram));
+    }
+
+    #[test]
+    fn matches_fused_scan_for_every_policy_on_a_static_tree() {
+        for name in registry::NAMES {
+            let p = registry::parse(name).unwrap();
+            let (mut t, ids) = leaves(6);
+            // vary the rank inputs a bit
+            t.touch(ids[2]);
+            t.touch(ids[4]);
+            t.touch(ids[2]);
+            t.boost(ids[0], t.now() + 100);
+            let mut idx = VictimIndex::new();
+            let rank = |tr: &PrefixTree, id: NodeId| p.rank(tr, id);
+            assert_eq!(
+                idx.pick(&mut t, Tier::Dram, &rank),
+                p.pick_victim_fused(&t, Tier::Dram),
+                "policy {name}"
+            );
+        }
+    }
+}

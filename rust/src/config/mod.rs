@@ -50,6 +50,11 @@ pub struct ExperimentConfig {
     pub overlap: String,
     /// Use batched chunk copies (`cudaMemcpyBatchAsync` analogue).
     pub batch_async: bool,
+    /// Select eviction victims through the incremental per-tier rank
+    /// index (amortized O(log n); §Perf iteration 3) instead of the
+    /// fused O(n) scan. On by default; the off position is the A/B
+    /// baseline for benches and parity tests.
+    pub indexed_eviction: bool,
 
     // --- transfer engine (`[io]` section) ---
     /// Dedicated I/O worker threads for the real-path transfer engine.
@@ -104,6 +109,7 @@ impl Default for ExperimentConfig {
             prefetch_strategy: String::new(),
             overlap: "up-down".into(),
             batch_async: true,
+            indexed_eviction: true,
             io_workers: 2,
             io_demand_depth: 64,
             io_prefetch_depth: 64,
@@ -161,6 +167,7 @@ impl ExperimentConfig {
             "prefetch.strategy" => self.prefetch_strategy = need_str()?,
             "cache.overlap" => self.overlap = need_str()?,
             "cache.batch_async" => self.batch_async = need_bool()?,
+            "cache.indexed_eviction" => self.indexed_eviction = need_bool()?,
             "io.workers" => self.io_workers = need_f64()? as usize,
             "io.demand_depth" => self.io_demand_depth = need_f64()? as usize,
             "io.prefetch_depth" => self.io_prefetch_depth = need_f64()? as usize,
@@ -263,6 +270,7 @@ model = "llama2-13b"
 chunk_tokens = 128
 dram_bytes = 1GiB
 policy = "lru"
+indexed_eviction = false
 [workload]
 rate = 1.0
 oversample = false
@@ -274,6 +282,7 @@ oversample = false
         assert_eq!(cfg.chunk_tokens, 128);
         assert_eq!(cfg.dram_bytes, 1 << 30);
         assert_eq!(cfg.policy, "lru");
+        assert!(!cfg.indexed_eviction);
         assert_eq!(cfg.rate, 1.0);
         assert!(!cfg.oversample);
         cfg.validate().unwrap();

@@ -54,7 +54,7 @@ mod tests {
     fn req(id: u64, tokens: usize) -> Request {
         let toks: Vec<u32> = (0..tokens as u32).collect();
         let chain = ChunkedSeq::new(&toks, 256);
-        Request::new(id, id as u32, Arc::new(toks), Arc::new(chain), 4, 0.0, 0.0)
+        Request::new(id, id as u32, toks.into(), Arc::new(chain), 4, 0.0, 0.0)
     }
 
     #[test]

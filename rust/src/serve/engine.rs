@@ -23,6 +23,7 @@ use crate::serve::request::{Request, RequestState};
 use crate::serve::scheduler::{apply_lookahead, plan_movement, unpin_plan};
 use crate::serve::system::SystemSpec;
 use crate::serve::workload::Workload;
+use std::sync::Arc;
 
 /// Aggregate time breakdown of one run (seconds of engine activity).
 #[derive(Clone, Copy, Debug, Default)]
@@ -91,6 +92,10 @@ pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> Ru
     let model = model_spec(&cfg.model).expect("validated model");
     let platform = platform_spec(&cfg.platform).expect("validated platform");
     let mut cache = CacheEngine::new(cache_config(cfg, spec, &model, &platform));
+    // Victim selection path: incremental index (default) or the fused
+    // O(n) scan (`cache.indexed_eviction = false` — the A/B knob the
+    // eviction-pressure bench and the replay-parity test flip).
+    cache.use_indexed_eviction = cfg.indexed_eviction;
     let mut fabric = TransferFabric::new(&platform);
     // Dual-lane virtual-time view of the SSD read resource: demand
     // reads preempt queued prefetch work for async-I/O systems; for
@@ -133,8 +138,8 @@ pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> Ru
             waiting.push(Request::new(
                 next as u64,
                 it.input_id,
-                it.tokens.clone(),
-                it.chain.clone(),
+                Arc::clone(&it.tokens),
+                Arc::clone(&it.chain),
                 cfg.output_tokens,
                 it.arrival,
                 it.arrival + it.retrieval_seconds,
@@ -514,6 +519,27 @@ mod tests {
         assert_eq!(a.cache.total_hits(), b.cache.total_hits());
         assert_eq!(a.prefetch_submitted, b.prefetch_submitted);
         assert_eq!(a.io.upgraded, b.io.upgraded);
+        assert_eq!(a.io.demand.submitted, b.io.demand.submitted);
+    }
+
+    #[test]
+    fn indexed_eviction_replays_identically_to_fused_scan() {
+        // The indexed victim path must be a pure perf change: a full
+        // serving run (eviction pressure, prefetch, pins, boosts) has
+        // to land on bit-identical outcomes with the index disabled.
+        let mut cfg = test_cfg("pcr", 0.8);
+        let wl = Workload::build(&cfg);
+        let spec = SystemSpec::named("pcr", cfg.prefetch_window).unwrap();
+        assert!(cfg.indexed_eviction, "indexed path must be the default");
+        let a = run(&cfg, &spec, &wl);
+        cfg.indexed_eviction = false;
+        let b = run(&cfg, &spec, &wl);
+        assert_eq!(a.report.ttft.mean, b.report.ttft.mean);
+        assert_eq!(a.report.e2el.p99, b.report.e2el.p99);
+        assert_eq!(a.cache.total_hits(), b.cache.total_hits());
+        assert_eq!(a.cache.evicted_chunks, b.cache.evicted_chunks);
+        assert_eq!(a.cache.rejected_inserts, b.cache.rejected_inserts);
+        assert_eq!(a.prefetch_submitted, b.prefetch_submitted);
         assert_eq!(a.io.demand.submitted, b.io.demand.submitted);
     }
 

@@ -108,7 +108,7 @@ mod tests {
     fn finished_request(arrival: f64, ttft: f64, e2e: f64) -> Request {
         let tokens: Vec<u32> = (0..512).collect();
         let chain = ChunkedSeq::new(&tokens, 256);
-        let mut r = Request::new(0, 0, Arc::new(tokens), Arc::new(chain), 4,
+        let mut r = Request::new(0, 0, tokens.into(), Arc::new(chain), 4,
                                  arrival, arrival + 0.01);
         r.started_at = Some(arrival + 0.5);
         r.first_token_at = Some(arrival + ttft);

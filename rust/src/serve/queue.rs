@@ -62,7 +62,7 @@ mod tests {
     fn req(id: u64) -> Request {
         let tokens: Vec<u32> = (0..64).collect();
         let chain = ChunkedSeq::new(&tokens, 32);
-        Request::new(id, id as u32, Arc::new(tokens), Arc::new(chain), 4, 0.0, 0.0)
+        Request::new(id, id as u32, tokens.into(), Arc::new(chain), 4, 0.0, 0.0)
     }
 
     #[test]

@@ -23,8 +23,10 @@ pub struct Request {
     /// Which distinct dataset input this request replays (workload
     /// sampling repeats inputs — that is where prefix reuse comes from).
     pub input_id: u32,
-    /// Full LLM input `[docs ‖ query]`, shared across repeats.
-    pub tokens: Arc<Vec<u32>>,
+    /// Full LLM input `[docs ‖ query]`. A shared slice — one
+    /// allocation per distinct workload input, refcounted across
+    /// repeats and admissions (no per-request token copies).
+    pub tokens: Arc<[u32]>,
     /// Chunked view with prefix-chain keys.
     pub chain: Arc<ChunkedSeq>,
     pub output_tokens: usize,
@@ -56,7 +58,7 @@ impl Request {
     pub fn new(
         id: u64,
         input_id: u32,
-        tokens: Arc<Vec<u32>>,
+        tokens: Arc<[u32]>,
         chain: Arc<ChunkedSeq>,
         output_tokens: usize,
         arrival: f64,
@@ -120,7 +122,7 @@ mod tests {
     fn req() -> Request {
         let tokens: Vec<u32> = (0..1000).collect();
         let chain = ChunkedSeq::new(&tokens, 256);
-        Request::new(1, 0, Arc::new(tokens), Arc::new(chain), 16, 10.0, 10.2)
+        Request::new(1, 0, tokens.into(), Arc::new(chain), 16, 10.0, 10.2)
     }
 
     #[test]

@@ -25,7 +25,9 @@ use std::sync::Arc;
 pub struct WorkItem {
     pub arrival: f64,
     pub input_id: u32,
-    pub tokens: Arc<Vec<u32>>,
+    /// Shared token slice: one allocation per distinct input, shared
+    /// by every repeat of it and by every admitted `Request`.
+    pub tokens: Arc<[u32]>,
     pub chain: Arc<ChunkedSeq>,
     /// Seconds the (real) index search took when the dataset was built
     /// — replayed as the retrieval latency in the simulator.
@@ -58,14 +60,14 @@ impl Workload {
         let mut rng = Rng::new(cfg.seed ^ 0xDA7A_5E7);
 
         // --- dataset ---
-        let mut inputs: Vec<(Arc<Vec<u32>>, Arc<ChunkedSeq>, f64)> =
+        let mut inputs: Vec<(Arc<[u32]>, Arc<ChunkedSeq>, f64)> =
             Vec::with_capacity(cfg.n_inputs);
         for _ in 0..cfg.n_inputs {
             let q = retriever.sample_query(&mut rng, cfg.query_tokens);
             let out = retriever.retrieve(&q);
             let chain = ChunkedSeq::new(&out.tokens, cfg.chunk_tokens);
             inputs.push((
-                Arc::new(out.tokens),
+                out.tokens.into(),
                 Arc::new(chain),
                 out.search_seconds,
             ));
