@@ -1,0 +1,93 @@
+//! Cluster tour: scale one PCR engine to a replica fleet and watch
+//! what routing does to the fleet's cache — why spraying repeats
+//! across replicas destroys the hit ratio, and how the global prefix
+//! directory gets it back.
+//!
+//!     cargo run --release --example cluster_tour
+
+use pcr::bench::Table;
+use pcr::cluster::router::registry as routers;
+use pcr::cluster::sim::run_with;
+use pcr::config::ExperimentConfig;
+use pcr::serve::engine;
+use pcr::serve::system::SystemSpec;
+use pcr::serve::workload::Workload;
+use pcr::util::fmt_secs;
+
+fn main() {
+    let cfg = ExperimentConfig {
+        model: "llama2-7b".into(),
+        platform: "a6000".into(),
+        system: "pcr".into(),
+        n_inputs: 120,
+        n_requests: 360,
+        oversample: true,
+        rate: 1.0,
+        n_docs: 500,
+        n_topics: 24,
+        mean_doc_tokens: 600,
+        query_tokens: 48,
+        chunk_tokens: 256,
+        gpu_bytes: 2 * (1 << 30),
+        dram_bytes: 6 * (1 << 30),
+        ssd_bytes: 40 * (1 << 30),
+        ..Default::default()
+    };
+    cfg.validate().expect("tour config");
+    let wl = Workload::build(&cfg);
+    let spec = SystemSpec::try_named("pcr", cfg.prefetch_window).expect("registered system");
+    println!(
+        "fixed workload: llama2-7b @ 1.0 req/s, {} requests over {} inputs, {:.0}% repetition\n",
+        wl.len(),
+        wl.n_distinct_inputs,
+        wl.repetition_ratio * 100.0
+    );
+
+    println!("1) one replica is just the single-engine simulator");
+    let single = engine::run(&cfg, &spec, &wl);
+    let one = run_with(&cfg, &spec, &wl, 1, routers::parse("round-robin").unwrap());
+    println!(
+        "   engine::run  ttft {}   cluster(replicas=1)  ttft {}   (identical by construction)",
+        fmt_secs(single.report.ttft.mean),
+        fmt_secs(one.aggregate.ttft.mean)
+    );
+
+    println!("\n2) four replicas — every routing policy on the same workload");
+    let mut t = Table::new(&["router", "ttft-mean", "ttft-p99", "hit%", "imbalance", "stale"]);
+    for name in routers::NAMES {
+        let out = run_with(&cfg, &spec, &wl, 4, routers::parse(name).unwrap());
+        t.row(&[
+            name.to_string(),
+            fmt_secs(out.aggregate.ttft.mean),
+            fmt_secs(out.aggregate.ttft.p99),
+            format!("{:.1}", out.hit_ratio * 100.0),
+            format!("{:.3}", out.load_imbalance),
+            out.directory_stale.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "   round-robin rebuilds each hot prefix on every replica it lands on;\n\
+         \x20  the directory-driven routers send repeats to the replica already holding them."
+    );
+
+    println!("\n3) scaling the fleet under affinity-balanced routing");
+    let mut t = Table::new(&["replicas", "ttft-mean", "hit%", "directory-chunks"]);
+    for n in [1usize, 2, 4, 8] {
+        let out = run_with(&cfg, &spec, &wl, n, routers::parse("affinity-balanced").unwrap());
+        t.row(&[
+            n.to_string(),
+            fmt_secs(out.aggregate.ttft.mean),
+            format!("{:.1}", out.hit_ratio * 100.0),
+            out.directory_entries.to_string(),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\nthe directory never walks a replica's prefix tree: it mirrors residency\n\
+         events (one u64 holder mask per chunk), so routing stays O(chain depth)\n\
+         no matter how big each replica's cache grows. try it from the CLI:\n\
+         \x20   pcr cluster --replicas 4 --router affinity-balanced:0.25"
+    );
+}

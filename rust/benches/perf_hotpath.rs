@@ -6,11 +6,14 @@
 //! indexed O(log n) heap (§Perf iteration 3 — emitted as machine-
 //! readable `BENCH_eviction_pressure.json`), movement planning,
 //! pipeline makespan, a full engine step, the substrate hot spots
-//! (HNSW search, JSON, PRNG), and the dual-lane transfer engine's
-//! demand-vs-prefetch contention on real disk (Fig 12).
+//! (HNSW search, JSON, PRNG), the dual-lane transfer engine's
+//! demand-vs-prefetch contention on real disk (Fig 12), and the
+//! cluster router sweep (§Perf iteration 4 — routing policy ×
+//! replica count, emitted as `BENCH_cluster_routing.json`).
 //!
 //! Args (after `cargo bench --bench perf_hotpath --`):
 //!   --eviction-pressure   run only the eviction-pressure section
+//!   --cluster-routing     run only the cluster router sweep
 //!   --smoke               small trees + short timing (CI smoke mode)
 
 use pcr::bench::{black_box, section, Bench};
@@ -123,11 +126,101 @@ fn eviction_pressure(smoke: bool) {
     println!("  -> wrote {path}");
 }
 
+/// §Perf iteration 4: aggregate cache behaviour of the replica fleet
+/// under each routing policy, across fleet sizes. The PR gate: the
+/// affinity routers must beat round-robin on aggregate hit ratio at
+/// every replica count — repeat traffic sprayed across the fleet
+/// (round-robin) rebuilds every hot prefix N times; directory-driven
+/// routing sends repeats to the holder. Emits
+/// `BENCH_cluster_routing.json` (CI uploads it as an artifact).
+fn cluster_routing(smoke: bool) {
+    use pcr::cluster::router::registry as routers;
+    use pcr::cluster::sim::run_with;
+    use pcr::config::ExperimentConfig;
+    use pcr::serve::system::SystemSpec;
+    use pcr::serve::workload::Workload;
+    use pcr::util::fmt_secs;
+
+    section("perf: cluster router sweep — routing policy x replica count");
+    let (n_inputs, n_requests) = if smoke { (60, 240) } else { (200, 800) };
+    let cfg = ExperimentConfig {
+        model: "llama2-7b".into(),
+        platform: "a6000".into(),
+        system: "pcr".into(),
+        n_inputs,
+        n_requests,
+        oversample: true,
+        rate: 1.0,
+        n_docs: 400,
+        n_topics: 24,
+        mean_doc_tokens: 600,
+        query_tokens: 48,
+        chunk_tokens: 256,
+        gpu_bytes: 2 * (1 << 30),
+        dram_bytes: 6 * (1 << 30),
+        ssd_bytes: 40 * (1 << 30),
+        ..Default::default()
+    };
+    cfg.validate().expect("bench config");
+    let wl = Workload::build(&cfg);
+    let spec = SystemSpec::try_named("pcr", cfg.prefetch_window).expect("registered system");
+    println!(
+        "  {} requests over {} inputs, repetition {:.1}%",
+        wl.len(),
+        wl.n_distinct_inputs,
+        wl.repetition_ratio * 100.0
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &n in &[2usize, 4, 8] {
+        for name in routers::NAMES {
+            let out = run_with(&cfg, &spec, &wl, n, routers::parse(name).unwrap());
+            println!(
+                "  {n} replicas x {name:<18} hit {:>5.1}%  ttft {}  imbalance {:.3}  stale {}",
+                out.hit_ratio * 100.0,
+                fmt_secs(out.aggregate.ttft.mean),
+                out.load_imbalance,
+                out.directory_stale
+            );
+            rows.push(Json::from_pairs(vec![
+                ("replicas", n.into()),
+                ("router", name.into()),
+                ("hit_ratio", out.hit_ratio.into()),
+                ("ttft_mean_s", out.aggregate.ttft.mean.into()),
+                ("ttft_p99_s", out.aggregate.ttft.p99.into()),
+                ("load_imbalance", out.load_imbalance.into()),
+                ("directory_stale", out.directory_stale.into()),
+                ("directory_entries", out.directory_entries.into()),
+            ]));
+        }
+    }
+    let doc = Json::from_pairs(vec![
+        ("bench", "cluster_routing".into()),
+        ("system", "pcr".into()),
+        ("smoke", smoke.into()),
+        (
+            "workload",
+            format!(
+                "{} requests over {} inputs, oversampled, rate 1.0 req/s",
+                n_requests, n_inputs
+            )
+            .into(),
+        ),
+        ("rows", rows.into()),
+    ]);
+    let path = "BENCH_cluster_routing.json";
+    std::fs::write(path, doc.dump() + "\n").expect("write bench json");
+    println!("  -> wrote {path}");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
     if args.iter().any(|a| a == "--eviction-pressure") {
         eviction_pressure(smoke);
+        return;
+    }
+    if args.iter().any(|a| a == "--cluster-routing") {
+        cluster_routing(smoke);
         return;
     }
 
@@ -318,6 +411,8 @@ fn main() {
         drop(source);
         let _ = std::fs::remove_dir_all(&dir);
     }
+
+    cluster_routing(smoke);
 }
 
 /// Helper: eviction benchmark needs per-iteration setup (each eviction

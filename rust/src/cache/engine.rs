@@ -71,6 +71,20 @@ impl CacheStats {
     }
 }
 
+/// A residency transition observed by one cache engine — the feed a
+/// cluster's global prefix directory consumes to mirror replica-local
+/// trees without walking them (see `cluster::directory`). Only *full*
+/// transitions are reported: gaining a copy in a second tier, or
+/// dropping one copy of a multi-tier chunk, changes nothing about
+/// whether a replica can serve the chunk, so no event fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheEvent {
+    /// The chunk gained its first resident copy (any tier).
+    Resident(ChunkKey),
+    /// The chunk lost its last resident copy.
+    Gone(ChunkKey),
+}
+
 /// Result of matching one request's chunk chain against the cache.
 #[derive(Clone, Debug, Default)]
 pub struct Lookup {
@@ -110,6 +124,16 @@ pub struct CacheEngine {
     /// oracle, and the baseline the eviction-pressure bench measures
     /// against.
     pub use_indexed_eviction: bool,
+    /// Record residency transitions ([`CacheEvent`]) into
+    /// [`events`](CacheEngine::events). Off by default (zero cost on
+    /// the single-engine path); `cluster::Replica` turns it on and
+    /// drains the buffer into the global prefix directory after every
+    /// engine step.
+    pub track_events: bool,
+    /// Pending residency transitions, in occurrence order. Drain with
+    /// [`take_events`](CacheEngine::take_events) — with `track_events`
+    /// on and no consumer, this grows without bound.
+    pub events: Vec<CacheEvent>,
     sweep_countdown: u32,
 }
 
@@ -144,6 +168,8 @@ impl CacheEngine {
             policy,
             victim_index: VictimIndex::new(),
             use_indexed_eviction: true,
+            track_events: false,
+            events: Vec::new(),
             sweep_countdown: SWEEP_PERIOD,
         }
     }
@@ -200,11 +226,17 @@ impl CacheEngine {
             self.policy.pick_victim_fused(&self.tree, tier)?
         };
         let bytes = self.tree.node(victim).bytes;
+        // capture the key before dropping residency: maybe_sweep may
+        // erase the now-absent node from the slab
+        let key = self.tree.node(victim).key;
         let fully_gone = self.tree.remove_residency(victim, tier);
         self.usage[tier.idx()].sub(bytes);
         self.stats.evicted_chunks[tier.idx()] += 1;
         self.policy.on_evict(&mut self.tree, victim);
         if fully_gone {
+            if self.track_events {
+                self.events.push(CacheEvent::Gone(key));
+            }
             self.maybe_sweep();
         }
         Some(victim)
@@ -254,6 +286,9 @@ impl CacheEngine {
         self.stats.inserted_chunks[tier.idx()] += 1;
         if !was_present {
             self.policy.on_insert(&mut self.tree, id);
+            if self.track_events {
+                self.events.push(CacheEvent::Resident(key));
+            }
         }
         Some(id)
     }
@@ -273,9 +308,16 @@ impl CacheEngine {
         if !self.reserve(tier, bytes) {
             return false;
         }
+        // reserve's evictions cannot touch `id` (it has no copy in
+        // `tier` yet), but a caller could promote a fully-absent node
+        // back to residency — that is a directory-visible transition
+        let was_absent = self.tree.node(id).tiers.is_empty();
         self.tree.add_residency(id, tier);
         self.usage[tier.idx()].add(bytes);
         self.stats.inserted_chunks[tier.idx()] += 1;
+        if was_absent && self.track_events {
+            self.events.push(CacheEvent::Resident(self.tree.node(id).key));
+        }
         true
     }
 
@@ -286,8 +328,18 @@ impl CacheEngine {
             return;
         }
         let bytes = self.tree.node(id).bytes;
-        self.tree.remove_residency(id, tier);
+        let key = self.tree.node(id).key;
+        let fully_gone = self.tree.remove_residency(id, tier);
         self.usage[tier.idx()].sub(bytes);
+        if fully_gone && self.track_events {
+            self.events.push(CacheEvent::Gone(key));
+        }
+    }
+
+    /// Drain pending residency transitions (the cluster directory's
+    /// event feed). Empty unless `track_events` is on.
+    pub fn take_events(&mut self) -> Vec<CacheEvent> {
+        std::mem::take(&mut self.events)
     }
 
     /// Look-ahead update (paper §4.2): walk a queued request's chain and
@@ -599,6 +651,60 @@ mod tests {
         // eviction proceeds normally
         assert_eq!(e.evict_one(Tier::Dram), Some(ia));
         e.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn residency_events_track_full_transitions_only() {
+        let mut e = CacheEngine::new(cfg(0, 200, 1000));
+        e.track_events = true;
+        let c = chain_of(1, 1);
+        insert_chain(&mut e, &c, Tier::Dram);
+        assert_eq!(e.take_events(), vec![CacheEvent::Resident(c[0])]);
+        // a second-tier copy of the same chunk is not a transition
+        insert_chain(&mut e, &c, Tier::Ssd);
+        assert!(e.take_events().is_empty());
+        // dropping the DRAM copy leaves the SSD copy: still resident
+        let id = e.tree.get(c[0]).unwrap();
+        e.demote(id, Tier::Dram);
+        assert!(e.take_events().is_empty());
+        // dropping the last copy is a full transition
+        e.demote(id, Tier::Ssd);
+        assert_eq!(e.take_events(), vec![CacheEvent::Gone(c[0])]);
+        // re-insertion after full absence is a fresh Resident
+        insert_chain(&mut e, &c, Tier::Dram);
+        assert_eq!(e.take_events(), vec![CacheEvent::Resident(c[0])]);
+        // promote back from SSD after the DRAM copy is demoted away:
+        // demote emits Gone only when no copy remains anywhere
+        insert_chain(&mut e, &c, Tier::Ssd);
+        e.take_events();
+        e.demote(e.tree.get(c[0]).unwrap(), Tier::Dram);
+        assert!(e.take_events().is_empty());
+        e.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn eviction_pressure_emits_gone_for_single_copy_chunks() {
+        let mut e = CacheEngine::new(cfg(0, 200, 0));
+        e.track_events = true;
+        let a = chain_of(1, 1);
+        let b = chain_of(2, 1);
+        insert_chain(&mut e, &a, Tier::Dram);
+        insert_chain(&mut e, &b, Tier::Dram);
+        e.take_events();
+        // full DRAM: inserting c evicts the LRU chunk a entirely
+        let c = chain_of(3, 1);
+        insert_chain(&mut e, &c, Tier::Dram);
+        let evs = e.take_events();
+        assert!(evs.contains(&CacheEvent::Gone(a[0])), "{evs:?}");
+        assert!(evs.contains(&CacheEvent::Resident(c[0])), "{evs:?}");
+    }
+
+    #[test]
+    fn events_are_off_by_default() {
+        let mut e = CacheEngine::new(cfg(0, 200, 0));
+        insert_chain(&mut e, &chain_of(1, 1), Tier::Dram);
+        assert!(!e.track_events);
+        assert!(e.take_events().is_empty());
     }
 
     /// Property: after an arbitrary interleaving of inserts, lookups,

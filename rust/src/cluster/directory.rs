@@ -1,0 +1,375 @@
+//! The global prefix directory: chunk-hash → replica set.
+//!
+//! One `HashMap<ChunkKey, u64>` where each value is a bitmask of the
+//! replicas holding a resident copy of that chunk (any tier). The map
+//! is maintained *only* from replica residency events
+//! ([`CacheEvent`]): routing never walks a replica-local tree, so a
+//! placement decision costs O(chain depth) directory probes for one
+//! replica and O(depth + replicas) for the whole fleet — independent
+//! of tree sizes. See the module guide in [`crate::cluster`] for the
+//! consistency invariants.
+
+use crate::cache::chunk::ChunkKey;
+use crate::cache::engine::{CacheEngine, CacheEvent};
+use std::collections::HashMap;
+
+/// Replica-set word width: one bit per replica in a `u64`.
+pub const MAX_REPLICAS: usize = 64;
+
+/// Global chunk-residency map for a fleet of up to [`MAX_REPLICAS`]
+/// replicas.
+#[derive(Clone, Debug)]
+pub struct PrefixDirectory {
+    /// chunk hash → bitmask of replicas holding a resident copy.
+    /// Entries are removed when the mask reaches zero.
+    holders: HashMap<ChunkKey, u64>,
+    n_replicas: usize,
+}
+
+impl PrefixDirectory {
+    /// A directory for `n_replicas` replicas (1..=[`MAX_REPLICAS`]).
+    pub fn new(n_replicas: usize) -> PrefixDirectory {
+        assert!(
+            (1..=MAX_REPLICAS).contains(&n_replicas),
+            "replicas must be in 1..={MAX_REPLICAS} (got {n_replicas})"
+        );
+        PrefixDirectory {
+            holders: HashMap::new(),
+            n_replicas,
+        }
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.n_replicas
+    }
+
+    /// Distinct chunks with at least one resident replica copy.
+    pub fn len(&self) -> usize {
+        self.holders.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.holders.is_empty()
+    }
+
+    /// Apply one replica's residency event (the insert/evict callback
+    /// feed drained by `Replica::step`).
+    pub fn apply(&mut self, replica: usize, event: &CacheEvent) {
+        debug_assert!(replica < self.n_replicas);
+        let bit = 1u64 << replica;
+        match event {
+            CacheEvent::Resident(key) => {
+                *self.holders.entry(*key).or_insert(0) |= bit;
+            }
+            CacheEvent::Gone(key) => {
+                if let Some(mask) = self.holders.get_mut(key) {
+                    *mask &= !bit;
+                    if *mask == 0 {
+                        self.holders.remove(key);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bitmask of the replicas holding `key` (0 = nobody).
+    pub fn holders(&self, key: ChunkKey) -> u64 {
+        self.holders.get(&key).copied().unwrap_or(0)
+    }
+
+    /// Matched-prefix length of `chain` on ONE replica, in O(depth):
+    /// the count of leading chunks whose holder mask has the replica's
+    /// bit. The prefix must be contiguous from the root — one missing
+    /// link ends the usable prefix, the same rule the replica-local
+    /// tree's `match_chain` applies.
+    pub fn matched_prefix_one(&self, replica: usize, chain: &[ChunkKey]) -> usize {
+        debug_assert!(replica < self.n_replicas);
+        let bit = 1u64 << replica;
+        chain
+            .iter()
+            .take_while(|k| self.holders(**k) & bit != 0)
+            .count()
+    }
+
+    /// Matched-prefix length of `chain` on EVERY replica in one
+    /// O(depth + replicas) walk: AND the holder masks down the chain;
+    /// a replica's matched length is the depth at which its bit drops
+    /// out of the surviving set.
+    pub fn matched_prefix_all(&self, chain: &[ChunkKey]) -> Vec<usize> {
+        let full: u64 = if self.n_replicas == MAX_REPLICAS {
+            u64::MAX
+        } else {
+            (1u64 << self.n_replicas) - 1
+        };
+        let mut lens = vec![0usize; self.n_replicas];
+        let mut alive = full;
+        for (depth, key) in chain.iter().enumerate() {
+            let h = self.holders(*key);
+            let mut dropped = alive & !h;
+            while dropped != 0 {
+                let r = dropped.trailing_zeros() as usize;
+                lens[r] = depth;
+                dropped &= dropped - 1;
+            }
+            alive &= h;
+            if alive == 0 {
+                return lens;
+            }
+        }
+        // replicas still alive hold the entire chain
+        let mut survivors = alive;
+        while survivors != 0 {
+            let r = survivors.trailing_zeros() as usize;
+            lens[r] = chain.len();
+            survivors &= survivors - 1;
+        }
+        lens
+    }
+
+    /// Two-sided consistency check against the replicas' actual trees
+    /// (invariants 1–3 of the module guide). O(directory + Σ trees) —
+    /// a test/debug facility, not a routing-path operation.
+    pub fn check_consistent(&self, replicas: &[&CacheEngine]) -> Result<(), String> {
+        if replicas.len() != self.n_replicas {
+            return Err(format!(
+                "directory sized for {} replicas, given {}",
+                self.n_replicas,
+                replicas.len()
+            ));
+        }
+        // 1. no false holders, 3. no empty entries
+        for (key, mask) in &self.holders {
+            if *mask == 0 {
+                return Err(format!("empty holder mask for {key:?} left in the map"));
+            }
+            let mut m = *mask;
+            while m != 0 {
+                let r = m.trailing_zeros() as usize;
+                m &= m - 1;
+                let resident = replicas[r]
+                    .tree
+                    .get(*key)
+                    .map(|id| !replicas[r].tree.node(id).tiers.is_empty())
+                    .unwrap_or(false);
+                if !resident {
+                    return Err(format!(
+                        "directory claims replica {r} holds {key:?}; its tree disagrees"
+                    ));
+                }
+            }
+        }
+        // 2. no missing holders
+        for (r, engine) in replicas.iter().enumerate() {
+            for id in engine.tree.ids() {
+                let node = engine.tree.node(id);
+                if node.tiers.is_empty() {
+                    continue;
+                }
+                if self.holders(node.key) & (1u64 << r) == 0 {
+                    return Err(format!(
+                        "replica {r} holds {:?}; the directory disagrees",
+                        node.key
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::chunk::chain_hash;
+    use crate::cache::engine::CacheConfig;
+    use crate::cache::tier::Tier;
+    use crate::cluster::router::{registry, ReplicaView};
+    use crate::util::proptest::{check, forall};
+    use crate::util::rng::Rng;
+
+    const CHUNK_BYTES: u64 = 100;
+
+    fn chain_of(tag: u32, n: usize) -> Vec<ChunkKey> {
+        let mut keys = Vec::new();
+        let mut parent = ChunkKey::ROOT;
+        for i in 0..n {
+            let k = chain_hash(parent, &[tag, i as u32]);
+            keys.push(k);
+            parent = k;
+        }
+        keys
+    }
+
+    fn insert_chain(e: &mut CacheEngine, chain: &[ChunkKey], tier: Tier) {
+        let mut parent = None;
+        for k in chain {
+            match e.insert(parent, *k, CHUNK_BYTES, tier) {
+                Some(id) => parent = Some(id),
+                None => break,
+            }
+        }
+    }
+
+    fn tracked_engine(dram: u64, ssd: u64) -> CacheEngine {
+        let mut e = CacheEngine::new(CacheConfig {
+            chunk_tokens: 4,
+            gpu_capacity: 0,
+            dram_capacity: dram,
+            ssd_capacity: ssd,
+            policy: "lookahead-lru".into(),
+        });
+        e.track_events = true;
+        e
+    }
+
+    #[test]
+    fn holder_masks_follow_events() {
+        let mut d = PrefixDirectory::new(3);
+        let c = chain_of(1, 2);
+        d.apply(0, &CacheEvent::Resident(c[0]));
+        d.apply(2, &CacheEvent::Resident(c[0]));
+        d.apply(2, &CacheEvent::Resident(c[1]));
+        assert_eq!(d.holders(c[0]), 0b101);
+        assert_eq!(d.holders(c[1]), 0b100);
+        assert_eq!(d.len(), 2);
+        d.apply(0, &CacheEvent::Gone(c[0]));
+        assert_eq!(d.holders(c[0]), 0b100);
+        // dropping the last holder removes the entry entirely
+        d.apply(2, &CacheEvent::Gone(c[0]));
+        assert_eq!(d.holders(c[0]), 0);
+        assert_eq!(d.len(), 1);
+        // Gone for a replica that never held it is a no-op
+        d.apply(1, &CacheEvent::Gone(c[1]));
+        assert_eq!(d.holders(c[1]), 0b100);
+    }
+
+    #[test]
+    fn matched_prefix_stops_at_first_gap() {
+        let mut d = PrefixDirectory::new(2);
+        let c = chain_of(7, 4);
+        for k in [c[0], c[1], c[3]] {
+            d.apply(0, &CacheEvent::Resident(k));
+        }
+        // replica 0 holds chunks 0,1,3 — the gap at 2 ends the prefix
+        assert_eq!(d.matched_prefix_one(0, &c), 2);
+        assert_eq!(d.matched_prefix_one(1, &c), 0);
+        assert_eq!(d.matched_prefix_all(&c), vec![2, 0]);
+        // full-chain holder reports the whole length
+        for k in &c {
+            d.apply(1, &CacheEvent::Resident(*k));
+        }
+        assert_eq!(d.matched_prefix_all(&c), vec![2, 4]);
+        assert_eq!(d.matched_prefix_one(1, &c), 4);
+    }
+
+    #[test]
+    fn matched_prefix_all_agrees_with_per_replica_probes() {
+        let mut rng = Rng::new(0xD1A);
+        let mut d = PrefixDirectory::new(5);
+        let chains: Vec<Vec<ChunkKey>> = (0..8).map(|t| chain_of(t, 1 + t as usize % 5)).collect();
+        for _ in 0..400 {
+            let chain = &chains[rng.below(8) as usize];
+            let r = rng.below(5) as usize;
+            let k = chain[rng.below(chain.len() as u64) as usize];
+            if rng.below(3) == 0 {
+                d.apply(r, &CacheEvent::Gone(k));
+            } else {
+                d.apply(r, &CacheEvent::Resident(k));
+            }
+            let probe = &chains[rng.below(8) as usize];
+            let all = d.matched_prefix_all(probe);
+            for rep in 0..5 {
+                assert_eq!(all[rep], d.matched_prefix_one(rep, probe));
+            }
+        }
+    }
+
+    #[test]
+    fn max_width_directory_works() {
+        let mut d = PrefixDirectory::new(MAX_REPLICAS);
+        let c = chain_of(1, 1);
+        d.apply(63, &CacheEvent::Resident(c[0]));
+        assert_eq!(d.matched_prefix_one(63, &c), 1);
+        let all = d.matched_prefix_all(&c);
+        assert_eq!(all[63], 1);
+        assert_eq!(all[0], 0);
+    }
+
+    /// Property (satellite 3): the directory stays consistent with the
+    /// replica-local trees under random insert / evict / demote /
+    /// promote / route interleavings, with events drained after every
+    /// operation — exactly the cadence `Replica::step` guarantees.
+    #[test]
+    fn prop_directory_tracks_replica_trees() {
+        forall(
+            0xD1EC7,
+            40,
+            |rng: &mut Rng| {
+                let n = 5 + rng.below(60) as usize;
+                (0..n).map(|_| rng.next_u64()).collect::<Vec<u64>>()
+            },
+            |ops| {
+                const N: usize = 3;
+                let mut dir = PrefixDirectory::new(N);
+                // small tiers so eviction pressure actually fires
+                let mut engines: Vec<CacheEngine> =
+                    (0..N).map(|_| tracked_engine(400, 700)).collect();
+                let mut router = registry::parse("affinity-balanced").unwrap();
+                let chains: Vec<Vec<ChunkKey>> =
+                    (0..6).map(|t| chain_of(t, 1 + (t as usize % 4))).collect();
+                for &op in ops {
+                    let r = (op % N as u64) as usize;
+                    let chain = &chains[((op >> 4) % 6) as usize];
+                    match (op >> 8) % 7 {
+                        0 => insert_chain(&mut engines[r], chain, Tier::Dram),
+                        1 => insert_chain(&mut engines[r], chain, Tier::Ssd),
+                        2 => {
+                            engines[r].evict_one(Tier::Dram);
+                        }
+                        3 => {
+                            engines[r].lookup(chain);
+                        }
+                        4 => {
+                            for id in engines[r].prefetch_targets(chain) {
+                                engines[r].promote(id, Tier::Dram);
+                            }
+                        }
+                        5 => {
+                            // demote the chain's LAST chunk — always a
+                            // leaf (chains are tag-disjoint), so the
+                            // leaf-only removal rule holds
+                            let last = *chain.last().unwrap();
+                            if let Some(id) = engines[r].tree.get(last) {
+                                engines[r].demote(id, Tier::Dram);
+                            }
+                        }
+                        _ => {
+                            let views: Vec<ReplicaView> = (0..N)
+                                .map(|id| ReplicaView {
+                                    id,
+                                    waiting: ((op >> 16) % 7) as usize,
+                                    decoding: ((op >> 24) % 3) as usize,
+                                    clock: 0.0,
+                                })
+                                .collect();
+                            let t = router.route(chain, &views, &dir);
+                            if t >= N {
+                                return Err(format!("router returned replica {t} of {N}"));
+                            }
+                        }
+                    }
+                    for (i, e) in engines.iter_mut().enumerate() {
+                        for ev in e.take_events() {
+                            dir.apply(i, &ev);
+                        }
+                    }
+                    let refs: Vec<&CacheEngine> = engines.iter().collect();
+                    if let Err(m) = dir.check_consistent(&refs) {
+                        return Err(m);
+                    }
+                }
+                check(true, "")
+            },
+        );
+    }
+}

@@ -1,0 +1,117 @@
+//! Multi-replica cluster serving — fleet-scale PCR.
+//!
+//! A single `serve::engine` instance owns one prefix tree, so a
+//! request's longest cached prefix lives on exactly **one** replica;
+//! under naive load balancing the repeat traffic that prefix reuse
+//! feeds on is sprayed across the fleet and the aggregate hit ratio
+//! collapses. This subsystem routes each request to the replica that
+//! already holds its prefix, without ever letting the router walk a
+//! replica-local tree:
+//!
+//! * [`replica`] — [`Replica`](replica::Replica): one full serving
+//!   engine (`serve::engine::EngineCore`: cache + scheduler queue +
+//!   prefetcher + `MetricsCollector`) behind a handle that republishes
+//!   cache residency events after every step.
+//! * [`directory`] — [`PrefixDirectory`](directory::PrefixDirectory):
+//!   the global chunk-hash → replica-set map (one u64 bitmask per
+//!   chunk), maintained purely from replica insert/evict callbacks
+//!   ([`CacheEvent`](crate::cache::engine::CacheEvent)). Matched-prefix
+//!   length per replica is answered in O(depth), for the whole fleet in
+//!   O(depth + replicas).
+//! * [`router`] — the open [`RoutingPolicy`](router::RoutingPolicy)
+//!   trait + name registry (the same pattern as
+//!   `cache::policy::registry`): `round-robin`, `least-loaded`,
+//!   `prefix-affinity`, `affinity-balanced[:alpha]`.
+//! * [`sim`] — drives N replicas over one `Workload` in virtual time
+//!   (smallest-clock replica acts next, so routing never observes
+//!   queue states from a replica's future) and aggregates per-replica
+//!   outcomes into a [`ClusterOutcome`](sim::ClusterOutcome): fleet hit
+//!   ratio, merged TTFT/E2EL summaries, load-imbalance coefficient,
+//!   and directory staleness count.
+//!
+//! Configured via the `[cluster]` TOML section (`cluster.replicas`,
+//! `cluster.router`) or `pcr cluster --replicas N --router NAME`.
+//!
+//! # Writing a custom routing policy
+//!
+//! Routing is an open extension point: implement
+//! [`router::RoutingPolicy`] and either register a name (an arm in
+//! `router::registry::parse` plus an entry in `registry::NAMES`, which
+//! makes it reachable from TOML/CLI and the router-sweep bench) or
+//! hand an instance straight to [`sim::run_with`]. The contract:
+//!
+//! * **`route`** picks a replica index in `0..views.len()` for a
+//!   request whose chunk chain is `chain`. `views` is never empty and
+//!   is ordered by replica id (`views[i].id == i`); out-of-range
+//!   returns are clamped to the last replica rather than trusted.
+//! * The router sees **only** [`router::ReplicaView`] (queue depths +
+//!   virtual clock) and the [`directory`] — never a replica's tree.
+//!   Keeping the observation surface this small is what makes the
+//!   decision O(depth) instead of O(tree).
+//! * Routers may keep internal state (`route` takes `&mut self`) —
+//!   `round-robin`'s cursor is the canonical example. Determinism is
+//!   required: same call sequence, same answers. Break ties
+//!   deterministically (the built-ins use lowest load, then lowest id).
+//!
+//! A sticky-by-hash policy, condensed:
+//!
+//! ```ignore
+//! #[derive(Debug, Default)]
+//! struct StickyHash;
+//!
+//! impl RoutingPolicy for StickyHash {
+//!     fn name(&self) -> &'static str { "sticky-hash" }
+//!
+//!     fn route(
+//!         &mut self,
+//!         chain: &[ChunkKey],
+//!         views: &[ReplicaView],
+//!         _directory: &PrefixDirectory,
+//!     ) -> usize {
+//!         // first chunk hash identifies the shared document prefix
+//!         chain.first().map(|k| k.0 as usize).unwrap_or(0) % views.len()
+//!     }
+//! }
+//!
+//! // Unregistered use:
+//! let out = sim::run_with(&cfg, &spec, &wl, 4, Box::new(StickyHash));
+//! ```
+//!
+//! # Directory-consistency invariants
+//!
+//! The directory is a *mirror*, never an authority — replicas trust
+//! only their local trees. The invariants, checked two-sidedly by
+//! [`directory::PrefixDirectory::check_consistent`] and
+//! property-tested under random insert/evict/route interleavings:
+//!
+//! 1. **No false holders**: every `(chunk, replica)` bit set in the
+//!    directory corresponds to a node resident (≥1 tier) in that
+//!    replica's tree.
+//! 2. **No missing holders**: every resident node in every replica's
+//!    tree has its bit set.
+//! 3. **No empty entries**: a chunk whose holder mask reaches zero is
+//!    removed from the map (so `len()` counts live chunks).
+//!
+//! These hold exactly *between* engine steps because residency changes
+//! only inside [`CacheEngine`](crate::cache::engine::CacheEngine)
+//! mutations, each of which emits a [`CacheEvent`]
+//! (crate::cache::engine::CacheEvent) that
+//! [`Replica::step`](replica::Replica::step) drains into the directory
+//! before returning. *Within* the window between a routing decision
+//! and the target replica's prefill, eviction pressure can still
+//! shrink the promised prefix — that is not an inconsistency but
+//! **staleness**, counted per replica
+//! (`EngineCore::directory_stale`, surfaced as
+//! [`ClusterOutcome::directory_stale`](sim::ClusterOutcome)) and
+//! harmless for correctness because `plan_movement` re-checks the
+//! local tree.
+
+pub mod directory;
+pub mod replica;
+pub mod router;
+pub mod sim;
+
+pub use directory::PrefixDirectory;
+pub use replica::Replica;
+pub use router::{ReplicaView, RoutingPolicy};
+pub use sim::{run, run_with, ClusterOutcome};

@@ -1,0 +1,77 @@
+//! One serving replica: a full [`EngineCore`] (cache + scheduler queue
+//! + prefetcher + metrics) behind a handle that republishes cache
+//! residency events into the global [`PrefixDirectory`] after every
+//! step — the callback feed the directory-consistency invariants in
+//! the [`crate::cluster`] guide rely on.
+
+use crate::cluster::directory::PrefixDirectory;
+use crate::cluster::router::ReplicaView;
+use crate::config::ExperimentConfig;
+use crate::serve::engine::{EngineCore, RunOutcome};
+use crate::serve::request::Request;
+use crate::serve::system::SystemSpec;
+
+/// A replica id plus its engine. The id doubles as the replica's bit
+/// position in the directory's holder masks.
+pub struct Replica {
+    pub id: usize,
+    pub core: EngineCore,
+}
+
+impl Replica {
+    /// Build replica `id` for `cfg` × `spec`, with residency-event
+    /// tracking enabled so the directory can mirror its cache.
+    pub fn new(
+        id: usize,
+        cfg: &ExperimentConfig,
+        spec: &SystemSpec,
+        mean_input_tokens: f64,
+    ) -> Replica {
+        let mut core = EngineCore::new(cfg, spec, mean_input_tokens);
+        core.cache.track_events = true;
+        Replica { id, core }
+    }
+
+    /// Admit a routed request.
+    pub fn enqueue(&mut self, req: Request) {
+        self.core.enqueue(req);
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.core.is_idle()
+    }
+
+    /// The replica's virtual clock (seconds).
+    pub fn clock(&self) -> f64 {
+        self.core.clock
+    }
+
+    /// The routing-visible snapshot of this replica.
+    pub fn view(&self) -> ReplicaView {
+        ReplicaView {
+            id: self.id,
+            waiting: self.core.waiting.len(),
+            decoding: self.core.decoding_len(),
+            clock: self.core.clock,
+        }
+    }
+
+    /// One engine pass, then publish the residency transitions it
+    /// caused — the directory is never more than one step stale.
+    pub fn step(&mut self, directory: &mut PrefixDirectory) {
+        self.core.step();
+        self.publish(directory);
+    }
+
+    /// Drain the cache's event feed into the directory.
+    pub fn publish(&mut self, directory: &mut PrefixDirectory) {
+        for ev in self.core.cache.take_events() {
+            directory.apply(self.id, &ev);
+        }
+    }
+
+    /// Finalize into the same outcome struct single-engine runs emit.
+    pub fn into_outcome(self) -> RunOutcome {
+        self.core.into_outcome()
+    }
+}

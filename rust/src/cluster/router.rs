@@ -1,0 +1,298 @@
+//! Pluggable request-routing policies for the replica fleet.
+//!
+//! Same open-registry shape as `cache::policy` / `cache::prefetch`:
+//! a [`RoutingPolicy`] trait, built-in implementations, and a
+//! [`registry`] that resolves config/CLI names (`cluster.router`,
+//! `--router`). The module guide in [`crate::cluster`] documents the
+//! routing contract and a worked custom-policy example.
+
+use crate::cache::chunk::ChunkKey;
+use crate::cluster::directory::PrefixDirectory;
+use std::cmp::Reverse;
+
+/// What a router is allowed to observe about one replica: queue depths
+/// and its virtual clock — never the replica's prefix tree. Ordered by
+/// id in the slice handed to [`RoutingPolicy::route`]
+/// (`views[i].id == i`).
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaView {
+    pub id: usize,
+    /// Requests queued but not yet prefilled.
+    pub waiting: usize,
+    /// Requests in their decode phase.
+    pub decoding: usize,
+    /// The replica's virtual clock (seconds).
+    pub clock: f64,
+}
+
+impl ReplicaView {
+    /// Outstanding work: queued + decoding requests.
+    pub fn load(&self) -> usize {
+        self.waiting + self.decoding
+    }
+}
+
+/// A routing decision: pick the replica index for a request given its
+/// chunk chain, the fleet's queue states, and the global prefix
+/// directory. `&mut self` so policies may keep internal state (e.g.
+/// round-robin's cursor); decisions must stay deterministic.
+pub trait RoutingPolicy: std::fmt::Debug + Send {
+    /// Registry name (diagnostics, reports, bench labels).
+    fn name(&self) -> &'static str;
+
+    /// Replica index in `0..views.len()` (`views` is never empty;
+    /// out-of-range values are clamped by the caller, not trusted).
+    fn route(
+        &mut self,
+        chain: &[ChunkKey],
+        views: &[ReplicaView],
+        directory: &PrefixDirectory,
+    ) -> usize;
+}
+
+/// Cache-oblivious baseline: cycle through the replicas in id order.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoutingPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(
+        &mut self,
+        _chain: &[ChunkKey],
+        views: &[ReplicaView],
+        _dir: &PrefixDirectory,
+    ) -> usize {
+        let r = self.next % views.len();
+        self.next = (self.next + 1) % views.len();
+        r
+    }
+}
+
+/// Pick the replica with the fewest outstanding requests (ties go to
+/// the lowest id). Balances load, ignores cache placement.
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl RoutingPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn route(
+        &mut self,
+        _chain: &[ChunkKey],
+        views: &[ReplicaView],
+        _dir: &PrefixDirectory,
+    ) -> usize {
+        views.iter().min_by_key(|v| (v.load(), v.id)).expect("views is never empty").id
+    }
+}
+
+/// Maximize the matched prefix: route to the replica the directory says
+/// holds the longest resident prefix of the chain; break prefix ties by
+/// load, then id. Pure affinity — a hot prefix can pile all its repeats
+/// onto one replica.
+#[derive(Debug, Default)]
+pub struct PrefixAffinity;
+
+impl RoutingPolicy for PrefixAffinity {
+    fn name(&self) -> &'static str {
+        "prefix-affinity"
+    }
+
+    fn route(&mut self, chain: &[ChunkKey], views: &[ReplicaView], dir: &PrefixDirectory) -> usize {
+        let matched = dir.matched_prefix_all(chain);
+        views
+            .iter()
+            .min_by_key(|v| (Reverse(matched[v.id]), v.load(), v.id))
+            .expect("views is never empty")
+            .id
+    }
+}
+
+/// Affinity tempered by load: score each replica
+/// `matched_chunks − alpha × load` and take the max (ties: lowest load,
+/// then lowest id). `alpha` is the exchange rate — how many queued
+/// requests one matched chunk is worth; `alpha = 0` degenerates to
+/// [`PrefixAffinity`], large `alpha` to [`LeastLoaded`].
+#[derive(Debug)]
+pub struct AffinityBalanced {
+    pub alpha: f64,
+}
+
+impl AffinityBalanced {
+    /// Half a request per matched chunk: a typical few-chunk prefix
+    /// outweighs small queue gaps, but a deep backlog still diverts.
+    pub const DEFAULT_ALPHA: f64 = 0.5;
+}
+
+impl Default for AffinityBalanced {
+    fn default() -> Self {
+        AffinityBalanced {
+            alpha: Self::DEFAULT_ALPHA,
+        }
+    }
+}
+
+impl RoutingPolicy for AffinityBalanced {
+    fn name(&self) -> &'static str {
+        "affinity-balanced"
+    }
+
+    fn route(&mut self, chain: &[ChunkKey], views: &[ReplicaView], dir: &PrefixDirectory) -> usize {
+        let matched = dir.matched_prefix_all(chain);
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        let mut best_load = usize::MAX;
+        for v in views {
+            let score = matched[v.id] as f64 - self.alpha * v.load() as f64;
+            if score > best_score || (score == best_score && v.load() < best_load) {
+                best = v.id;
+                best_score = score;
+                best_load = v.load();
+            }
+        }
+        best
+    }
+}
+
+/// Name → policy resolution for `cluster.router` / `--router`.
+pub mod registry {
+    use super::*;
+
+    /// Registered policy names, sweep order.
+    pub const NAMES: [&str; 4] = [
+        "round-robin",
+        "least-loaded",
+        "prefix-affinity",
+        "affinity-balanced",
+    ];
+
+    /// `", "`-joined [`NAMES`] for error messages.
+    pub fn names_joined() -> String {
+        NAMES.join(", ")
+    }
+
+    /// Resolve a policy name (case-insensitive). `affinity-balanced`
+    /// accepts an `:alpha` suffix, e.g. `affinity-balanced:0.25`.
+    pub fn parse(name: &str) -> Option<Box<dyn RoutingPolicy>> {
+        let name = name.to_ascii_lowercase();
+        match name.as_str() {
+            "round-robin" | "rr" => return Some(Box::new(RoundRobin::default())),
+            "least-loaded" => return Some(Box::new(LeastLoaded)),
+            "prefix-affinity" | "affinity" => return Some(Box::new(PrefixAffinity)),
+            "affinity-balanced" => return Some(Box::new(AffinityBalanced::default())),
+            _ => {}
+        }
+        if let Some(alpha) = name.strip_prefix("affinity-balanced:") {
+            let alpha: f64 = alpha.parse().ok()?;
+            if !alpha.is_finite() || alpha < 0.0 {
+                return None;
+            }
+            return Some(Box::new(AffinityBalanced { alpha }));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::chunk::chain_hash;
+    use crate::cache::engine::CacheEvent;
+
+    fn chain_of(tag: u32, n: usize) -> Vec<ChunkKey> {
+        let mut keys = Vec::new();
+        let mut parent = ChunkKey::ROOT;
+        for i in 0..n {
+            let k = chain_hash(parent, &[tag, i as u32]);
+            keys.push(k);
+            parent = k;
+        }
+        keys
+    }
+
+    fn views(loads: &[(usize, usize)]) -> Vec<ReplicaView> {
+        loads
+            .iter()
+            .enumerate()
+            .map(|(id, &(waiting, decoding))| ReplicaView {
+                id,
+                waiting,
+                decoding,
+                clock: 0.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut rr = RoundRobin::default();
+        let d = PrefixDirectory::new(3);
+        let v = views(&[(0, 0), (9, 9), (0, 0)]);
+        let c = chain_of(1, 2);
+        let picks: Vec<usize> = (0..5).map(|_| rr.route(&c, &v, &d)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn least_loaded_prefers_emptiest_then_lowest_id() {
+        let mut ll = LeastLoaded;
+        let d = PrefixDirectory::new(3);
+        let c = chain_of(1, 2);
+        assert_eq!(ll.route(&c, &views(&[(4, 0), (1, 1), (0, 1)]), &d), 2);
+        // tie on load=1 between ids 1 and 2 → lowest id
+        assert_eq!(ll.route(&c, &views(&[(3, 0), (1, 0), (0, 1)]), &d), 1);
+    }
+
+    #[test]
+    fn prefix_affinity_follows_the_directory() {
+        let mut pa = PrefixAffinity;
+        let mut d = PrefixDirectory::new(3);
+        let c = chain_of(7, 3);
+        // nobody holds anything → tie broken by load, then id
+        assert_eq!(pa.route(&c, &views(&[(1, 0), (0, 0), (2, 0)]), &d), 1);
+        // replica 2 holds a 2-chunk prefix → wins despite higher load
+        d.apply(2, &CacheEvent::Resident(c[0]));
+        d.apply(2, &CacheEvent::Resident(c[1]));
+        assert_eq!(pa.route(&c, &views(&[(0, 0), (0, 0), (5, 0)]), &d), 2);
+    }
+
+    #[test]
+    fn affinity_balanced_trades_prefix_for_load() {
+        let mut d = PrefixDirectory::new(2);
+        let c = chain_of(9, 4);
+        for k in &c {
+            d.apply(0, &CacheEvent::Resident(*k));
+        }
+        // 4 matched chunks at alpha=0.5 are worth 8 queued requests:
+        // a 6-deep backlog still routes to the holder...
+        let mut ab = AffinityBalanced::default();
+        assert_eq!(ab.route(&c, &views(&[(6, 0), (0, 0)]), &d), 0);
+        // ...a 10-deep backlog diverts to the idle replica
+        assert_eq!(ab.route(&c, &views(&[(10, 0), (0, 0)]), &d), 1);
+        // alpha = 0 is pure affinity, any backlog tolerated
+        let mut pure = AffinityBalanced { alpha: 0.0 };
+        assert_eq!(pure.route(&c, &views(&[(50, 0), (0, 0)]), &d), 0);
+    }
+
+    #[test]
+    fn registry_parses_names_aliases_and_alpha() {
+        for name in registry::NAMES {
+            let p = registry::parse(name).unwrap();
+            assert_eq!(p.name(), name);
+        }
+        assert_eq!(registry::parse("RR").unwrap().name(), "round-robin");
+        assert_eq!(registry::parse("Affinity").unwrap().name(), "prefix-affinity");
+        assert_eq!(registry::parse("affinity-balanced:0.25").unwrap().name(), "affinity-balanced");
+        assert!(registry::parse("affinity-balanced:-1").is_none());
+        assert!(registry::parse("affinity-balanced:NaN").is_none());
+        assert!(registry::parse("random").is_none());
+        assert!(registry::names_joined().contains("prefix-affinity"));
+    }
+}

@@ -1,0 +1,301 @@
+//! The cluster simulator: N replicas, one workload, one router.
+//!
+//! Virtual-time scheduling rule: the replica with the **smallest
+//! clock** acts next (ties to the lowest id), and before it acts every
+//! arrival whose retrieval completed at or before that clock is routed
+//! — so a routing decision never observes queue state from any
+//! replica's future, and with one replica the loop is structurally
+//! identical to `serve::engine::run` (the single-replica parity test
+//! pins this down to the exact metric values).
+
+use crate::cluster::directory::PrefixDirectory;
+use crate::cluster::replica::Replica;
+use crate::cluster::router::{registry, RoutingPolicy};
+use crate::config::ExperimentConfig;
+use crate::serve::engine::RunOutcome;
+use crate::serve::metrics::{MetricsCollector, Report};
+use crate::serve::request::Request;
+use crate::serve::system::SystemSpec;
+use crate::serve::workload::Workload;
+use std::sync::Arc;
+
+/// Per-replica outcomes plus the fleet-level aggregates.
+#[derive(Clone, Debug)]
+pub struct ClusterOutcome {
+    /// Routing policy that produced this run.
+    pub router: &'static str,
+    /// One full single-engine outcome per replica, in id order.
+    pub replicas: Vec<RunOutcome>,
+    /// All replicas' samples merged into one report.
+    pub aggregate: Report,
+    /// Fleet cache hit ratio: Σ hit chunks / Σ looked-up chunks.
+    pub hit_ratio: f64,
+    /// Coefficient of variation of per-replica finished counts
+    /// (0 = perfectly even, grows with skew).
+    pub load_imbalance: f64,
+    /// Requests whose directory-predicted matched prefix had shrunk by
+    /// prefill time (eviction between routing and scheduling).
+    pub directory_stale: u64,
+    /// Live chunk entries left in the directory at the end.
+    pub directory_entries: usize,
+    /// Latest replica clock — the fleet's makespan.
+    pub virtual_duration: f64,
+}
+
+/// Run the cluster configured by `cfg` (`cluster.replicas`,
+/// `cluster.router`). The router name must be registered —
+/// `Config::validate` guarantees that upstream.
+pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> ClusterOutcome {
+    let router = registry::parse(&cfg.router).unwrap_or_else(|| {
+        panic!(
+            "unknown router '{}' (registered: {})",
+            cfg.router,
+            registry::names_joined()
+        )
+    });
+    run_with(cfg, spec, workload, cfg.replicas, router)
+}
+
+/// Run `n_replicas` copies of `cfg` × `spec` over `workload` under an
+/// explicit routing policy (the entry point for unregistered custom
+/// policies and the router-sweep bench).
+pub fn run_with(
+    cfg: &ExperimentConfig,
+    spec: &SystemSpec,
+    workload: &Workload,
+    n_replicas: usize,
+    mut router: Box<dyn RoutingPolicy>,
+) -> ClusterOutcome {
+    let n = n_replicas.max(1);
+    let mut directory = PrefixDirectory::new(n);
+    let mut replicas: Vec<Replica> = (0..n)
+        .map(|id| Replica::new(id, cfg, spec, workload.mean_input_tokens))
+        .collect();
+    let items = &workload.items;
+    let ready = |i: usize| items[i].arrival + items[i].retrieval_seconds;
+    let mut next = 0usize;
+
+    loop {
+        // the smallest-clock replica acts next; a replica that is idle
+        // with no arrivals left is retired from consideration
+        let Some(r) = replicas
+            .iter()
+            .filter(|rep| !(rep.is_idle() && next >= items.len()))
+            .min_by(|a, b| {
+                a.clock().partial_cmp(&b.clock()).unwrap().then(a.id.cmp(&b.id))
+            })
+            .map(|rep| rep.id)
+        else {
+            break;
+        };
+
+        // route every arrival whose retrieval completed by its clock
+        while next < items.len() && ready(next) <= replicas[r].clock() {
+            let it = &items[next];
+            let views: Vec<_> = replicas.iter().map(Replica::view).collect();
+            let target = router.route(&it.chain.keys, &views, &directory).min(n - 1);
+            let mut req = Request::new(
+                next as u64,
+                it.input_id,
+                Arc::clone(&it.tokens),
+                Arc::clone(&it.chain),
+                cfg.output_tokens,
+                it.arrival,
+                ready(next),
+            );
+            req.routed_matched = Some(directory.matched_prefix_one(target, &it.chain.keys));
+            replicas[target].enqueue(req);
+            next += 1;
+        }
+
+        if replicas[r].is_idle() {
+            // nothing routed to it at its clock: jump forward to the
+            // next admission (strictly forward — the routing loop just
+            // drained everything at or before the current clock)
+            if next < items.len() {
+                replicas[r].core.clock = ready(next);
+            }
+            continue;
+        }
+        replicas[r].step(&mut directory);
+    }
+
+    #[cfg(debug_assertions)]
+    {
+        let engines: Vec<&crate::cache::engine::CacheEngine> =
+            replicas.iter().map(|rep| &rep.core.cache).collect();
+        if let Err(msg) = directory.check_consistent(&engines) {
+            panic!("directory drifted from replica trees: {msg}");
+        }
+    }
+
+    let mut merged = MetricsCollector::new();
+    let mut directory_stale = 0u64;
+    let mut hit_chunks = 0u64;
+    let mut total_chunks = 0u64;
+    let mut finished_counts = Vec::with_capacity(n);
+    for rep in &replicas {
+        merged.absorb(&rep.core.metrics);
+        directory_stale += rep.core.directory_stale;
+        hit_chunks += rep.core.cache.stats.total_hits();
+        total_chunks += rep.core.cache.stats.total_hits() + rep.core.cache.stats.missed_chunks;
+        finished_counts.push(rep.core.metrics.finished as f64);
+    }
+    let directory_entries = directory.len();
+    let outcomes: Vec<RunOutcome> = replicas.into_iter().map(Replica::into_outcome).collect();
+    // per-replica metrics.io is only set at finalization — fold the
+    // lane counters from the outcomes, after absorbing the raw samples
+    for out in &outcomes {
+        merged.io.absorb(&out.io);
+    }
+    debug_assert_eq!(merged.finished, items.len(), "all requests must finish");
+
+    let aggregate = merged.report();
+    let hit_ratio = if total_chunks == 0 {
+        0.0
+    } else {
+        hit_chunks as f64 / total_chunks as f64
+    };
+    let virtual_duration = outcomes.iter().fold(0.0f64, |acc, o| acc.max(o.virtual_duration));
+
+    ClusterOutcome {
+        router: router.name(),
+        replicas: outcomes,
+        aggregate,
+        hit_ratio,
+        load_imbalance: coefficient_of_variation(&finished_counts),
+        directory_stale,
+        directory_entries,
+        virtual_duration,
+    }
+}
+
+/// Population coefficient of variation (σ/μ); 0 for empty input or a
+/// zero mean.
+fn coefficient_of_variation(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    if mean == 0.0 {
+        return 0.0;
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+    var.sqrt() / mean
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine;
+
+    /// Same shape as `serve::engine`'s test workload: small tiers so
+    /// eviction/prefetch fire, SSD holds the whole dataset.
+    fn test_cfg(rate: f64) -> ExperimentConfig {
+        ExperimentConfig {
+            model: "llama2-7b".into(),
+            platform: "a6000".into(),
+            system: "pcr".into(),
+            n_inputs: 40,
+            n_requests: 120,
+            oversample: true,
+            rate,
+            n_docs: 150,
+            n_topics: 12,
+            mean_doc_tokens: 600,
+            query_tokens: 48,
+            chunk_tokens: 256,
+            gpu_bytes: 2 * (1 << 30),
+            dram_bytes: 6 * (1 << 30),
+            ssd_bytes: 40 * (1 << 30),
+            ..Default::default()
+        }
+    }
+
+    fn pcr_spec(cfg: &ExperimentConfig) -> SystemSpec {
+        SystemSpec::try_named("pcr", cfg.prefetch_window).unwrap()
+    }
+
+    /// Satellite 3: one replica under round-robin reproduces the
+    /// single-engine run exactly — same seed, same clocks, same
+    /// counters — so the cluster layer adds no behavioural drift.
+    #[test]
+    fn single_replica_round_robin_matches_engine_run() {
+        let cfg = test_cfg(0.8);
+        let wl = Workload::build(&cfg);
+        let spec = pcr_spec(&cfg);
+        let single = engine::run(&cfg, &spec, &wl);
+        let cluster = run_with(&cfg, &spec, &wl, 1, registry::parse("round-robin").unwrap());
+        assert_eq!(cluster.replicas.len(), 1);
+        let rep = &cluster.replicas[0];
+        assert_eq!(rep.report.finished, single.report.finished);
+        assert_eq!(rep.report.ttft.mean, single.report.ttft.mean);
+        assert_eq!(rep.report.e2el.p99, single.report.e2el.p99);
+        assert_eq!(rep.report.itl.n, single.report.itl.n);
+        assert_eq!(rep.report.queue_time.mean, single.report.queue_time.mean);
+        assert_eq!(rep.report.retrieval.mean, single.report.retrieval.mean);
+        assert_eq!(rep.cache.total_hits(), single.cache.total_hits());
+        assert_eq!(rep.cache.evicted_chunks, single.cache.evicted_chunks);
+        assert_eq!(rep.prefetch_submitted, single.prefetch_submitted);
+        assert_eq!(rep.io.demand.submitted, single.io.demand.submitted);
+        assert_eq!(rep.io.upgraded, single.io.upgraded);
+        assert_eq!(rep.virtual_duration, single.virtual_duration);
+        assert_eq!(cluster.virtual_duration, single.virtual_duration);
+        // aggregates of one replica are that replica
+        assert_eq!(cluster.aggregate.ttft.mean, single.report.ttft.mean);
+        assert_eq!(cluster.load_imbalance, 0.0);
+    }
+
+    /// The PR's headline claim: affinity routing recovers the hit
+    /// ratio that spraying repeats across the fleet destroys.
+    #[test]
+    fn affinity_routers_beat_round_robin_on_aggregate_hits() {
+        let cfg = test_cfg(1.0);
+        let wl = Workload::build(&cfg);
+        let spec = pcr_spec(&cfg);
+        let rr = run_with(&cfg, &spec, &wl, 4, registry::parse("round-robin").unwrap());
+        let pa = run_with(&cfg, &spec, &wl, 4, registry::parse("prefix-affinity").unwrap());
+        let ab = run_with(&cfg, &spec, &wl, 4, registry::parse("affinity-balanced").unwrap());
+        assert!(
+            pa.hit_ratio > rr.hit_ratio,
+            "prefix-affinity {:.3} vs round-robin {:.3}",
+            pa.hit_ratio,
+            rr.hit_ratio
+        );
+        assert!(
+            ab.hit_ratio > rr.hit_ratio,
+            "affinity-balanced {:.3} vs round-robin {:.3}",
+            ab.hit_ratio,
+            rr.hit_ratio
+        );
+    }
+
+    #[test]
+    fn all_routers_finish_everything() {
+        let cfg = test_cfg(1.0);
+        let wl = Workload::build(&cfg);
+        let spec = pcr_spec(&cfg);
+        for name in registry::NAMES {
+            let out = run_with(&cfg, &spec, &wl, 3, registry::parse(name).unwrap());
+            assert_eq!(out.aggregate.finished, 120, "{name}");
+            assert_eq!(out.router, name);
+            assert_eq!(out.replicas.len(), 3);
+            assert!(out.virtual_duration > 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn cluster_replays_deterministically() {
+        let cfg = test_cfg(1.0);
+        let wl = Workload::build(&cfg);
+        let spec = pcr_spec(&cfg);
+        let a = run_with(&cfg, &spec, &wl, 4, registry::parse("affinity-balanced").unwrap());
+        let b = run_with(&cfg, &spec, &wl, 4, registry::parse("affinity-balanced").unwrap());
+        assert_eq!(a.aggregate.ttft.mean, b.aggregate.ttft.mean);
+        assert_eq!(a.hit_ratio, b.hit_ratio);
+        assert_eq!(a.directory_stale, b.directory_stale);
+        for (ra, rb) in a.replicas.iter().zip(&b.replicas) {
+            assert_eq!(ra.report.finished, rb.report.finished);
+        }
+    }
+}

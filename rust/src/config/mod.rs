@@ -65,6 +65,15 @@ pub struct ExperimentConfig {
     /// and the simulator's in-flight window).
     pub io_prefetch_depth: usize,
 
+    // --- cluster serving (`[cluster]` section) ---
+    /// Serving replicas driven by `cluster::sim` (1 = the single-engine
+    /// path). Bounded by the directory's replica-set word width (64).
+    pub replicas: usize,
+    /// Routing policy name, resolved through
+    /// `cluster::router::registry` (case-insensitive;
+    /// `affinity-balanced:<alpha>` is accepted).
+    pub router: String,
+
     // --- workload (paper §6.1) ---
     /// Distinct inputs in the dataset (paper: 1000 / 2000).
     pub n_inputs: usize,
@@ -113,6 +122,8 @@ impl Default for ExperimentConfig {
             io_workers: 2,
             io_demand_depth: 64,
             io_prefetch_depth: 64,
+            replicas: 1,
+            router: "prefix-affinity".into(),
             n_inputs: 1000,
             oversample: true,
             n_requests: 2000,
@@ -171,6 +182,8 @@ impl ExperimentConfig {
             "io.workers" => self.io_workers = need_f64()? as usize,
             "io.demand_depth" => self.io_demand_depth = need_f64()? as usize,
             "io.prefetch_depth" => self.io_prefetch_depth = need_f64()? as usize,
+            "cluster.replicas" => self.replicas = need_f64()? as usize,
+            "cluster.router" => self.router = need_str()?,
             "workload.n_inputs" => self.n_inputs = need_f64()? as usize,
             "workload.oversample" => self.oversample = need_bool()?,
             "workload.n_requests" => self.n_requests = need_f64()? as usize,
@@ -201,7 +214,10 @@ impl ExperimentConfig {
     /// Sanity-check cross-field constraints.
     pub fn validate(&self) -> Result<()> {
         use crate::cache::{policy, prefetch};
+        use crate::cluster::directory as cluster_directory;
+        use crate::cluster::router::registry as router_registry;
         use crate::hw::spec::{model_spec, platform_spec};
+        use crate::serve::system::SystemSpec;
         use crate::sim::pipeline::OverlapMode;
         if model_spec(&self.model).is_none() {
             bail!("unknown model '{}'", self.model);
@@ -228,17 +244,32 @@ impl ExperimentConfig {
         if OverlapMode::parse(&self.overlap).is_none() {
             bail!("unknown overlap mode '{}'", self.overlap);
         }
-        if !matches!(
-            self.system.as_str(),
-            "vllm" | "ccache" | "sccache" | "lmcache" | "pcr"
-        ) {
-            bail!("unknown system '{}'", self.system);
+        if !SystemSpec::NAMES.contains(&self.system.as_str()) {
+            bail!(
+                "unknown system '{}' (registered: {})",
+                self.system,
+                SystemSpec::names_joined()
+            );
         }
         if self.chunk_tokens == 0 || self.rate <= 0.0 || self.n_requests == 0 {
             bail!("degenerate workload parameters");
         }
         if self.io_workers == 0 || self.io_demand_depth == 0 || self.io_prefetch_depth == 0 {
             bail!("io.workers / io.demand_depth / io.prefetch_depth must be >= 1");
+        }
+        if self.replicas == 0 || self.replicas > cluster_directory::MAX_REPLICAS {
+            bail!(
+                "cluster.replicas must be in 1..={} (got {})",
+                cluster_directory::MAX_REPLICAS,
+                self.replicas
+            );
+        }
+        if router_registry::parse(&self.router).is_none() {
+            bail!(
+                "unknown router '{}' (registered: {})",
+                self.router,
+                router_registry::names_joined()
+            );
         }
         Ok(())
     }
@@ -353,6 +384,41 @@ prefetch_depth = 128
         assert_eq!(io.prefetch_depth, 128);
         cfg.io_workers = 0;
         assert!(cfg.validate().is_err(), "zero workers must be rejected");
+    }
+
+    #[test]
+    fn cluster_section_keys() {
+        let text = r#"
+[cluster]
+replicas = 4
+router = "affinity-balanced:0.25"
+"#;
+        let map = file::parse(text).unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply(&map).unwrap();
+        assert_eq!(cfg.replicas, 4);
+        assert_eq!(cfg.router, "affinity-balanced:0.25");
+        cfg.validate().unwrap();
+        cfg.replicas = 0;
+        assert!(cfg.validate().is_err(), "zero replicas must be rejected");
+        cfg.replicas = 65;
+        assert!(cfg.validate().is_err(), "directory mask is 64 bits wide");
+        cfg.replicas = 4;
+        cfg.router = "hash-ring".into();
+        let msg = format!("{:#}", cfg.validate().unwrap_err());
+        for name in crate::cluster::router::registry::NAMES {
+            assert!(msg.contains(name), "router error missing '{name}': {msg}");
+        }
+    }
+
+    #[test]
+    fn system_errors_list_registered_names() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = "orca".into();
+        let msg = format!("{:#}", cfg.validate().unwrap_err());
+        for name in crate::serve::system::SystemSpec::NAMES {
+            assert!(msg.contains(name), "system error missing '{name}': {msg}");
+        }
     }
 
     #[test]

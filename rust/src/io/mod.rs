@@ -133,6 +133,19 @@ impl LaneStats {
             self.serve_seconds / self.completed as f64
         }
     }
+
+    /// Sum another lane's counters into this one (cluster aggregation).
+    pub fn absorb(&mut self, other: &LaneStats) {
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.cancelled += other.cancelled;
+        self.deduped += other.deduped;
+        self.rejected += other.rejected;
+        self.failed += other.failed;
+        self.bytes_moved += other.bytes_moved;
+        self.wait_seconds += other.wait_seconds;
+        self.serve_seconds += other.serve_seconds;
+    }
 }
 
 /// Snapshot of both lanes plus cross-lane events.
@@ -158,6 +171,14 @@ impl IoStats {
             Lane::Demand => &mut self.demand,
             Lane::Prefetch => &mut self.prefetch,
         }
+    }
+
+    /// Sum another snapshot's counters into this one — the cluster
+    /// path folds per-replica lane traffic into one fleet total.
+    pub fn absorb(&mut self, other: &IoStats) {
+        self.demand.absorb(&other.demand);
+        self.prefetch.absorb(&other.prefetch);
+        self.upgraded += other.upgraded;
     }
 
     /// Two-line human-readable block (mirrors `Report::pretty` rows).

@@ -39,12 +39,23 @@
 //! [`IoStats`](io::IoStats) shape. Sized via the `[io]` config section
 //! (`io.workers`, `io.demand_depth`, `io.prefetch_depth`).
 //!
+//! # Multi-replica cluster serving
+//!
+//! Above the single engine, [`cluster`] scales the same loop to N
+//! replicas: a global prefix directory (chunk-hash → replica set, fed
+//! by cache residency events) lets pluggable routing policies
+//! (`round-robin`, `least-loaded`, `prefix-affinity`,
+//! `affinity-balanced[:alpha]`) compute every replica's matched-prefix
+//! length in O(depth) without touching replica-local trees. Configured
+//! via the `[cluster]` section (`cluster.replicas`, `cluster.router`).
+//!
 //! Experiments (every table & figure of the paper) live in
 //! `rust/benches/`; see DESIGN.md for the experiment index and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
 pub mod bench;
 pub mod cache;
+pub mod cluster;
 pub mod config;
 pub mod hw;
 pub mod io;

@@ -4,11 +4,13 @@
 //! Subcommands:
 //!   sim      run one virtual-time serving experiment and print metrics
 //!   compare  run all five systems on one workload and print a table
+//!   cluster  run N replicas behind a routing policy and print per-replica + fleet metrics
 //!   serve    start the real-model HTTP server (requires artifacts)
 //!   corpus   generate + describe a synthetic corpus / workload
 //!   version  print version/build info
 
 use pcr::bench::Table;
+use pcr::cluster;
 use pcr::config::ExperimentConfig;
 use pcr::serve::system::SystemSpec;
 use pcr::serve::workload::Workload;
@@ -28,6 +30,7 @@ fn main() {
     let code = match cmd {
         "sim" => cmd_sim(&rest),
         "compare" => cmd_compare(&rest),
+        "cluster" => cmd_cluster(&rest),
         "serve" => cmd_serve(&rest),
         "corpus" => cmd_corpus(&rest),
         "version" | "--version" => {
@@ -50,7 +53,7 @@ fn main() {
 fn usage() {
     println!(
         "pcr {} — prefetch-enhanced KV-cache reuse for RAG serving\n\n\
-         USAGE: pcr <sim|compare|serve|corpus|version> [flags]\n\
+         USAGE: pcr <sim|compare|cluster|serve|corpus|version> [flags]\n\
          Run `pcr <cmd> --help` for per-command flags.",
         pcr::version()
     );
@@ -125,7 +128,13 @@ fn cmd_sim(argv: &[String]) -> i32 {
         wl.mean_input_tokens,
         wl.repetition_ratio * 100.0
     );
-    let spec = SystemSpec::from_config(&cfg).expect("validated");
+    let spec = match SystemSpec::from_config(&cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 2;
+        }
+    };
     let out = engine::run(&cfg, &spec, &wl);
     println!("system={} model={} platform={} rate={} policy={} prefetch={}",
              out.system, cfg.model, cfg.platform, cfg.rate,
@@ -170,6 +179,78 @@ fn cmd_compare(argv: &[String]) -> i32 {
         ]);
     }
     table.print();
+    0
+}
+
+fn cmd_cluster(argv: &[String]) -> i32 {
+    let cli = experiment_flags(Cli::new(
+        "pcr cluster",
+        "run N serving replicas behind a routing policy",
+    ))
+    .opt("replicas", "4", "serving replicas (1-64)")
+    .opt(
+        "router",
+        "prefix-affinity",
+        "routing policy (round-robin|least-loaded|prefix-affinity|affinity-balanced[:alpha])",
+    );
+    let args = match cli.parse(argv) {
+        Ok(a) => a,
+        Err(e) => return cli_err(&cli, e),
+    };
+    let mut cfg = build_config(&args);
+    cfg.replicas = args.usize_of("replicas");
+    cfg.router = args.get("router").unwrap().to_string();
+    // build_config validated before the cluster flags landed
+    if let Err(e) = cfg.validate() {
+        eprintln!("invalid config: {e:#}");
+        return 2;
+    }
+    let wl = Workload::build(&cfg);
+    println!(
+        "workload: {} requests over {} inputs, mean len {:.0} tokens, repetition {:.1}%",
+        wl.len(),
+        wl.n_distinct_inputs,
+        wl.mean_input_tokens,
+        wl.repetition_ratio * 100.0
+    );
+    let spec = match SystemSpec::from_config(&cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 2;
+        }
+    };
+    let out = cluster::run(&cfg, &spec, &wl);
+    println!(
+        "cluster: {} replicas, router={} system={} model={} rate={}",
+        out.replicas.len(),
+        out.router,
+        spec.name,
+        cfg.model,
+        cfg.rate
+    );
+    let mut table = Table::new(&[
+        "replica", "finished", "ttft-mean", "ttft-p99", "hit%", "reuse%",
+    ]);
+    for (id, rep) in out.replicas.iter().enumerate() {
+        table.row(&[
+            id.to_string(),
+            rep.report.finished.to_string(),
+            fmt_secs(rep.report.ttft.mean),
+            fmt_secs(rep.report.ttft.p99),
+            format!("{:.1}", rep.cache.hit_ratio() * 100.0),
+            format!("{:.1}", rep.report.mean_reuse_ratio * 100.0),
+        ]);
+    }
+    table.print();
+    println!("aggregate:\n{}", out.aggregate.pretty());
+    println!(
+        "fleet: hit-ratio {:.1}%  load-imbalance {:.3}  directory {} chunks ({} stale routings)",
+        out.hit_ratio * 100.0,
+        out.load_imbalance,
+        out.directory_entries,
+        out.directory_stale
+    );
     0
 }
 

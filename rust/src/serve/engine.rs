@@ -87,109 +87,178 @@ pub fn cache_config(
     }
 }
 
-/// Run one full serving experiment in virtual time.
-pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> RunOutcome {
-    let model = model_spec(&cfg.model).expect("validated model");
-    let platform = platform_spec(&cfg.platform).expect("validated platform");
-    let mut cache = CacheEngine::new(cache_config(cfg, spec, &model, &platform));
-    // Victim selection path: incremental index (default) or the fused
-    // O(n) scan (`cache.indexed_eviction = false` — the A/B knob the
-    // eviction-pressure bench and the replay-parity test flip).
-    cache.use_indexed_eviction = cfg.indexed_eviction;
-    let mut fabric = TransferFabric::new(&platform);
-    // Dual-lane virtual-time view of the SSD read resource: demand
-    // reads preempt queued prefetch work for async-I/O systems; for
-    // synchronous systems both classes share the prefetch-lane FIFO,
-    // reproducing the single shared channel they model.
-    let mut lanes = VirtualLanes::from_channel(&fabric.ssd_read);
-    let exec = SimExecutor::new(&model, &platform, cfg.chunk_tokens);
-    let mut prefetcher = SimPrefetcher::new();
-    let strategy = prefetch::registry::parse(&spec.prefetch_strategy).unwrap_or_else(|| {
-        panic!(
-            "unknown prefetch strategy '{}' (registered: {})",
-            spec.prefetch_strategy,
-            prefetch::registry::names_joined()
-        )
-    });
-    let mut metrics = MetricsCollector::new();
-    let mut breakdown = RunBreakdown::default();
-    let chunk_bytes = model.kv_bytes_per_token() * cfg.chunk_tokens as u64;
+/// One serving-engine instance with all of its run state: cache,
+/// transfer fabric, dual-lane SSD view, executor, prefetcher, queues,
+/// metrics, and the virtual clock. [`run`] drives one of these over a
+/// whole workload; `cluster::Replica` holds one per replica and
+/// interleaves [`step`](EngineCore::step) calls across the fleet.
+///
+/// The admission policy (which requests enter [`waiting`]
+/// (EngineCore::waiting), and when) is deliberately *outside* this
+/// struct — single-engine ingest and cluster routing are both callers
+/// of [`enqueue`](EngineCore::enqueue).
+pub struct EngineCore {
+    /// The system variant this engine emulates.
+    pub spec: SystemSpec,
+    /// Replica-local multi-tier cache (public so the cluster layer can
+    /// enable residency-event tracking and read `stats`).
+    pub cache: CacheEngine,
+    fabric: TransferFabric,
+    lanes: VirtualLanes,
+    exec: SimExecutor,
+    prefetcher: SimPrefetcher,
+    strategy: Box<dyn prefetch::PrefetchStrategy>,
+    pub metrics: MetricsCollector,
+    pub breakdown: RunBreakdown,
+    /// Requests admitted but not yet prefetched/prefilled.
+    pub waiting: WaitingQueue,
+    decoding: Vec<Request>,
+    /// This engine's virtual clock (seconds).
+    pub clock: f64,
+    /// Requests routed here with a directory-predicted matched-prefix
+    /// length the local tree could no longer honor at prefill time
+    /// (eviction raced the routing decision). Always 0 single-engine.
+    pub directory_stale: u64,
+    chunk_bytes: u64,
+    boost_horizon: u64,
+    lookahead_window: usize,
+    io_prefetch_depth: usize,
+    reused_gpu: u64,
+    reused_dram: u64,
+    reused_ssd: u64,
+}
 
-    let mut waiting = WaitingQueue::new();
-    let mut decoding: Vec<Request> = Vec::new();
-    let mut clock = 0.0f64;
-    let mut next = 0usize;
-    let items = &workload.items;
-    let (mut reused_gpu, mut reused_dram, mut reused_ssd) = (0u64, 0u64, 0u64);
-
-    // Look-ahead LRU protection horizon in tree-clock ticks: roughly
-    // the touches one request generates times the window depth.
-    let boost_horizon = (cfg.lookahead_window.max(1)
-        * (workload.mean_input_tokens as usize / cfg.chunk_tokens + 2)
-        * 4) as u64;
-
-    loop {
-        // 1. ingest arrivals whose retrieval has finished by `clock`
-        while next < items.len()
-            && items[next].arrival + items[next].retrieval_seconds <= clock
-        {
-            let it = &items[next];
-            metrics.retrieval_time.push(it.retrieval_seconds);
-            waiting.push(Request::new(
-                next as u64,
-                it.input_id,
-                Arc::clone(&it.tokens),
-                Arc::clone(&it.chain),
-                cfg.output_tokens,
-                it.arrival,
-                it.arrival + it.retrieval_seconds,
-            ));
-            next += 1;
+impl EngineCore {
+    /// Build one engine for `cfg` × `spec`. `mean_input_tokens` comes
+    /// from the workload — it sizes the look-ahead boost horizon.
+    pub fn new(cfg: &ExperimentConfig, spec: &SystemSpec, mean_input_tokens: f64) -> EngineCore {
+        let model = model_spec(&cfg.model).expect("validated model");
+        let platform = platform_spec(&cfg.platform).expect("validated platform");
+        let mut cache = CacheEngine::new(cache_config(cfg, spec, &model, &platform));
+        // Victim selection path: incremental index (default) or the
+        // fused O(n) scan (`cache.indexed_eviction = false` — the A/B
+        // knob the eviction-pressure bench and replay-parity test flip).
+        cache.use_indexed_eviction = cfg.indexed_eviction;
+        let fabric = TransferFabric::new(&platform);
+        // Dual-lane virtual-time view of the SSD read resource: demand
+        // reads preempt queued prefetch work for async-I/O systems; for
+        // synchronous systems both classes share the prefetch-lane
+        // FIFO, reproducing the single shared channel they model.
+        let lanes = VirtualLanes::from_channel(&fabric.ssd_read);
+        let exec = SimExecutor::new(&model, &platform, cfg.chunk_tokens);
+        let strategy = prefetch::registry::parse(&spec.prefetch_strategy).unwrap_or_else(|| {
+            panic!(
+                "unknown prefetch strategy '{}' (registered: {})",
+                spec.prefetch_strategy,
+                prefetch::registry::names_joined()
+            )
+        });
+        let chunk_bytes = model.kv_bytes_per_token() * cfg.chunk_tokens as u64;
+        // Look-ahead LRU protection horizon in tree-clock ticks:
+        // roughly the touches one request generates times window depth.
+        let boost_horizon = (cfg.lookahead_window.max(1)
+            * (mean_input_tokens as usize / cfg.chunk_tokens + 2)
+            * 4) as u64;
+        EngineCore {
+            spec: spec.clone(),
+            cache,
+            fabric,
+            lanes,
+            exec,
+            prefetcher: SimPrefetcher::new(),
+            strategy,
+            metrics: MetricsCollector::new(),
+            breakdown: RunBreakdown::default(),
+            waiting: WaitingQueue::new(),
+            decoding: Vec::new(),
+            clock: 0.0,
+            directory_stale: 0,
+            chunk_bytes,
+            boost_horizon,
+            lookahead_window: cfg.lookahead_window,
+            io_prefetch_depth: cfg.io_prefetch_depth,
+            reused_gpu: 0,
+            reused_dram: 0,
+            reused_ssd: 0,
         }
-        if waiting.is_empty() && decoding.is_empty() {
-            if next < items.len() {
-                clock = items[next].arrival + items[next].retrieval_seconds;
-                continue;
-            }
-            break;
-        }
+    }
 
-        // 2. Algorithm 1 prefetch-hint loop over the look-ahead window,
+    /// Admit a request whose retrieval has completed.
+    pub fn enqueue(&mut self, req: Request) {
+        self.waiting.push(req);
+    }
+
+    /// True when nothing is queued or decoding — the engine can only
+    /// advance by having its clock jumped to the next admission.
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.decoding.is_empty()
+    }
+
+    /// Requests mid-decode.
+    pub fn decoding_len(&self) -> usize {
+        self.decoding.len()
+    }
+
+    /// Open requests (queued + decoding) — the router's load signal.
+    pub fn load(&self) -> usize {
+        self.waiting.len() + self.decoding.len()
+    }
+
+    /// One engine pass: look-ahead hints + prefetch submission, then
+    /// either the head request's prefill (with fused decode progress
+    /// and write-back) or a pure decode round. Advances [`clock`]
+    /// (EngineCore::clock). Call only when not [`is_idle`]
+    /// (EngineCore::is_idle) — an idle step would spin a zero-length
+    /// decode round.
+    pub fn step(&mut self) {
+        let clock = self.clock;
+
+        // 1. Algorithm 1 prefetch-hint loop over the look-ahead window,
         // in reverse order (soonest-served request gets the freshest
         // protection and its loads are queued... see queue.rs).
-        if spec.lookahead_lru {
-            let chains = waiting
-                .window(cfg.lookahead_window)
+        if self.spec.lookahead_lru {
+            let chains = self
+                .waiting
+                .window(self.lookahead_window)
                 .map(|r| r.chain.as_ref())
                 .collect::<Vec<_>>();
-            apply_lookahead(&mut cache, chains.into_iter().rev(), boost_horizon);
+            apply_lookahead(&mut self.cache, chains.into_iter().rev(), self.boost_horizon);
         }
-        if spec.prefetch_window > 0 && spec.ssd_tier {
+        if self.spec.prefetch_window > 0 && self.spec.ssd_tier {
             let targets = {
-                let window: Vec<&crate::cache::chunk::ChunkedSeq> = waiting
-                    .window(spec.prefetch_window)
+                let window: Vec<&crate::cache::chunk::ChunkedSeq> = self
+                    .waiting
+                    .window(self.spec.prefetch_window)
                     .map(|r| r.chain.as_ref())
                     .collect();
-                strategy.select_targets(&window, &cache)
+                self.strategy.select_targets(&window, &self.cache)
             };
-            prefetcher.submit_targets(
-                &cache,
-                &mut lanes,
+            self.prefetcher.submit_targets(
+                &self.cache,
+                &mut self.lanes,
                 clock,
                 &targets,
-                cfg.io_prefetch_depth,
+                self.io_prefetch_depth,
             );
         }
         // drop queued loads whose target was evicted or promoted since
         // submission (the engine's cancellation tokens, in virtual time)
-        prefetcher.cancel_stale(&cache, &mut lanes, clock);
-        prefetcher.drain(&mut cache, &mut lanes, clock);
+        self.prefetcher.cancel_stale(&self.cache, &mut self.lanes, clock);
+        self.prefetcher.drain(&mut self.cache, &mut self.lanes, clock);
 
-        // 3. serve the head request's prefill (one pass), or a decode
+        // 2. serve the head request's prefill (one pass), or a decode
         // round if nothing is waiting.
-        if let Some(mut req) = waiting.pop() {
+        if let Some(mut req) = self.waiting.pop() {
             req.started_at = Some(clock);
-            let plan = plan_movement(&mut cache, &req.chain);
+            let plan = plan_movement(&mut self.cache, &req.chain);
+            if let Some(predicted) = req.routed_matched {
+                // the cluster directory promised `predicted` matched
+                // chunks when this request was placed; anything shorter
+                // means residency changed in between
+                if plan.matched.len() < predicted {
+                    self.directory_stale += 1;
+                }
+            }
 
             // demand SSD loads: in-flight prefetches are claimed (an
             // async system upgrades queued ones to demand priority —
@@ -199,24 +268,24 @@ pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> Ru
             // backlog delays them — the contention PCR removes.
             let mut ssd_ready = clock;
             for id in &plan.ssd_nodes {
-                let t = if spec.async_io {
-                    match prefetcher.upgrade(&cache, &mut lanes, clock, *id) {
+                let t = if self.spec.async_io {
+                    match self.prefetcher.upgrade(&self.cache, &mut self.lanes, clock, *id) {
                         Some(t) => t,
                         None => {
-                            let bytes = cache.tree.node(*id).bytes;
-                            let (_, f) = lanes.enqueue(Lane::Demand, clock, bytes);
-                            lanes.stats.demand.completed += 1;
+                            let bytes = self.cache.tree.node(*id).bytes;
+                            let (_, f) = self.lanes.enqueue(Lane::Demand, clock, bytes);
+                            self.lanes.stats.demand.completed += 1;
                             f
                         }
                     }
                 } else {
-                    match prefetcher.ready_at(*id) {
+                    match self.prefetcher.ready_at(*id) {
                         Some(t) => t,
                         None => {
-                            let bytes = cache.tree.node(*id).bytes;
+                            let bytes = self.cache.tree.node(*id).bytes;
                             // shared-FIFO timing, booked as demand work
-                            let (s, f) = lanes.reserve(Lane::Prefetch, clock, bytes);
-                            let st = &mut lanes.stats.demand;
+                            let (s, f) = self.lanes.reserve(Lane::Prefetch, clock, bytes);
+                            let st = &mut self.lanes.stats.demand;
                             st.submitted += 1;
                             st.completed += 1;
                             st.bytes_moved += bytes;
@@ -229,39 +298,41 @@ pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> Ru
                 ssd_ready = ssd_ready.max(t);
             }
 
-            let step = exec.prefill_step(clock, ssd_ready, &plan, spec, &mut fabric);
+            let step =
+                self.exec
+                    .prefill_step(clock, ssd_ready, &plan, &self.spec, &mut self.fabric);
             let dur = step.total();
-            breakdown.ssd_wait += step.ssd_wait;
-            breakdown.pipeline += step.pipeline;
-            breakdown.compute += step.compute;
-            breakdown.upload += step.upload;
-            breakdown.offload += step.offload;
+            self.breakdown.ssd_wait += step.ssd_wait;
+            self.breakdown.pipeline += step.pipeline;
+            self.breakdown.compute += step.compute;
+            self.breakdown.upload += step.upload;
+            self.breakdown.offload += step.offload;
 
             // fused decode progress for running requests (chunked-
             // prefill interleaving): each decoding request advances
             // ~dur/decode_round tokens during this pass
             advance_decodes(
-                &mut decoding,
-                &exec,
+                &mut self.decoding,
+                &self.exec,
                 dur,
                 clock,
-                &mut metrics,
-                &mut breakdown,
+                &mut self.metrics,
+                &mut self.breakdown,
             );
 
-            clock += dur;
-            req.first_token_at = Some(clock);
+            self.clock += dur;
+            req.first_token_at = Some(self.clock);
             req.generated = 1;
             req.reused_tokens = plan.reused_tokens;
             req.computed_tokens = plan.computed_tokens;
             req.reused_from_gpu = plan.from_gpu;
             req.reused_from_dram = plan.from_dram;
             req.reused_from_ssd = plan.from_ssd;
-            reused_gpu += plan.from_gpu as u64;
-            reused_dram += plan.from_dram as u64;
-            reused_ssd += plan.from_ssd as u64;
+            self.reused_gpu += plan.from_gpu as u64;
+            self.reused_dram += plan.from_dram as u64;
+            self.reused_ssd += plan.from_ssd as u64;
 
-            // 4. write-back: matched chunks promote to GPU; computed
+            // 3. write-back: matched chunks promote to GPU; computed
             // chunks are inserted GPU + DRAM (+ SSD metadata, async
             // write on the ssd_write channel)
             let mut pinned_new = Vec::new();
@@ -269,82 +340,124 @@ pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> Ru
             for (i, key) in req.chain.keys.iter().enumerate() {
                 if i < plan.matched.len() {
                     let id = plan.matched[i];
-                    cache.promote(id, Tier::Gpu); // best effort
+                    self.cache.promote(id, Tier::Gpu); // best effort
                     parent = Some(id);
                     continue;
                 }
                 // newly computed chunk
-                let mut id = cache.insert(parent, *key, chunk_bytes, Tier::Gpu);
-                if spec.dram_tier {
-                    let dram_id = cache.insert(parent, *key, chunk_bytes, Tier::Dram);
+                let mut id = self.cache.insert(parent, *key, self.chunk_bytes, Tier::Gpu);
+                if self.spec.dram_tier {
+                    let dram_id = self.cache.insert(parent, *key, self.chunk_bytes, Tier::Dram);
                     id = id.or(dram_id);
                 }
-                if spec.ssd_tier {
-                    let ssd_id = cache.insert(parent, *key, chunk_bytes, Tier::Ssd);
+                if self.spec.ssd_tier {
+                    let ssd_id = self.cache.insert(parent, *key, self.chunk_bytes, Tier::Ssd);
                     if ssd_id.is_some() {
                         // async write-back; never blocks the next step
-                        fabric.ssd_write.enqueue(clock, chunk_bytes);
+                        self.fabric.ssd_write.enqueue(self.clock, self.chunk_bytes);
                     }
                     id = id.or(ssd_id);
                 }
                 match id {
                     Some(id) => {
-                        cache.tree.pin(id);
+                        self.cache.tree.pin(id);
                         pinned_new.push(id);
                         parent = Some(id);
                     }
                     None => break, // no tier could hold it: stop chaining
                 }
             }
-            unpin_plan(&mut cache, &plan);
+            unpin_plan(&mut self.cache, &plan);
             for id in pinned_new {
-                cache.tree.unpin(id);
+                self.cache.tree.unpin(id);
             }
 
             if req.generated >= req.output_tokens {
                 req.state = RequestState::Finished;
-                req.finished_at = Some(clock);
-                metrics.record(&req);
+                req.finished_at = Some(self.clock);
+                self.metrics.record(&req);
             } else {
                 req.state = RequestState::Decoding;
-                decoding.push(req);
+                self.decoding.push(req);
             }
         } else {
             // pure decode round: whole batch advances one token
-            let ctx = decoding
+            let ctx = self
+                .decoding
                 .iter()
                 .map(|r| (r.total_tokens() + r.generated) as u64)
                 .max()
                 .unwrap_or(0);
-            let dt = exec.decode_round(ctx);
-            clock += dt;
-            breakdown.decode += dt;
-            for r in decoding.iter_mut() {
+            let dt = self.exec.decode_round(ctx);
+            self.clock += dt;
+            self.breakdown.decode += dt;
+            for r in self.decoding.iter_mut() {
                 r.generated += 1;
                 r.itl.push(dt);
             }
-            retire_finished(&mut decoding, clock, &mut metrics);
+            retire_finished(&mut self.decoding, self.clock, &mut self.metrics);
         }
     }
 
-    let finished = metrics.finished;
-    debug_assert_eq!(finished, items.len(), "all requests must finish");
-    metrics.io = lanes.stats;
-    RunOutcome {
-        system: spec.name,
-        report: metrics.report(),
-        cache: cache.stats,
-        breakdown,
-        virtual_duration: clock,
-        prefetch_submitted: prefetcher.submitted,
-        prefetch_completed: prefetcher.completed,
-        prefetch_dropped: prefetcher.dropped,
-        prefetch_cancelled: prefetcher.cancelled,
-        io: lanes.stats,
-        reused_gpu_chunks: reused_gpu,
-        reused_dram_chunks: reused_dram,
-        reused_ssd_chunks: reused_ssd,
+    /// Finalize: fold the lane counters into the metrics and build the
+    /// outcome struct every bench consumes.
+    pub fn into_outcome(mut self) -> RunOutcome {
+        self.metrics.io = self.lanes.stats;
+        RunOutcome {
+            system: self.spec.name,
+            report: self.metrics.report(),
+            cache: self.cache.stats,
+            breakdown: self.breakdown,
+            virtual_duration: self.clock,
+            prefetch_submitted: self.prefetcher.submitted,
+            prefetch_completed: self.prefetcher.completed,
+            prefetch_dropped: self.prefetcher.dropped,
+            prefetch_cancelled: self.prefetcher.cancelled,
+            io: self.lanes.stats,
+            reused_gpu_chunks: self.reused_gpu,
+            reused_dram_chunks: self.reused_dram,
+            reused_ssd_chunks: self.reused_ssd,
+        }
     }
+}
+
+/// Run one full serving experiment in virtual time: ingest arrivals as
+/// their retrieval completes, jump the clock across idle gaps, and
+/// [`step`](EngineCore::step) the engine until every request finishes.
+pub fn run(cfg: &ExperimentConfig, spec: &SystemSpec, workload: &Workload) -> RunOutcome {
+    let mut core = EngineCore::new(cfg, spec, workload.mean_input_tokens);
+    let items = &workload.items;
+    let mut next = 0usize;
+
+    loop {
+        // ingest arrivals whose retrieval has finished by the clock
+        while next < items.len()
+            && items[next].arrival + items[next].retrieval_seconds <= core.clock
+        {
+            let it = &items[next];
+            core.enqueue(Request::new(
+                next as u64,
+                it.input_id,
+                Arc::clone(&it.tokens),
+                Arc::clone(&it.chain),
+                cfg.output_tokens,
+                it.arrival,
+                it.arrival + it.retrieval_seconds,
+            ));
+            next += 1;
+        }
+        if core.is_idle() {
+            if next < items.len() {
+                core.clock = items[next].arrival + items[next].retrieval_seconds;
+                continue;
+            }
+            break;
+        }
+        core.step();
+    }
+
+    debug_assert_eq!(core.metrics.finished, items.len(), "all requests must finish");
+    core.into_outcome()
 }
 
 /// During a prefill pass of length `dur`, decoding requests advance

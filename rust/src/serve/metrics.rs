@@ -44,10 +44,28 @@ impl MetricsCollector {
         for &gap in &r.itl {
             self.itl.push(gap);
         }
+        // a request is queued the moment retrieval delivers its
+        // documents, so queued-at − arrival IS the retrieval stage
+        self.retrieval_time.push(r.queued_at - r.arrival);
         let total = r.total_tokens().max(1);
         self.reuse_ratio
             .push(r.reused_tokens as f64 / total as f64);
         self.finished += 1;
+    }
+
+    /// Merge another collector's samples and counters into this one —
+    /// the cluster aggregation path (per-replica collectors fold into
+    /// one fleet-wide report).
+    pub fn absorb(&mut self, other: &MetricsCollector) {
+        self.ttft.extend_from(&other.ttft);
+        self.e2el.extend_from(&other.e2el);
+        self.itl.extend_from(&other.itl);
+        self.queue_time.extend_from(&other.queue_time);
+        self.compute_time.extend_from(&other.compute_time);
+        self.retrieval_time.extend_from(&other.retrieval_time);
+        self.reuse_ratio.extend_from(&other.reuse_ratio);
+        self.finished += other.finished;
+        self.io.absorb(&other.io);
     }
 
     pub fn report(&mut self) -> Report {
@@ -58,6 +76,7 @@ impl MetricsCollector {
             itl: self.itl.summary(),
             queue_time: self.queue_time.summary(),
             compute_time: self.compute_time.summary(),
+            retrieval: self.retrieval_time.summary(),
             mean_reuse_ratio: self.reuse_ratio.mean(),
             io: self.io,
         }
@@ -73,6 +92,8 @@ pub struct Report {
     pub itl: Summary,
     pub queue_time: Summary,
     pub compute_time: Summary,
+    /// Retrieval-stage latency (arrival → documents ready).
+    pub retrieval: Summary,
     pub mean_reuse_ratio: f64,
     /// Dual-lane transfer counters (demand vs prefetch, upgrades).
     pub io: IoStats,
@@ -82,7 +103,7 @@ impl Report {
     /// Multi-line human-readable block (seconds).
     pub fn pretty(&self) -> String {
         let mut s = format!(
-            "finished={} reuse={:.1}%\n  TTFT  {}\n  E2EL  {}\n  ITL   {}\n  queue {}\n  comp  {}",
+            "finished={} reuse={:.1}%\n  TTFT  {}\n  E2EL  {}\n  ITL   {}\n  queue {}\n  comp  {}\n  retr  {}",
             self.finished,
             self.mean_reuse_ratio * 100.0,
             self.ttft.row(1.0),
@@ -90,6 +111,7 @@ impl Report {
             self.itl.row(1.0),
             self.queue_time.row(1.0),
             self.compute_time.row(1.0),
+            self.retrieval.row(1.0),
         );
         if self.io.demand.submitted + self.io.prefetch.submitted > 0 {
             s.push_str("\n  ");
@@ -131,6 +153,44 @@ mod tests {
         assert_eq!(rep.itl.n, 30);
         assert!((rep.mean_reuse_ratio - 0.5).abs() < 1e-9);
         assert!(rep.pretty().contains("TTFT"));
+        assert!(rep.pretty().contains("retr"));
+    }
+
+    #[test]
+    fn record_populates_retrieval_time() {
+        // regression: `record` used to drop the retrieval stage on the
+        // floor, leaving `retrieval_time` permanently empty
+        let mut m = MetricsCollector::new();
+        for i in 0..10 {
+            m.record(&finished_request(i as f64, 1.0, 2.0));
+        }
+        assert_eq!(m.retrieval_time.len(), 10);
+        let rep = m.report();
+        assert_eq!(rep.retrieval.n, 10);
+        // finished_request queues each request 10 ms after arrival
+        assert!((rep.retrieval.mean - 0.01).abs() < 1e-9);
+        assert!((rep.retrieval.max - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absorb_merges_collectors() {
+        let mut a = MetricsCollector::new();
+        let mut b = MetricsCollector::new();
+        for i in 0..4 {
+            a.record(&finished_request(i as f64, 1.0, 2.0));
+            b.record(&finished_request(i as f64, 2.0, 3.0));
+        }
+        a.io.upgraded = 3;
+        b.io.upgraded = 4;
+        b.io.demand.submitted = 7;
+        a.absorb(&b);
+        let rep = a.report();
+        assert_eq!(rep.finished, 8);
+        assert_eq!(rep.ttft.n, 8);
+        assert!((rep.ttft.mean - 1.5).abs() < 1e-9);
+        assert_eq!(rep.retrieval.n, 8);
+        assert_eq!(rep.io.upgraded, 7);
+        assert_eq!(rep.io.demand.submitted, 7);
     }
 
     #[test]

@@ -46,6 +46,12 @@ pub struct Request {
     /// Decode progress.
     pub generated: usize,
 
+    /// Matched-prefix length (chunks) the cluster router's directory
+    /// predicted for the replica this request was placed on. `None` on
+    /// the single-engine path. Prefill compares it against the actual
+    /// local match to count directory staleness.
+    pub routed_matched: Option<usize>,
+
     // --- reuse accounting (filled at prefill) ---
     pub reused_tokens: usize,
     pub computed_tokens: usize,
@@ -78,6 +84,7 @@ impl Request {
             finished_at: None,
             itl: Vec::new(),
             generated: 0,
+            routed_matched: None,
             reused_tokens: 0,
             computed_tokens: 0,
             reused_from_gpu: 0,

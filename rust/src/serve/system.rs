@@ -23,6 +23,7 @@
 
 use crate::config::ExperimentConfig;
 use crate::sim::pipeline::OverlapMode;
+use anyhow::{anyhow, Result};
 
 /// Behaviour switches of one serving system.
 #[derive(Clone, Debug)]
@@ -50,6 +51,14 @@ pub struct SystemSpec {
 }
 
 impl SystemSpec {
+    /// Registered system-variant names, in paper order.
+    pub const NAMES: [&'static str; 5] = ["vllm", "ccache", "sccache", "lmcache", "pcr"];
+
+    /// `", "`-joined [`NAMES`](Self::NAMES) for error messages.
+    pub fn names_joined() -> String {
+        Self::NAMES.join(", ")
+    }
+
     /// The paper's five evaluated systems.
     pub fn named(name: &str, prefetch_window: usize) -> Option<SystemSpec> {
         let spec = match name {
@@ -134,12 +143,26 @@ impl SystemSpec {
         self
     }
 
+    /// [`named`](Self::named) as a proper error: unknown names list
+    /// the registered systems, `Config::validate` style, instead of
+    /// leaving every caller to panic on `None`.
+    pub fn try_named(name: &str, prefetch_window: usize) -> Result<SystemSpec> {
+        Self::named(name, prefetch_window).ok_or_else(|| {
+            anyhow!(
+                "unknown system '{}' (registered: {})",
+                name,
+                Self::names_joined()
+            )
+        })
+    }
+
     /// The spec for `cfg.system` with `cfg`'s policy / prefetch
     /// strategy / window applied — the one-knob path from a validated
-    /// config to any policy×strategy combination.
-    pub fn from_config(cfg: &ExperimentConfig) -> Option<SystemSpec> {
-        Self::named(&cfg.system, cfg.prefetch_window)
-            .map(|s| s.with_overrides(&cfg.policy, &cfg.prefetch_strategy))
+    /// config to any policy×strategy combination. Errors (rather than
+    /// panicking downstream) on an unregistered system name.
+    pub fn from_config(cfg: &ExperimentConfig) -> Result<SystemSpec> {
+        Ok(Self::try_named(&cfg.system, cfg.prefetch_window)?
+            .with_overrides(&cfg.policy, &cfg.prefetch_strategy))
     }
 
     /// Table 1 ablation arms (cumulative).
@@ -175,7 +198,7 @@ impl SystemSpec {
     }
 
     pub fn all_baselines(prefetch_window: usize) -> Vec<SystemSpec> {
-        ["vllm", "ccache", "sccache", "lmcache", "pcr"]
+        Self::NAMES
             .iter()
             .map(|n| Self::named(n, prefetch_window).unwrap())
             .collect()
@@ -223,6 +246,20 @@ mod tests {
     #[test]
     fn all_baselines_count() {
         assert_eq!(SystemSpec::all_baselines(4).len(), 5);
+    }
+
+    #[test]
+    fn try_named_errors_list_registered_names() {
+        assert!(SystemSpec::try_named("pcr", 4).is_ok());
+        let err = SystemSpec::try_named("orca", 4).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("orca"), "{msg}");
+        for name in SystemSpec::NAMES {
+            assert!(msg.contains(name), "missing {name} in: {msg}");
+        }
+        let mut cfg = ExperimentConfig::default();
+        cfg.system = "orca".into();
+        assert!(SystemSpec::from_config(&cfg).is_err());
     }
 
     #[test]
