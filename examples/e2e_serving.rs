@@ -48,8 +48,12 @@ fn main() -> anyhow::Result<()> {
         256,
         Some(&spill),
         "lookahead-lru",
-        IoConfig { workers: 2, demand_depth: 64, prefetch_depth: 256 },
+        IoConfig { workers: 2, demand_depth: 64, prefetch_depth: 256, ..IoConfig::default() },
     )?;
+    // Deployment mode: keep spill files on shutdown so a restarted
+    // process reconciles (checksum-verifies and adopts) them instead of
+    // re-spilling from cold.
+    exec.set_spill_persist(true);
     println!("PJRT CPU client up, weights resident ({:.1}s)\n", t0.elapsed().as_secs_f64());
 
     // RAG frontend sized to the model's real context (P+N = 1024).
@@ -161,6 +165,22 @@ fn main() -> anyhow::Result<()> {
         "no read may fail against the live spill directory"
     );
 
+    // --- store integrity: the spill tier's absorbed-error counters,
+    // surfaced through the shared degradation metrics ---
+    let store = exec.store_stats().expect("SSD tier is active");
+    let mut metrics = pcr::serve::metrics::MetricsCollector::new();
+    metrics.record_store_errors(store.total());
+    println!(
+        "\nspill-store integrity: fsync_errors={} delete_errors={} \
+         checksum_failures={} lost_files={} (degrade.store_errors={})",
+        store.fsync_errors(),
+        store.delete_errors(),
+        store.checksum_failures(),
+        store.lost_files(),
+        metrics.report().degrade.store_errors,
+    );
+    anyhow::ensure!(store.total() == 0, "healthy run must absorb zero store errors");
+
     // --- upgrade demo: stage prefetches with the engine paused, then
     // serve that input — the demand submits claim the queued tickets,
     // so each chunk is read once, at demand priority ---
@@ -205,6 +225,23 @@ fn main() -> anyhow::Result<()> {
         popular.tokens.len(),
         cold.prefill_seconds
     );
+    // --- persist mode: spill files survive shutdown, and a restarted
+    // store checksum-verifies and adopts them (restart reconcile) ---
+    drop(exec);
+    let reconciled = pcr::cache::store::FileStore::new(&spill)?;
+    println!(
+        "\npersist mode: {} spill chunks ({} bytes) survived shutdown and \
+         reconciled clean ({} checksum sweeps)",
+        reconciled.keys().len(),
+        reconciled.bytes_used(),
+        reconciled.stats().checksum_failures(),
+    );
+    anyhow::ensure!(
+        !reconciled.keys().is_empty(),
+        "persist mode must keep spill files across Drop"
+    );
+    drop(reconciled); // this handle defaults persist off: sweeps the dir
+
     println!("\ne2e OK — record this run in EXPERIMENTS.md");
     Ok(())
 }

@@ -11,9 +11,15 @@
 //! cluster router sweep (§Perf iteration 4 — routing policy ×
 //! replica count, emitted as `BENCH_cluster_routing.json`).
 //!
+//! Plus the §Robustness fault-injection sweep (fault rate × TTFT ×
+//! degradation counters, and the checksum overhead of the integrity
+//! trailer on the fault-free path — emitted as
+//! `BENCH_fault_injection.json`).
+//!
 //! Args (after `cargo bench --bench perf_hotpath --`):
 //!   --eviction-pressure   run only the eviction-pressure section
 //!   --cluster-routing     run only the cluster router sweep
+//!   --fault-sweep         run only the fault-injection sweep
 //!   --smoke               small trees + short timing (CI smoke mode)
 
 use pcr::bench::{black_box, section, Bench};
@@ -212,6 +218,173 @@ fn cluster_routing(smoke: bool) {
     println!("  -> wrote {path}");
 }
 
+/// §Robustness: the fault-injection sweep. Two probes:
+///
+/// 1. Virtual-time serving under increasing fault rates (transient +
+///    loss + corruption + spikes all at rate r): every request must
+///    still finish, and the degradation counters must reconcile with
+///    the injection session's own counts — the bench-level replay of
+///    the chaos proptest's invariant, with TTFT/reuse trajectories.
+/// 2. The integrity-trailer cost on the *fault-free* real path: wall
+///    time of a checksum-verified `FileStore::get` vs the fxhash pass
+///    alone. The acceptance gate is overhead < 3% of the demand read.
+///
+/// Emits `BENCH_fault_injection.json` (CI uploads it as an artifact).
+fn fault_sweep(smoke: bool) {
+    use pcr::config::ExperimentConfig;
+    use pcr::serve::system::SystemSpec;
+    use pcr::serve::workload::Workload;
+    use pcr::util::fmt_secs;
+
+    section("robustness: fault-injection sweep — TTFT/degradation vs fault rate");
+    let (n_inputs, n_requests) = if smoke { (40, 120) } else { (150, 600) };
+    let base = ExperimentConfig {
+        model: "llama2-7b".into(),
+        platform: "a6000".into(),
+        system: "pcr".into(),
+        n_inputs,
+        n_requests,
+        oversample: true,
+        rate: 0.8,
+        n_docs: 150,
+        n_topics: 12,
+        mean_doc_tokens: 600,
+        query_tokens: 48,
+        chunk_tokens: 256,
+        gpu_bytes: 2 * (1 << 30),
+        dram_bytes: 6 * (1 << 30),
+        ssd_bytes: 40 * (1 << 30),
+        ..Default::default()
+    };
+    base.validate().expect("bench config");
+    let wl = Workload::build(&base);
+    let spec = SystemSpec::try_named("pcr", base.prefetch_window).expect("registered system");
+    println!(
+        "  {} requests over {} inputs, repetition {:.1}%",
+        wl.len(),
+        wl.n_distinct_inputs,
+        wl.repetition_ratio * 100.0
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut clean_ttft = 0.0;
+    for &rate in &[0.0f64, 0.01, 0.05, 0.10] {
+        let mut cfg = base.clone();
+        cfg.fault_transient = rate;
+        cfg.fault_loss = rate;
+        cfg.fault_corrupt = rate;
+        cfg.fault_spike = rate;
+        let out = pcr::serve::engine::run(&cfg, &spec, &wl);
+        assert_eq!(
+            out.report.finished, n_requests,
+            "a fault plan must never fail a request"
+        );
+        let d = out.report.degrade;
+        let i = out.injected;
+        assert_eq!(d.degraded_loads, i.degrading(), "degradation accounting diverged");
+        assert_eq!(d.retries, i.retries, "retry accounting diverged");
+        if rate == 0.0 {
+            clean_ttft = out.report.ttft.mean;
+            assert!(!d.any(), "fault-free run must degrade nothing");
+        }
+        let ttft_vs_clean = 100.0 * (out.report.ttft.mean / clean_ttft - 1.0);
+        println!(
+            "  rate {:>4.0}%: ttft {} ({:>+5.1}% vs clean)  reuse {:>5.1}%  \
+             degraded {:>3} retries {:>3} spikes {:>3}",
+            rate * 100.0,
+            fmt_secs(out.report.ttft.mean),
+            ttft_vs_clean,
+            out.report.mean_reuse_ratio * 100.0,
+            d.degraded_loads,
+            d.retries,
+            i.spikes
+        );
+        rows.push(Json::from_pairs(vec![
+            ("fault_rate", rate.into()),
+            ("finished", out.report.finished.into()),
+            ("ttft_mean_s", out.report.ttft.mean.into()),
+            ("ttft_p99_s", out.report.ttft.p99.into()),
+            ("ttft_vs_clean_pct", ttft_vs_clean.into()),
+            ("reuse_ratio", out.report.mean_reuse_ratio.into()),
+            ("degraded_loads", d.degraded_loads.into()),
+            ("quarantined_chunks", d.quarantined_chunks.into()),
+            ("retries", d.retries.into()),
+            ("injected_lost", i.lost.into()),
+            ("injected_corrupted", i.corrupted.into()),
+            ("injected_exhausted", i.exhausted.into()),
+            ("injected_spikes", i.spikes.into()),
+        ]));
+    }
+
+    section("robustness: integrity-trailer overhead on the fault-free demand path");
+    let (read_ns, checksum_ns, overhead_pct) = {
+        use pcr::cache::store::{chunk_checksum, ChunkStore, FileStore};
+        let dir = std::env::temp_dir().join(format!("pcr-bench-fault-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut store = FileStore::new(&dir).expect("temp spill dir");
+        let chunk_bytes = 256 * 1024usize;
+        let blob = vec![0x5Au8; chunk_bytes];
+        let keys: Vec<ChunkKey> =
+            (0..64).map(|i| chain_hash(ChunkKey::ROOT, &[9, i as u32])).collect();
+        for k in &keys {
+            store.put(*k, &blob).expect("seed spill chunk");
+        }
+        let min_time = if smoke { 0.3 } else { 1.0 };
+        let mut i = 0;
+        let read = Bench::new("FileStore::get 256 KiB (checksum verified)")
+            .min_time(min_time)
+            .run(|| {
+                let k = keys[i % keys.len()];
+                i += 1;
+                black_box(store.get(k).unwrap().expect("seeded chunk").len())
+            });
+        println!("{}", read.line());
+        let sum = Bench::new("chunk_checksum 256 KiB (the added work)")
+            .min_time(min_time)
+            .run(|| black_box(chunk_checksum(&blob)));
+        println!("{}", sum.line());
+        assert_eq!(store.stats().total(), 0, "probe must not trip error counters");
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+        // the verified get = unchecked read + one fxhash pass, so the
+        // checksum's share of the demand read is hash / (get - hash)
+        let pct = 100.0 * sum.mean_ns / (read.mean_ns - sum.mean_ns).max(1.0);
+        println!("  -> checksum overhead: {pct:.2}% of the demand read (gate: < 3%)");
+        if pct >= 3.0 {
+            println!("  !! overhead above the 3% acceptance gate");
+        }
+        (read.mean_ns, sum.mean_ns, pct)
+    };
+
+    let doc = Json::from_pairs(vec![
+        ("bench", "fault_injection".into()),
+        ("system", "pcr".into()),
+        ("smoke", smoke.into()),
+        (
+            "workload",
+            format!(
+                "{} requests over {} inputs, oversampled, rate 0.8 req/s; \
+                 transient+loss+corrupt+spike all at fault_rate",
+                n_requests, n_inputs
+            )
+            .into(),
+        ),
+        ("all_requests_finished", true.into()),
+        ("rows", rows.into()),
+        (
+            "checksum_overhead",
+            Json::from_pairs(vec![
+                ("read_with_checksum_ns", read_ns.into()),
+                ("checksum_ns", checksum_ns.into()),
+                ("overhead_pct", overhead_pct.into()),
+                ("gate_pct", 3.0.into()),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_fault_injection.json";
+    std::fs::write(path, doc.dump() + "\n").expect("write bench json");
+    println!("  -> wrote {path}");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
@@ -221,6 +394,10 @@ fn main() {
     }
     if args.iter().any(|a| a == "--cluster-routing") {
         cluster_routing(smoke);
+        return;
+    }
+    if args.iter().any(|a| a == "--fault-sweep") {
+        fault_sweep(smoke);
         return;
     }
 
@@ -360,7 +537,7 @@ fn main() {
         }
         let source = Arc::new(RwLock::new(store));
         let engine = TransferEngine::new(
-            IoConfig { workers: 4, demand_depth: 64, prefetch_depth: 512 },
+            IoConfig { workers: 4, demand_depth: 64, prefetch_depth: 512, ..IoConfig::default() },
             source.clone() as Arc<dyn FetchSource>,
         );
 
@@ -413,6 +590,7 @@ fn main() {
     }
 
     cluster_routing(smoke);
+    fault_sweep(smoke);
 }
 
 /// Helper: eviction benchmark needs per-iteration setup (each eviction

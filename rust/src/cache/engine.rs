@@ -407,6 +407,64 @@ impl CacheEngine {
             self.sweep_countdown = SWEEP_PERIOD;
         }
     }
+
+    /// Quarantine a chunk whose stored bytes turned out to be
+    /// unreadable (lost, corrupted, or retries exhausted): drop every
+    /// resident copy of `id` *and of its resident subtree*, so the
+    /// request re-plans onto the recompute path and the directory
+    /// learns the chunks are gone.
+    ///
+    /// The subtree goes too because (a) the leaf-only removal rule
+    /// forbids dropping a mid-chain node's last copy while descendants
+    /// are resident, and (b) descendants of an absent node are
+    /// unreachable for prefix reuse anyway (`match_chain` stops at the
+    /// first absent link) — keeping them would be dead weight that
+    /// only eviction pressure could reclaim. Pins are deliberately
+    /// ignored: callers unpin their movement plan first, and a chunk
+    /// that cannot be read must not stay resident no matter who
+    /// planned to use it.
+    ///
+    /// Returns the number of chunks dropped (≥ 1: `id` itself plus
+    /// resident-subtree collateral).
+    pub fn quarantine(&mut self, id: NodeId) -> u64 {
+        // Collect the subtree, then drop residency children-first so
+        // every removal observes the leaf-only rule.
+        let mut order = vec![id];
+        let mut i = 0;
+        while i < order.len() {
+            order.extend(self.tree.children_of(order[i]).iter().copied());
+            i += 1;
+        }
+        let mut dropped = 0u64;
+        let mut fully_gone = 0u32;
+        for &n in order.iter().rev() {
+            if self.tree.node(n).tiers.is_empty() {
+                continue;
+            }
+            let bytes = self.tree.node(n).bytes;
+            let key = self.tree.node(n).key;
+            for tier in [Tier::Gpu, Tier::Dram, Tier::Ssd] {
+                if !self.tree.node(n).tiers.contains(tier) {
+                    continue;
+                }
+                self.tree.remove_residency(n, tier);
+                self.usage[tier.idx()].sub(bytes);
+                self.stats.evicted_chunks[tier.idx()] += 1;
+            }
+            self.policy.on_evict(&mut self.tree, n);
+            dropped += 1;
+            fully_gone += 1;
+            if self.track_events {
+                self.events.push(CacheEvent::Gone(key));
+            }
+        }
+        // Sweep bookkeeping after all removals so an eager sweep can
+        // never erase a node the loop still has to visit.
+        for _ in 0..fully_gone {
+            self.maybe_sweep();
+        }
+        dropped
+    }
 }
 
 const SWEEP_PERIOD: u32 = 256;
@@ -506,6 +564,53 @@ mod tests {
         let a_alive = !e.tree.node(e.tree.get(a[0]).unwrap()).tiers.is_empty();
         assert!(a_alive);
         assert!(e.tree.get(b[0]).map(|id| e.tree.node(id).tiers.is_empty()).unwrap_or(true));
+    }
+
+    #[test]
+    fn quarantine_drops_node_and_resident_subtree() {
+        let mut e = CacheEngine::new(cfg(300, 1000, 1000));
+        e.track_events = true;
+        let c = chain_of(1, 4);
+        let ids = insert_chain(&mut e, &c, Tier::Ssd);
+        // the deepest node also holds a GPU copy: quarantining an
+        // ancestor must reclaim descendants' copies in *every* tier
+        assert!(e.promote(ids[3], Tier::Gpu));
+        e.take_events();
+        // quarantine the 2nd chunk: it and its resident subtree (3rd,
+        // 4th) go; the 1st survives
+        let dropped = e.quarantine(ids[1]);
+        assert_eq!(dropped, 3);
+        assert!(!e.tree.node(ids[0]).tiers.is_empty());
+        for id in &ids[1..] {
+            assert!(e.tree.node(*id).tiers.is_empty());
+        }
+        assert_eq!(e.used(Tier::Ssd), CHUNK_BYTES);
+        assert_eq!(e.used(Tier::Gpu), 0);
+        assert_eq!(e.stats.evicted_chunks[Tier::Ssd.idx()], 3);
+        assert_eq!(e.stats.evicted_chunks[Tier::Gpu.idx()], 1);
+        // the directory feed sees every fully-gone chunk
+        let gone: Vec<_> = e
+            .take_events()
+            .into_iter()
+            .filter(|ev| matches!(ev, CacheEvent::Gone(_)))
+            .collect();
+        assert_eq!(gone.len(), 3);
+        e.check_accounting().unwrap();
+        e.tree.check_invariants().unwrap();
+        // a re-match stops before the quarantined link
+        let l = e.lookup(&c);
+        assert_eq!(l.matched_chunks(), 1);
+    }
+
+    #[test]
+    fn quarantine_of_leaf_touches_nothing_else() {
+        let mut e = CacheEngine::new(cfg(0, 0, 1000));
+        let c = chain_of(2, 3);
+        let ids = insert_chain(&mut e, &c, Tier::Ssd);
+        assert_eq!(e.quarantine(ids[2]), 1);
+        assert_eq!(e.used(Tier::Ssd), 2 * CHUNK_BYTES);
+        assert!(!e.tree.node(ids[1]).tiers.is_empty());
+        e.check_accounting().unwrap();
     }
 
     #[test]

@@ -107,6 +107,11 @@ impl PrefixTree {
         &mut self.nodes[id.0 as usize]
     }
 
+    /// Direct children of `id` (any residency state).
+    pub fn children_of(&self, id: NodeId) -> &[NodeId] {
+        &self.children[id.0 as usize]
+    }
+
     pub fn get(&self, key: ChunkKey) -> Option<NodeId> {
         self.index.get(&key).copied()
     }

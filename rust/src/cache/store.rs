@@ -5,12 +5,81 @@
 //! * [`FileStore`] — SSD tier: one file per chunk under a spill
 //!   directory (the e2e example uses a real directory, giving real
 //!   read/write latency on the test machine's disk).
+//!
+//! # Integrity
+//!
+//! [`FileStore`] appends an 8-byte little-endian FxHash trailer to
+//! every `.kv` file on [`ChunkStore::put`] and verifies it on every
+//! [`ChunkStore::get`] and on restart reconcile. A mismatch means the
+//! bytes at rest were corrupted (bit rot, torn overwrite, hostile
+//! edit): the file is *quarantined* — removed from disk and counted in
+//! [`StoreStats::checksum_failures`] — and the read reports a miss so
+//! the caller falls back to the always-correct recompute path instead
+//! of decoding from garbage KV state. The trailer is excluded from
+//! `bytes_used` accounting, which tracks logical payload bytes only.
 
 use crate::cache::chunk::ChunkKey;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Byte length of the FxHash integrity trailer on each `.kv` file.
+pub const CHECKSUM_LEN: u64 = 8;
+
+/// FxHash64 of a chunk payload — the integrity trailer value.
+pub fn chunk_checksum(data: &[u8]) -> u64 {
+    use std::hash::Hasher;
+    let mut h = crate::util::fxhash::FxHasher::default();
+    h.write(data);
+    h.finish()
+}
+
+/// Thread-safe counters for failures stores used to swallow silently.
+///
+/// Cloning shares the underlying counters, so a snapshot handle can be
+/// taken before moving the store behind a lock.
+#[derive(Clone, Debug, Default)]
+pub struct StoreStats {
+    inner: Arc<StoreStatsInner>,
+}
+
+#[derive(Debug, Default)]
+struct StoreStatsInner {
+    fsync_errors: AtomicU64,
+    delete_errors: AtomicU64,
+    checksum_failures: AtomicU64,
+    lost_files: AtomicU64,
+}
+
+impl StoreStats {
+    /// `sync_all` failures on put (data may not survive power loss).
+    pub fn fsync_errors(&self) -> u64 {
+        self.inner.fsync_errors.load(Ordering::Relaxed)
+    }
+
+    /// `remove_file` failures on delete (other than already-absent).
+    pub fn delete_errors(&self) -> u64 {
+        self.inner.delete_errors.load(Ordering::Relaxed)
+    }
+
+    /// Integrity-trailer mismatches; each one quarantined a file.
+    pub fn checksum_failures(&self) -> u64 {
+        self.inner.checksum_failures.load(Ordering::Relaxed)
+    }
+
+    /// Indexed files that vanished from disk before a read.
+    pub fn lost_files(&self) -> u64 {
+        self.inner.lost_files.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all error counters (the `store_errors` metric).
+    pub fn total(&self) -> u64 {
+        self.fsync_errors() + self.delete_errors() + self.checksum_failures() + self.lost_files()
+    }
+}
 
 /// Uniform interface over chunk-byte storage backends.
 pub trait ChunkStore: Send {
@@ -67,24 +136,28 @@ impl ChunkStore for MemStore {
 #[derive(Debug)]
 pub struct FileStore {
     dir: PathBuf,
-    index: HashMap<ChunkKey, u64>, // key -> byte length
+    index: HashMap<ChunkKey, u64>, // key -> payload byte length (trailer excluded)
     bytes: u64,
+    persist: bool,
+    stats: StoreStats,
 }
 
 impl FileStore {
     /// Open (or create) a spill directory. Existing `*.kv` files from a
-    /// previous process are adopted into the index, so restarts see the
-    /// true SSD occupancy instead of undercounting `bytes_used` and
-    /// over-admitting spills; leftover `*.kv.tmp` files are torn writes
-    /// from a crash and are swept.
+    /// previous process are checksum-verified and adopted into the
+    /// index, so restarts see the true SSD occupancy instead of
+    /// undercounting `bytes_used` and over-admitting spills; leftover
+    /// `*.kv.tmp` files are torn writes from a crash and are swept, and
+    /// files whose integrity trailer does not match are quarantined
+    /// (removed, counted) rather than adopted.
     pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
         let dir = dir.into();
-        std::fs::create_dir_all(&dir)
-            .with_context(|| format!("creating spill dir {dir:?}"))?;
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating spill dir {dir:?}"))?;
+        let stats = StoreStats::default();
         let mut index = HashMap::new();
         let mut bytes = 0u64;
-        for entry in std::fs::read_dir(&dir)
-            .with_context(|| format!("scanning spill dir {dir:?}"))?
+        for entry in
+            std::fs::read_dir(&dir).with_context(|| format!("scanning spill dir {dir:?}"))?
         {
             let entry = entry?;
             let name = entry.file_name();
@@ -95,11 +168,34 @@ impl FileStore {
             }
             let Some(hex) = name.strip_suffix(".kv") else { continue };
             let Ok(key) = u64::from_str_radix(hex, 16) else { continue };
-            let len = entry.metadata()?.len();
-            index.insert(ChunkKey(key), len);
-            bytes += len;
+            let Ok(raw) = std::fs::read(entry.path()) else {
+                stats.inner.lost_files.fetch_add(1, Ordering::Relaxed);
+                continue;
+            };
+            match verify_trailer(&raw) {
+                Some(payload_len) => {
+                    index.insert(ChunkKey(key), payload_len as u64);
+                    bytes += payload_len as u64;
+                }
+                None => {
+                    // corrupted at rest: sweep, never adopt
+                    let _ = std::fs::remove_file(entry.path());
+                    stats.inner.checksum_failures.fetch_add(1, Ordering::Relaxed);
+                }
+            }
         }
-        Ok(FileStore { dir, index, bytes })
+        Ok(FileStore { dir, index, bytes, persist: false, stats })
+    }
+
+    /// Keep spill files on [`Drop`] so a later process can reconcile
+    /// them (real deployments); default is to sweep them (tests).
+    pub fn set_persist(&mut self, persist: bool) {
+        self.persist = persist;
+    }
+
+    /// Handle onto the store's error counters (shared, thread-safe).
+    pub fn stats(&self) -> StoreStats {
+        self.stats.clone()
     }
 
     fn path(&self, key: ChunkKey) -> PathBuf {
@@ -112,21 +208,34 @@ impl FileStore {
     }
 }
 
+/// Split a raw file image into payload + trailer and verify the
+/// checksum. Returns the payload length, or `None` if the image is
+/// truncated or the trailer mismatches.
+fn verify_trailer(raw: &[u8]) -> Option<usize> {
+    let n = raw.len().checked_sub(CHECKSUM_LEN as usize)?;
+    let want = u64::from_le_bytes(raw[n..].try_into().ok()?);
+    (chunk_checksum(&raw[..n]) == want).then_some(n)
+}
+
 impl ChunkStore for FileStore {
-    /// Crash-safe write: bytes go to a `.kv.tmp` sidecar first and are
-    /// renamed into place, so a torn write can never leave a truncated
-    /// chunk that a later `get` would return as valid KV bytes.
+    /// Crash-safe write: payload + integrity trailer go to a `.kv.tmp`
+    /// sidecar first and are renamed into place, so a torn write can
+    /// never leave a truncated chunk that a later `get` would return as
+    /// valid KV bytes.
     fn put(&mut self, key: ChunkKey, data: &[u8]) -> Result<()> {
         let path = self.path(key);
         let tmp = path.with_extension("kv.tmp");
         {
-            let mut f = std::fs::File::create(&tmp)
-                .with_context(|| format!("creating {tmp:?}"))?;
+            let mut f =
+                std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
             f.write_all(data)?;
-            f.sync_all().ok(); // best effort on test filesystems
+            f.write_all(&chunk_checksum(data).to_le_bytes())?;
+            if f.sync_all().is_err() {
+                // data may not survive power loss; visible, not fatal
+                self.stats.inner.fsync_errors.fetch_add(1, Ordering::Relaxed);
+            }
         }
-        std::fs::rename(&tmp, &path)
-            .with_context(|| format!("renaming {tmp:?} into place"))?;
+        std::fs::rename(&tmp, &path).with_context(|| format!("renaming {tmp:?} into place"))?;
         if let Some(old) = self.index.insert(key, data.len() as u64) {
             self.bytes -= old;
         }
@@ -134,22 +243,53 @@ impl ChunkStore for FileStore {
         Ok(())
     }
 
+    /// Checksum-verified read. A vanished file or a trailer mismatch is
+    /// reported as a *miss* (`Ok(None)`), never as stale bytes: the
+    /// corrupted file is quarantined off disk and counted, and the
+    /// caller recomputes the chunk.
     fn get(&self, key: ChunkKey) -> Result<Option<Vec<u8>>> {
         if !self.index.contains_key(&key) {
             return Ok(None);
         }
         let path = self.path(key);
-        let mut f = std::fs::File::open(&path)
-            .with_context(|| format!("opening {path:?}"))?;
+        let mut f = match std::fs::File::open(&path) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                // indexed but gone: permanent loss, degrade to a miss
+                self.stats.inner.lost_files.fetch_add(1, Ordering::Relaxed);
+                return Ok(None);
+            }
+            Err(e) => {
+                return Err(anyhow::Error::from(e)).with_context(|| format!("opening {path:?}"))
+            }
+        };
         let mut buf = Vec::new();
         f.read_to_end(&mut buf)?;
-        Ok(Some(buf))
+        match verify_trailer(&buf) {
+            Some(payload_len) => {
+                buf.truncate(payload_len);
+                Ok(Some(buf))
+            }
+            None => {
+                // quarantine: drop the poisoned file so it is never
+                // re-read or re-adopted, and report a miss
+                let _ = std::fs::remove_file(&path);
+                self.stats.inner.checksum_failures.fetch_add(1, Ordering::Relaxed);
+                Ok(None)
+            }
+        }
     }
 
     fn delete(&mut self, key: ChunkKey) -> Result<()> {
         if let Some(old) = self.index.remove(&key) {
             self.bytes -= old;
-            let _ = std::fs::remove_file(self.path(key));
+            if let Err(e) = std::fs::remove_file(self.path(key)) {
+                // already-absent is expected after a quarantine; any
+                // other failure leaks a spill file — count it
+                if e.kind() != std::io::ErrorKind::NotFound {
+                    self.stats.inner.delete_errors.fetch_add(1, Ordering::Relaxed);
+                }
+            }
         }
         Ok(())
     }
@@ -165,6 +305,9 @@ impl ChunkStore for FileStore {
 
 impl Drop for FileStore {
     fn drop(&mut self) {
+        if self.persist {
+            return; // deployment mode: leave files for restart reconcile
+        }
         // best-effort cleanup of spill files
         for key in self.index.keys().copied().collect::<Vec<_>>() {
             let _ = std::fs::remove_file(self.path(key));
@@ -209,9 +352,7 @@ mod tests {
         exercise(&mut s);
         drop(s);
         // spill files cleaned up
-        let remaining = std::fs::read_dir(&dir)
-            .map(|d| d.count())
-            .unwrap_or(0);
+        let remaining = std::fs::read_dir(&dir).map(|d| d.count()).unwrap_or(0);
         assert_eq!(remaining, 0);
         let _ = std::fs::remove_dir(&dir);
     }
@@ -269,6 +410,107 @@ mod tests {
         s.put(key(7), &data).unwrap();
         assert_eq!(s.get(key(7)).unwrap().unwrap(), data);
         drop(s);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn checksum_detects_bit_flip_and_quarantines() {
+        let dir = std::env::temp_dir().join(format!("pcr-store-flip-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = FileStore::new(&dir).unwrap();
+        s.put(key(5), &[7; 32]).unwrap();
+        let path = dir.join(format!("{:016x}.kv", 5));
+        let mut raw = std::fs::read(&path).unwrap();
+        assert_eq!(raw.len(), 32 + CHECKSUM_LEN as usize, "trailer appended");
+        raw[3] ^= 0x40; // flip one bit in the payload
+        std::fs::write(&path, &raw).unwrap();
+        assert!(s.get(key(5)).unwrap().is_none(), "corrupted read must miss");
+        assert_eq!(s.stats().checksum_failures(), 1);
+        assert!(!path.exists(), "corrupted file must be quarantined off disk");
+        // clean re-put over the quarantined slot round-trips again
+        s.put(key(5), &[8; 16]).unwrap();
+        assert_eq!(s.get(key(5)).unwrap().unwrap(), vec![8u8; 16]);
+        drop(s);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn checksum_detects_truncation() {
+        let dir = std::env::temp_dir().join(format!("pcr-store-trunc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = FileStore::new(&dir).unwrap();
+        s.put(key(6), &[3; 64]).unwrap();
+        let path = dir.join(format!("{:016x}.kv", 6));
+        let raw = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &raw[..raw.len() / 2]).unwrap();
+        assert!(s.get(key(6)).unwrap().is_none());
+        assert_eq!(s.stats().checksum_failures(), 1);
+        // a file truncated below the trailer length is also rejected
+        s.put(key(7), &[4; 8]).unwrap();
+        let p7 = dir.join(format!("{:016x}.kv", 7));
+        std::fs::write(&p7, [1u8, 2]).unwrap();
+        assert!(s.get(key(7)).unwrap().is_none());
+        assert_eq!(s.stats().checksum_failures(), 2);
+        drop(s);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn restart_sweeps_corrupted_files_not_adopts() {
+        let dir = std::env::temp_dir().join(format!("pcr-store-rsweep-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = FileStore::new(&dir).unwrap();
+        s.put(key(1), &[1; 40]).unwrap();
+        s.put(key(2), &[2; 60]).unwrap();
+        std::mem::forget(s);
+        // corrupt one file at rest before the "restart"
+        let p1 = dir.join(format!("{:016x}.kv", 1));
+        let mut raw = std::fs::read(&p1).unwrap();
+        raw[0] ^= 0xff;
+        std::fs::write(&p1, &raw).unwrap();
+        let s2 = FileStore::new(&dir).unwrap();
+        assert!(!s2.contains(key(1)), "corrupted file must not be adopted");
+        assert!(s2.contains(key(2)));
+        assert_eq!(s2.bytes_used(), 60);
+        assert_eq!(s2.stats().checksum_failures(), 1);
+        assert!(!p1.exists(), "corrupted file must be swept on reconcile");
+        drop(s2);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn lost_file_reads_as_miss_and_is_counted() {
+        let dir = std::env::temp_dir().join(format!("pcr-store-lost-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = FileStore::new(&dir).unwrap();
+        s.put(key(9), &[5; 24]).unwrap();
+        std::fs::remove_file(dir.join(format!("{:016x}.kv", 9))).unwrap();
+        assert!(s.get(key(9)).unwrap().is_none());
+        assert_eq!(s.stats().lost_files(), 1);
+        // deleting the now-absent file is not a delete error
+        s.delete(key(9)).unwrap();
+        assert_eq!(s.stats().delete_errors(), 0);
+        assert_eq!(s.stats().total(), 1);
+        drop(s);
+        let _ = std::fs::remove_dir(&dir);
+    }
+
+    #[test]
+    fn persist_mode_keeps_files_on_drop() {
+        let dir = std::env::temp_dir().join(format!("pcr-store-persist-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = FileStore::new(&dir).unwrap();
+        s.set_persist(true);
+        s.put(key(1), &[1; 20]).unwrap();
+        s.put(key(2), &[2; 30]).unwrap();
+        drop(s);
+        // files survived Drop; a restart adopts them
+        let s2 = FileStore::new(&dir).unwrap();
+        assert_eq!(s2.bytes_used(), 50);
+        assert_eq!(s2.get(key(1)).unwrap().unwrap(), vec![1u8; 20]);
+        drop(s2); // persist off by default: second drop sweeps
+        let remaining = std::fs::read_dir(&dir).map(|d| d.count()).unwrap_or(0);
+        assert_eq!(remaining, 0);
         let _ = std::fs::remove_dir(&dir);
     }
 }

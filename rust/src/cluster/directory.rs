@@ -126,15 +126,41 @@ impl PrefixDirectory {
         lens
     }
 
+    /// Drop every holder bit of `replica` (failover: a dead replica's
+    /// cache must stop influencing placement). Entries whose mask
+    /// reaches zero are removed, same as per-event `Gone` handling.
+    pub fn clear_replica(&mut self, replica: usize) {
+        debug_assert!(replica < self.n_replicas);
+        let bit = 1u64 << replica;
+        self.holders.retain(|_, mask| {
+            *mask &= !bit;
+            *mask != 0
+        });
+    }
+
     /// Two-sided consistency check against the replicas' actual trees
     /// (invariants 1–3 of the module guide). O(directory + Σ trees) —
     /// a test/debug facility, not a routing-path operation.
     pub fn check_consistent(&self, replicas: &[&CacheEngine]) -> Result<(), String> {
-        if replicas.len() != self.n_replicas {
+        self.check_consistent_alive(replicas, &vec![true; replicas.len()])
+    }
+
+    /// [`check_consistent`](Self::check_consistent) for a fleet with
+    /// failures: a dead replica must hold *nothing* in the directory
+    /// (its bits were cleared at failure), and its tree — frozen at
+    /// the moment of death — is exempt from the no-missing-holders
+    /// invariant.
+    pub fn check_consistent_alive(
+        &self,
+        replicas: &[&CacheEngine],
+        alive: &[bool],
+    ) -> Result<(), String> {
+        if replicas.len() != self.n_replicas || alive.len() != self.n_replicas {
             return Err(format!(
-                "directory sized for {} replicas, given {}",
+                "directory sized for {} replicas, given {} (alive mask {})",
                 self.n_replicas,
-                replicas.len()
+                replicas.len(),
+                alive.len()
             ));
         }
         // 1. no false holders, 3. no empty entries
@@ -146,6 +172,11 @@ impl PrefixDirectory {
             while m != 0 {
                 let r = m.trailing_zeros() as usize;
                 m &= m - 1;
+                if !alive[r] {
+                    return Err(format!(
+                        "directory still claims dead replica {r} holds {key:?}"
+                    ));
+                }
                 let resident = replicas[r]
                     .tree
                     .get(*key)
@@ -158,8 +189,12 @@ impl PrefixDirectory {
                 }
             }
         }
-        // 2. no missing holders
+        // 2. no missing holders (dead replicas exempt: their frozen
+        // trees are deliberately absent from the directory)
         for (r, engine) in replicas.iter().enumerate() {
+            if !alive[r] {
+                continue;
+            }
             for id in engine.tree.ids() {
                 let node = engine.tree.node(id);
                 if node.tiers.is_empty() {
@@ -282,6 +317,32 @@ mod tests {
                 assert_eq!(all[rep], d.matched_prefix_one(rep, probe));
             }
         }
+    }
+
+    #[test]
+    fn clear_replica_wipes_its_bits_and_consistency_exempts_the_dead() {
+        let mut d = PrefixDirectory::new(2);
+        let c = chain_of(3, 3);
+        let mut engines: Vec<CacheEngine> = (0..2).map(|_| tracked_engine(800, 800)).collect();
+        insert_chain(&mut engines[0], &c, Tier::Dram);
+        insert_chain(&mut engines[1], &c[..1], Tier::Ssd);
+        for (i, e) in engines.iter_mut().enumerate() {
+            for ev in e.take_events() {
+                d.apply(i, &ev);
+            }
+        }
+        assert_eq!(d.holders(c[0]), 0b11);
+        // replica 0 dies: its bits vanish, solely-held entries go
+        d.clear_replica(0);
+        assert_eq!(d.holders(c[0]), 0b10);
+        assert_eq!(d.holders(c[1]), 0);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.matched_prefix_all(&c), vec![0, 1]);
+        // the full check now fails (replica 0's tree still has chunks)
+        let refs: Vec<&CacheEngine> = engines.iter().collect();
+        assert!(d.check_consistent(&refs).is_err());
+        // ...but the alive-masked check exempts the dead replica
+        d.check_consistent_alive(&refs, &[false, true]).unwrap();
     }
 
     #[test]

@@ -70,6 +70,18 @@ impl Replica {
         }
     }
 
+    /// Fail this replica: evacuate its open requests (reset for
+    /// re-routing) and clear its holder bits from the directory so no
+    /// future placement counts on its cache. The replica itself stops
+    /// being stepped by the simulator — its cache dies with it.
+    pub fn fail(&mut self, directory: &mut PrefixDirectory) -> Vec<Request> {
+        // flush events from its last step first, then wipe — otherwise
+        // a queued Resident event could resurrect a cleared bit
+        self.publish(directory);
+        directory.clear_replica(self.id);
+        self.core.evacuate()
+    }
+
     /// Finalize into the same outcome struct single-engine runs emit.
     pub fn into_outcome(self) -> RunOutcome {
         self.core.into_outcome()

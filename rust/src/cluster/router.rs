@@ -11,9 +11,10 @@ use crate::cluster::directory::PrefixDirectory;
 use std::cmp::Reverse;
 
 /// What a router is allowed to observe about one replica: queue depths
-/// and its virtual clock — never the replica's prefix tree. Ordered by
-/// id in the slice handed to [`RoutingPolicy::route`]
-/// (`views[i].id == i`).
+/// and its virtual clock — never the replica's prefix tree. The slice
+/// handed to [`RoutingPolicy::route`] is in id order, but ids may be
+/// *sparse*: a failed replica is excluded from the views, so
+/// `views[i].id == i` only holds while the whole fleet is healthy.
 #[derive(Clone, Copy, Debug)]
 pub struct ReplicaView {
     pub id: usize,
@@ -40,8 +41,11 @@ pub trait RoutingPolicy: std::fmt::Debug + Send {
     /// Registry name (diagnostics, reports, bench labels).
     fn name(&self) -> &'static str;
 
-    /// Replica index in `0..views.len()` (`views` is never empty;
-    /// out-of-range values are clamped by the caller, not trusted).
+    /// A **position** into `views`, in `0..views.len()` (`views` is
+    /// never empty; out-of-range values are clamped by the caller, not
+    /// trusted). The caller resolves the position to `views[pos].id` —
+    /// policies must not return a replica id directly, because failed
+    /// replicas are excluded and ids can be sparse.
     fn route(
         &mut self,
         chain: &[ChunkKey],
@@ -89,7 +93,12 @@ impl RoutingPolicy for LeastLoaded {
         views: &[ReplicaView],
         _dir: &PrefixDirectory,
     ) -> usize {
-        views.iter().min_by_key(|v| (v.load(), v.id)).expect("views is never empty").id
+        views
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, v)| (v.load(), v.id))
+            .expect("views is never empty")
+            .0
     }
 }
 
@@ -109,9 +118,10 @@ impl RoutingPolicy for PrefixAffinity {
         let matched = dir.matched_prefix_all(chain);
         views
             .iter()
-            .min_by_key(|v| (Reverse(matched[v.id]), v.load(), v.id))
+            .enumerate()
+            .min_by_key(|(_, v)| (Reverse(matched[v.id]), v.load(), v.id))
             .expect("views is never empty")
-            .id
+            .0
     }
 }
 
@@ -149,10 +159,10 @@ impl RoutingPolicy for AffinityBalanced {
         let mut best = 0usize;
         let mut best_score = f64::NEG_INFINITY;
         let mut best_load = usize::MAX;
-        for v in views {
+        for (pos, v) in views.iter().enumerate() {
             let score = matched[v.id] as f64 - self.alpha * v.load() as f64;
             if score > best_score || (score == best_score && v.load() < best_load) {
-                best = v.id;
+                best = pos;
                 best_score = score;
                 best_load = v.load();
             }
@@ -279,6 +289,34 @@ mod tests {
         // alpha = 0 is pure affinity, any backlog tolerated
         let mut pure = AffinityBalanced { alpha: 0.0 };
         assert_eq!(pure.route(&c, &views(&[(50, 0), (0, 0)]), &d), 0);
+    }
+
+    #[test]
+    fn routers_return_positions_under_sparse_views() {
+        // failover hands routers a views slice with a replica missing;
+        // every policy must answer with a POSITION into that slice
+        let mut d = PrefixDirectory::new(3);
+        let c = chain_of(5, 2);
+        // replica 2 holds the whole chain; replica 1 is dead/excluded
+        d.apply(2, &CacheEvent::Resident(c[0]));
+        d.apply(2, &CacheEvent::Resident(c[1]));
+        let sparse = vec![
+            ReplicaView { id: 0, waiting: 0, decoding: 0, clock: 0.0 },
+            ReplicaView { id: 2, waiting: 9, decoding: 0, clock: 0.0 },
+        ];
+        // prefix-affinity picks holder id 2 — at position 1
+        let mut pa = PrefixAffinity;
+        assert_eq!(pa.route(&c, &sparse, &d), 1);
+        // least-loaded picks idle id 0 — at position 0
+        let mut ll = LeastLoaded;
+        assert_eq!(ll.route(&c, &sparse, &d), 0);
+        // affinity-balanced at huge alpha degenerates to least-loaded
+        let mut ab = AffinityBalanced { alpha: 100.0 };
+        assert_eq!(ab.route(&c, &sparse, &d), 0);
+        // round-robin cycles positions, never touching absent ids
+        let mut rr = RoundRobin::default();
+        let picks: Vec<usize> = (0..4).map(|_| rr.route(&c, &sparse, &d)).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
     }
 
     #[test]

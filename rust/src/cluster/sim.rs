@@ -40,6 +40,9 @@ pub struct ClusterOutcome {
     pub directory_entries: usize,
     /// Latest replica clock — the fleet's makespan.
     pub virtual_duration: f64,
+    /// Requests re-routed off a failed replica (0 without a kill plan).
+    /// Also folded into `aggregate.degrade.failovers`.
+    pub failovers: u64,
 }
 
 /// Run the cluster configured by `cfg` (`cluster.replicas`,
@@ -75,12 +78,38 @@ pub fn run_with(
     let ready = |i: usize| items[i].arrival + items[i].retrieval_seconds;
     let mut next = 0usize;
 
+    // fault injection: a pending replica kill from the `[faults]`
+    // section. Fires once `kill_after` requests have been routed; a
+    // kill that would leave the fleet empty (or targets a replica this
+    // run doesn't have) is ignored.
+    let mut alive = vec![true; n];
+    let mut pending_kill = cfg
+        .fault_plan()
+        .and_then(|p| p.kill_replica.map(|r| (r, p.kill_after)))
+        .filter(|&(r, _)| r < n && n > 1);
+    let mut routed = 0u64;
+    let mut failovers = 0u64;
+
     loop {
-        // the smallest-clock replica acts next; a replica that is idle
-        // with no arrivals left is retired from consideration
+        // a due kill fires before anything else observes the fleet:
+        // the dead replica's open requests are evacuated, its holder
+        // bits cleared, and each evacuee re-routed over the survivors
+        if let Some((kr, after)) = pending_kill {
+            if routed >= after {
+                pending_kill = None;
+                alive[kr] = false;
+                for req in replicas[kr].fail(&mut directory) {
+                    failovers += 1;
+                    route_one(router.as_mut(), &mut replicas, &alive, &directory, req);
+                }
+            }
+        }
+
+        // the smallest-clock live replica acts next; a replica that is
+        // idle with no arrivals left is retired from consideration
         let Some(r) = replicas
             .iter()
-            .filter(|rep| !(rep.is_idle() && next >= items.len()))
+            .filter(|rep| alive[rep.id] && !(rep.is_idle() && next >= items.len()))
             .min_by(|a, b| {
                 a.clock().partial_cmp(&b.clock()).unwrap().then(a.id.cmp(&b.id))
             })
@@ -92,9 +121,7 @@ pub fn run_with(
         // route every arrival whose retrieval completed by its clock
         while next < items.len() && ready(next) <= replicas[r].clock() {
             let it = &items[next];
-            let views: Vec<_> = replicas.iter().map(Replica::view).collect();
-            let target = router.route(&it.chain.keys, &views, &directory).min(n - 1);
-            let mut req = Request::new(
+            let req = Request::new(
                 next as u64,
                 it.input_id,
                 Arc::clone(&it.tokens),
@@ -103,11 +130,26 @@ pub fn run_with(
                 it.arrival,
                 ready(next),
             );
-            req.routed_matched = Some(directory.matched_prefix_one(target, &it.chain.keys));
-            replicas[target].enqueue(req);
+            route_one(router.as_mut(), &mut replicas, &alive, &directory, req);
             next += 1;
+            routed += 1;
+            if let Some((kr, after)) = pending_kill {
+                if routed >= after {
+                    pending_kill = None;
+                    alive[kr] = false;
+                    for req in replicas[kr].fail(&mut directory) {
+                        failovers += 1;
+                        route_one(router.as_mut(), &mut replicas, &alive, &directory, req);
+                    }
+                }
+            }
         }
 
+        if !alive[r] {
+            // the routing loop's kill check took down the very replica
+            // picked to act — its work is already re-routed
+            continue;
+        }
         if replicas[r].is_idle() {
             // nothing routed to it at its clock: jump forward to the
             // next admission (strictly forward — the routing loop just
@@ -124,7 +166,7 @@ pub fn run_with(
     {
         let engines: Vec<&crate::cache::engine::CacheEngine> =
             replicas.iter().map(|rep| &rep.core.cache).collect();
-        if let Err(msg) = directory.check_consistent(&engines) {
+        if let Err(msg) = directory.check_consistent_alive(&engines, &alive) {
             panic!("directory drifted from replica trees: {msg}");
         }
     }
@@ -141,6 +183,8 @@ pub fn run_with(
         total_chunks += rep.core.cache.stats.total_hits() + rep.core.cache.stats.missed_chunks;
         finished_counts.push(rep.core.metrics.finished as f64);
     }
+    // failover is a cluster-level event — no single replica owns it
+    merged.degrade.failovers += failovers;
     let directory_entries = directory.len();
     let outcomes: Vec<RunOutcome> = replicas.into_iter().map(Replica::into_outcome).collect();
     // per-replica metrics.io is only set at finalization — fold the
@@ -167,7 +211,29 @@ pub fn run_with(
         directory_stale,
         directory_entries,
         virtual_duration,
+        failovers,
     }
+}
+
+/// Route one request over the live replicas: the router answers with a
+/// position into the alive-filtered views, which resolves to a replica
+/// id (sparse after a failure — see the `RoutingPolicy` contract).
+fn route_one(
+    router: &mut dyn RoutingPolicy,
+    replicas: &mut [Replica],
+    alive: &[bool],
+    directory: &PrefixDirectory,
+    mut req: Request,
+) {
+    let views: Vec<_> = replicas
+        .iter()
+        .filter(|rep| alive[rep.id])
+        .map(Replica::view)
+        .collect();
+    let pos = router.route(&req.chain.keys, &views, directory).min(views.len() - 1);
+    let target = views[pos].id;
+    req.routed_matched = Some(directory.matched_prefix_one(target, &req.chain.keys));
+    replicas[target].enqueue(req);
 }
 
 /// Population coefficient of variation (σ/μ); 0 for empty input or a
@@ -282,6 +348,72 @@ mod tests {
             assert_eq!(out.replicas.len(), 3);
             assert!(out.virtual_duration > 0.0, "{name}");
         }
+    }
+
+    #[test]
+    fn killed_at_start_replica_serves_nothing_yet_fleet_finishes() {
+        let mut cfg = test_cfg(1.0);
+        cfg.fault_kill_replica = 1;
+        cfg.fault_kill_after = 0; // dies before any request is routed
+        let wl = Workload::build(&cfg);
+        let spec = pcr_spec(&cfg);
+        let out = run_with(&cfg, &spec, &wl, 3, registry::parse("round-robin").unwrap());
+        assert_eq!(out.aggregate.finished, 120, "the fleet absorbs the loss");
+        assert_eq!(out.replicas[1].report.finished, 0, "dead replica served nothing");
+        assert!(out.replicas[0].report.finished > 0);
+        assert!(out.replicas[2].report.finished > 0);
+        // nobody was mid-flight at a kill that fires before routing
+        assert_eq!(out.failovers, 0);
+        assert_eq!(out.aggregate.degrade.failovers, 0);
+    }
+
+    #[test]
+    fn mid_run_kill_reroutes_open_requests_and_loses_none() {
+        let mut cfg = test_cfg(2.0); // high rate → deep queues at kill time
+        cfg.fault_kill_replica = 1;
+        cfg.fault_kill_after = 60;
+        let wl = Workload::build(&cfg);
+        let spec = pcr_spec(&cfg);
+        let out = run_with(&cfg, &spec, &wl, 3, registry::parse("round-robin").unwrap());
+        assert_eq!(out.aggregate.finished, 120, "failover must not lose requests");
+        assert!(out.failovers > 0, "the killed replica had open work");
+        assert_eq!(out.aggregate.degrade.failovers, out.failovers);
+        // the dead replica kept only what it finished before dying
+        let dead_finished = out.replicas[1].report.finished;
+        assert!(dead_finished < 40, "round-robin would have given it ~40");
+        // per-replica finished counts still cover the whole workload
+        let total: usize = out.replicas.iter().map(|r| r.report.finished).sum();
+        assert_eq!(total, 120);
+        assert!(out.aggregate.pretty().contains("failovers="));
+    }
+
+    #[test]
+    fn failover_runs_replay_deterministically() {
+        let mut cfg = test_cfg(2.0);
+        cfg.fault_kill_replica = 0;
+        cfg.fault_kill_after = 30;
+        let wl = Workload::build(&cfg);
+        let spec = pcr_spec(&cfg);
+        let a = run_with(&cfg, &spec, &wl, 3, registry::parse("affinity-balanced").unwrap());
+        let b = run_with(&cfg, &spec, &wl, 3, registry::parse("affinity-balanced").unwrap());
+        assert_eq!(a.aggregate.finished, 120);
+        assert_eq!(a.failovers, b.failovers);
+        assert_eq!(a.aggregate.ttft.mean, b.aggregate.ttft.mean);
+        assert_eq!(a.directory_stale, b.directory_stale);
+    }
+
+    #[test]
+    fn kill_that_would_empty_the_fleet_is_ignored() {
+        let mut cfg = test_cfg(0.8);
+        cfg.fault_kill_replica = 0;
+        cfg.fault_kill_after = 0;
+        let wl = Workload::build(&cfg);
+        let spec = pcr_spec(&cfg);
+        // single replica: killing it would strand the workload — ignored
+        let out = run_with(&cfg, &spec, &wl, 1, registry::parse("round-robin").unwrap());
+        assert_eq!(out.aggregate.finished, 120);
+        assert_eq!(out.failovers, 0);
+        assert_eq!(out.replicas[0].report.finished, 120);
     }
 
     #[test]

@@ -64,6 +64,32 @@ pub struct ExperimentConfig {
     /// Bound on in-flight prefetch loads (both the real engine's queue
     /// and the simulator's in-flight window).
     pub io_prefetch_depth: usize,
+    /// Times a failed SSD read is retried before degrading to
+    /// recompute (real path and virtual fault model share this bound).
+    pub io_retries: u32,
+    /// Base backoff between real-path retry attempts, doubled per
+    /// attempt (milliseconds).
+    pub io_retry_backoff_ms: u64,
+
+    // --- fault injection (`[faults]` section; all off by default) ---
+    /// Seed for every per-key fault decision.
+    pub fault_seed: u64,
+    /// Probability a chunk key's reads fail transiently.
+    pub fault_transient: f64,
+    /// Consecutive failing attempts for a transient-flaky key.
+    pub fault_transient_attempts: u32,
+    /// Probability a chunk key's stored bytes are permanently lost.
+    pub fault_loss: f64,
+    /// Probability a chunk key's first stored copy is corrupted.
+    pub fault_corrupt: f64,
+    /// Probability a read takes a latency spike.
+    pub fault_spike: f64,
+    /// Extra latency per spike, seconds.
+    pub fault_spike_seconds: f64,
+    /// Cluster: replica index to kill mid-run (-1 = nobody dies).
+    pub fault_kill_replica: i64,
+    /// Cluster: the kill fires once this many requests were routed.
+    pub fault_kill_after: u64,
 
     // --- cluster serving (`[cluster]` section) ---
     /// Serving replicas driven by `cluster::sim` (1 = the single-engine
@@ -122,6 +148,17 @@ impl Default for ExperimentConfig {
             io_workers: 2,
             io_demand_depth: 64,
             io_prefetch_depth: 64,
+            io_retries: 2,
+            io_retry_backoff_ms: 1,
+            fault_seed: 0xFA17,
+            fault_transient: 0.0,
+            fault_transient_attempts: 1,
+            fault_loss: 0.0,
+            fault_corrupt: 0.0,
+            fault_spike: 0.0,
+            fault_spike_seconds: 0.05,
+            fault_kill_replica: -1,
+            fault_kill_after: 0,
             replicas: 1,
             router: "prefix-affinity".into(),
             n_inputs: 1000,
@@ -182,6 +219,19 @@ impl ExperimentConfig {
             "io.workers" => self.io_workers = need_f64()? as usize,
             "io.demand_depth" => self.io_demand_depth = need_f64()? as usize,
             "io.prefetch_depth" => self.io_prefetch_depth = need_f64()? as usize,
+            "io.retries" => self.io_retries = need_f64()? as u32,
+            "io.retry_backoff_ms" => self.io_retry_backoff_ms = need_f64()? as u64,
+            "faults.seed" => self.fault_seed = need_f64()? as u64,
+            "faults.transient" => self.fault_transient = need_f64()?,
+            "faults.transient_attempts" => {
+                self.fault_transient_attempts = need_f64()? as u32
+            }
+            "faults.loss" => self.fault_loss = need_f64()?,
+            "faults.corrupt" => self.fault_corrupt = need_f64()?,
+            "faults.spike" => self.fault_spike = need_f64()?,
+            "faults.spike_seconds" => self.fault_spike_seconds = need_f64()?,
+            "faults.kill_replica" => self.fault_kill_replica = need_f64()? as i64,
+            "faults.kill_after" => self.fault_kill_after = need_f64()? as u64,
             "cluster.replicas" => self.replicas = need_f64()? as usize,
             "cluster.router" => self.router = need_str()?,
             "workload.n_inputs" => self.n_inputs = need_f64()? as usize,
@@ -271,7 +321,46 @@ impl ExperimentConfig {
                 router_registry::names_joined()
             );
         }
+        for (name, rate) in [
+            ("faults.transient", self.fault_transient),
+            ("faults.loss", self.fault_loss),
+            ("faults.corrupt", self.fault_corrupt),
+            ("faults.spike", self.fault_spike),
+        ] {
+            if !(0.0..=1.0).contains(&rate) {
+                bail!("{name} must be a probability in [0, 1] (got {rate})");
+            }
+        }
+        if self.fault_spike_seconds < 0.0 {
+            bail!("faults.spike_seconds must be >= 0");
+        }
+        if self.fault_kill_replica >= 0
+            && self.fault_kill_replica as usize >= self.replicas
+        {
+            bail!(
+                "faults.kill_replica {} out of range (cluster has {} replicas)",
+                self.fault_kill_replica,
+                self.replicas
+            );
+        }
         Ok(())
+    }
+
+    /// The fault-injection plan from the `[faults]` section, or `None`
+    /// when nothing is injected — the usual, healthy case.
+    pub fn fault_plan(&self) -> Option<crate::io::FaultPlan> {
+        let plan = crate::io::FaultPlan {
+            seed: self.fault_seed,
+            transient: self.fault_transient,
+            transient_attempts: self.fault_transient_attempts,
+            loss: self.fault_loss,
+            corrupt: self.fault_corrupt,
+            spike: self.fault_spike,
+            spike_seconds: self.fault_spike_seconds,
+            kill_replica: usize::try_from(self.fault_kill_replica).ok(),
+            kill_after: self.fault_kill_after,
+        };
+        plan.any().then_some(plan)
     }
 
     /// Transfer-engine sizing from the `[io]` section.
@@ -280,6 +369,8 @@ impl ExperimentConfig {
             workers: self.io_workers,
             demand_depth: self.io_demand_depth,
             prefetch_depth: self.io_prefetch_depth,
+            retries: self.io_retries,
+            retry_backoff_ms: self.io_retry_backoff_ms,
         }
     }
 }
@@ -419,6 +510,58 @@ router = "affinity-balanced:0.25"
         for name in crate::serve::system::SystemSpec::NAMES {
             assert!(msg.contains(name), "system error missing '{name}': {msg}");
         }
+    }
+
+    #[test]
+    fn faults_section_keys_and_plan() {
+        // no [faults] section → no plan: the healthy path stays free
+        assert!(ExperimentConfig::default().fault_plan().is_none());
+        let text = r#"
+[io]
+retries = 3
+retry_backoff_ms = 2
+[faults]
+seed = 99
+transient = 0.1
+transient_attempts = 2
+loss = 0.01
+corrupt = 0.02
+spike = 0.05
+spike_seconds = 0.2
+"#;
+        let map = file::parse(text).unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply(&map).unwrap();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.io_retries, 3);
+        assert_eq!(cfg.io_config().retries, 3);
+        assert_eq!(cfg.io_config().retry_backoff_ms, 2);
+        let plan = cfg.fault_plan().expect("plan enabled");
+        assert_eq!(plan.seed, 99);
+        assert_eq!(plan.transient_attempts, 2);
+        assert!((plan.loss - 0.01).abs() < 1e-12);
+        assert!(plan.kill_replica.is_none());
+        assert!(plan.enabled());
+    }
+
+    #[test]
+    fn fault_validation_rejects_bad_rates_and_kill_targets() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.fault_loss = 1.5;
+        assert!(cfg.validate().is_err(), "rates above 1 rejected");
+        let mut cfg = ExperimentConfig::default();
+        cfg.fault_transient = -0.1;
+        assert!(cfg.validate().is_err(), "negative rates rejected");
+        let mut cfg = ExperimentConfig::default();
+        cfg.replicas = 2;
+        cfg.fault_kill_replica = 2;
+        assert!(cfg.validate().is_err(), "kill target beyond the fleet");
+        cfg.fault_kill_replica = 1;
+        cfg.validate().unwrap();
+        let plan = cfg.fault_plan().expect("kill alone still makes a plan");
+        assert_eq!(plan.kill_replica, Some(1));
+        assert!(!plan.enabled(), "no chunk-level faults");
+        assert!(plan.any());
     }
 
     #[test]

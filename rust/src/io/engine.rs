@@ -15,6 +15,15 @@
 //!   and after the read, so cancellation racing the read still wins).
 //! * Promotion into DRAM is the caller's job: completions carry raw
 //!   bytes so cache-metadata mutation stays on the scheduler thread.
+//! * A read that errors is retried up to [`IoConfig::retries`] times
+//!   with exponential backoff before the ticket fails (transient I/O
+//!   errors degrade to a recompute, not a crash — see the failure
+//!   model in [`crate::io`]).
+//! * A source that *panics* never takes the engine down: the panic is
+//!   contained to the worker, the in-flight ticket resolves as a
+//!   failed completion, and the worker respawns
+//!   ([`IoStats::worker_respawns`]). All engine locks recover from
+//!   poisoning, so a dead worker cannot wedge submitters either.
 
 use crate::cache::chunk::ChunkKey;
 use crate::cache::store::ChunkStore;
@@ -23,27 +32,39 @@ use crate::io::{IoConfig, IoStats, Lane};
 use crate::util::threadpool::ThreadPool;
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
 use std::time::{Duration, Instant};
+
+/// Poison-recovering lock: a worker that panicked while holding the
+/// lock leaves the data behind, and every mutation of engine state is
+/// written to stay consistent at lock-release points — so the right
+/// response to poisoning is to keep going, not to cascade the panic
+/// into every thread that touches the engine.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// Read-side source of chunk bytes, shared with the worker threads.
 ///
 /// Blanket impls cover the repo's stores behind the standard locks:
 /// `RwLock<FileStore>` gives concurrent reads (`ChunkStore::get` takes
-/// `&self`); `Mutex<S>` serialises and suits tests.
+/// `&self`); `Mutex<S>` serialises and suits tests. Both recover from
+/// poisoning — a panic elsewhere must not turn every subsequent fetch
+/// into a panic.
 pub trait FetchSource: Send + Sync {
     fn fetch(&self, key: ChunkKey) -> Result<Option<Vec<u8>>>;
 }
 
 impl<S: ChunkStore + Sync> FetchSource for RwLock<S> {
     fn fetch(&self, key: ChunkKey) -> Result<Option<Vec<u8>>> {
-        self.read().expect("store lock poisoned").get(key)
+        self.read().unwrap_or_else(|p| p.into_inner()).get(key)
     }
 }
 
 impl<S: ChunkStore> FetchSource for Mutex<S> {
     fn fetch(&self, key: ChunkKey) -> Result<Option<Vec<u8>>> {
-        self.lock().expect("store lock poisoned").get(key)
+        self.lock().unwrap_or_else(|p| p.into_inner()).get(key)
     }
 }
 
@@ -103,6 +124,11 @@ struct State {
     stats: IoStats,
     paused: bool,
     shutdown: bool,
+    /// Per-worker slot holding the key that worker is reading right
+    /// now. If the worker dies mid-read, the respawn wrapper turns the
+    /// slot's ticket into a failed completion instead of leaving the
+    /// key wedged in `inflight` forever.
+    executing: Vec<Option<ChunkKey>>,
 }
 
 struct Shared {
@@ -126,15 +152,18 @@ impl TransferEngine {
     pub fn new(cfg: IoConfig, source: Arc<dyn FetchSource>) -> TransferEngine {
         let workers = cfg.workers.max(1);
         let shared = Arc::new(Shared {
-            state: Mutex::new(State::default()),
+            state: Mutex::new(State {
+                executing: vec![None; workers],
+                ..State::default()
+            }),
             work: Condvar::new(),
             done: Condvar::new(),
         });
         let pool = ThreadPool::new(workers, "io");
-        for _ in 0..workers {
+        for wid in 0..workers {
             let shared = Arc::clone(&shared);
             let source = Arc::clone(&source);
-            pool.submit(move || worker_loop(&shared, &*source));
+            pool.submit(move || worker_entry(&shared, &*source, wid, cfg));
         }
         TransferEngine {
             shared,
@@ -149,7 +178,7 @@ impl TransferEngine {
 
     /// Queue a read of `key` on `lane`. Non-blocking; see [`Submit`].
     pub fn submit(&self, key: ChunkKey, lane: Lane) -> Submit {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock(&self.shared.state);
         if let Some(cur_lane) = st.inflight.get(&key).map(|e| e.lane) {
             if lane == Lane::Demand && cur_lane == Lane::Prefetch {
                 // Upgrade: move the queued ticket to the demand lane; a
@@ -203,7 +232,7 @@ impl TransferEngine {
     /// Cancel the in-flight ticket for `key`, if any. Returns whether a
     /// ticket was found. (Equivalent to cancelling the submit token.)
     pub fn cancel(&self, key: ChunkKey) -> bool {
-        let st = self.shared.state.lock().unwrap();
+        let st = lock(&self.shared.state);
         match st.inflight.get(&key) {
             Some(e) => {
                 e.token.cancel();
@@ -216,18 +245,18 @@ impl TransferEngine {
     /// Stop workers from picking up new tickets (submits still queue).
     /// Used to stage a burst atomically; pair with [`Self::resume`].
     pub fn pause(&self) {
-        self.shared.state.lock().unwrap().paused = true;
+        lock(&self.shared.state).paused = true;
     }
 
     pub fn resume(&self) {
-        self.shared.state.lock().unwrap().paused = false;
+        lock(&self.shared.state).paused = false;
         self.shared.work.notify_all();
     }
 
     /// Pop every completion delivered so far (the scheduler's per-tick
     /// drain; promotion into DRAM happens at the call site).
     pub fn drain(&self) -> Vec<Completion> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock(&self.shared.state);
         st.completions.drain(..).collect()
     }
 
@@ -236,7 +265,7 @@ impl TransferEngine {
     /// never submitted, or cancelled and reaped), or on timeout.
     pub fn take_blocking(&self, key: ChunkKey, timeout: Duration) -> Option<Completion> {
         let deadline = Instant::now() + timeout;
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock(&self.shared.state);
         loop {
             if let Some(pos) = st.completions.iter().position(|c| c.key == key) {
                 return st.completions.remove(pos);
@@ -252,7 +281,7 @@ impl TransferEngine {
                 .shared
                 .done
                 .wait_timeout(st, deadline - now)
-                .unwrap();
+                .unwrap_or_else(|p| p.into_inner());
             st = guard;
         }
     }
@@ -262,7 +291,7 @@ impl TransferEngine {
         let deadline = Instant::now() + timeout;
         loop {
             {
-                let st = self.shared.state.lock().unwrap();
+                let st = lock(&self.shared.state);
                 if st.inflight.is_empty() {
                     return true;
                 }
@@ -275,12 +304,12 @@ impl TransferEngine {
     }
 
     pub fn stats(&self) -> IoStats {
-        self.shared.state.lock().unwrap().stats
+        lock(&self.shared.state).stats
     }
 
     /// Tickets currently queued (not yet picked up) on `lane`.
     pub fn queue_depth(&self, lane: Lane) -> usize {
-        let st = self.shared.state.lock().unwrap();
+        let st = lock(&self.shared.state);
         match lane {
             Lane::Demand => st.demand_q.len(),
             Lane::Prefetch => st.prefetch_q.len(),
@@ -289,30 +318,67 @@ impl TransferEngine {
 
     /// Keys with a queued or executing ticket.
     pub fn inflight_count(&self) -> usize {
-        self.shared.state.lock().unwrap().inflight.len()
+        lock(&self.shared.state).inflight.len()
     }
 
     /// Completions delivered but not yet drained.
     pub fn completed_pending(&self) -> usize {
-        self.shared.state.lock().unwrap().completions.len()
+        lock(&self.shared.state).completions.len()
     }
 }
 
 impl Drop for TransferEngine {
     fn drop(&mut self) {
-        self.shared.state.lock().unwrap().shutdown = true;
+        lock(&self.shared.state).shutdown = true;
         self.shared.work.notify_all();
         // `_pool` drops next and joins the exiting workers.
     }
 }
 
-fn worker_loop(shared: &Shared, source: &dyn FetchSource) {
+/// Worker thread body: run [`worker_loop`] forever, containing any
+/// panic that escapes it (a panicking [`FetchSource`] is user code).
+/// On a panic the in-flight ticket — parked in the worker's
+/// `executing` slot — resolves as a failed completion so its key is
+/// never wedged, the respawn is counted, and the loop re-enters.
+fn worker_entry(shared: &Shared, source: &dyn FetchSource, wid: usize, cfg: IoConfig) {
+    loop {
+        let exited = catch_unwind(AssertUnwindSafe(|| worker_loop(shared, source, wid, cfg)));
+        match exited {
+            Ok(()) => return, // clean shutdown
+            Err(_) => {
+                let mut st = lock(&shared.state);
+                st.stats.worker_respawns += 1;
+                if let Some(key) = st.executing[wid].take() {
+                    if let Some(entry) = st.inflight.remove(&key) {
+                        st.stats.lane_mut(entry.lane).failed += 1;
+                        st.completions.push_back(Completion {
+                            key,
+                            lane: entry.lane,
+                            upgraded: entry.upgraded,
+                            data: Err(anyhow!("io worker panicked while reading {:016x}", key.0)),
+                            wait_seconds: 0.0,
+                            read_seconds: 0.0,
+                        });
+                    }
+                }
+                let stop = st.shutdown;
+                drop(st);
+                shared.done.notify_all();
+                if stop {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, source: &dyn FetchSource, wid: usize, cfg: IoConfig) {
     loop {
         // Pop the next ticket: demand first, FIFO within a lane. The
         // cancellation check happens under the same lock, so a ticket
         // observed cancelled here provably never reached the source.
         let (ticket, token, wait_s) = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock(&shared.state);
             'pop: loop {
                 if st.shutdown {
                     return;
@@ -334,25 +400,42 @@ fn worker_loop(shared: &Shared, source: &dyn FetchSource) {
                             continue 'pop;
                         }
                         let wait = t.enqueued.elapsed().as_secs_f64();
+                        st.executing[wid] = Some(t.key);
                         break 'pop (t, token, wait);
                     }
                 }
-                st = shared.work.wait(st).unwrap();
+                st = shared.work.wait(st).unwrap_or_else(|p| p.into_inner());
             }
         };
 
+        // Bounded retry with exponential backoff: an `Err` from the
+        // source is (presumed) transient; a miss (`Ok(None)`) is
+        // definitive and never retried. Cancellation is honoured
+        // between attempts so a cancelled ticket stops burning disk.
         let t0 = Instant::now();
-        let fetched = source.fetch(ticket.key);
+        let mut retries = 0u32;
+        let mut fetched = source.fetch(ticket.key);
+        while fetched.is_err() && retries < cfg.retries && !token.is_cancelled() {
+            let backoff = cfg.retry_backoff_ms << retries.min(6);
+            if backoff > 0 {
+                std::thread::sleep(Duration::from_millis(backoff));
+            }
+            retries += 1;
+            fetched = source.fetch(ticket.key);
+        }
         let read_s = t0.elapsed().as_secs_f64();
 
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock(&shared.state);
+        st.executing[wid] = None;
         let entry = match st.inflight.remove(&ticket.key) {
             Some(e) => e,
             None => continue,
         };
         if token.is_cancelled() {
             // Cancel raced the read: suppress the completion.
-            st.stats.lane_mut(entry.lane).cancelled += 1;
+            let s = st.stats.lane_mut(entry.lane);
+            s.cancelled += 1;
+            s.retries += retries as u64;
             shared.done.notify_all();
             continue;
         }
@@ -361,6 +444,7 @@ fn worker_loop(shared: &Shared, source: &dyn FetchSource) {
             let s = st.stats.lane_mut(lane);
             s.wait_seconds += wait_s;
             s.serve_seconds += read_s;
+            s.retries += retries as u64;
             match fetched {
                 Ok(Some(bytes)) => {
                     s.completed += 1;
@@ -428,6 +512,7 @@ mod tests {
             workers,
             demand_depth: 64,
             prefetch_depth: 64,
+            ..IoConfig::default()
         }
     }
 
@@ -500,6 +585,7 @@ mod tests {
                 workers: 1,
                 demand_depth: 64,
                 prefetch_depth: 2,
+                ..IoConfig::default()
             },
             source(8, Duration::ZERO),
         );
@@ -621,6 +707,7 @@ mod tests {
                 workers: 4,
                 demand_depth: 256,
                 prefetch_depth: 256,
+                ..IoConfig::default()
             },
             source(32, Duration::from_micros(20)),
         ));
@@ -683,5 +770,119 @@ mod tests {
             eng.submit(key(i), Lane::Prefetch);
         }
         drop(eng); // must join cleanly mid-flight
+    }
+
+    /// A source that fails the first `fails[key]` fetches of a key,
+    /// then serves it — the transient-error shape the retry loop exists
+    /// for.
+    fn flaky_source(n_keys: u64, fails: &[(u64, u32)]) -> Arc<dyn FetchSource> {
+        struct Flaky {
+            store: Mutex<MemStore>,
+            fails: Mutex<HashMap<ChunkKey, u32>>,
+        }
+        impl FetchSource for Flaky {
+            fn fetch(&self, k: ChunkKey) -> Result<Option<Vec<u8>>> {
+                let mut fails = self.fails.lock().unwrap();
+                if let Some(n) = fails.get_mut(&k) {
+                    if *n > 0 {
+                        *n -= 1;
+                        return Err(anyhow!("transient read error"));
+                    }
+                }
+                drop(fails);
+                self.store.lock().unwrap().get(k)
+            }
+        }
+        let mut store = MemStore::new();
+        for i in 0..n_keys {
+            store.put(key(i), &[i as u8; 8]).unwrap();
+        }
+        Arc::new(Flaky {
+            store: Mutex::new(store),
+            fails: Mutex::new(fails.iter().map(|&(k, n)| (key(k), n)).collect()),
+        })
+    }
+
+    #[test]
+    fn transient_errors_recover_within_retry_budget() {
+        let eng = TransferEngine::new(
+            IoConfig { workers: 1, retries: 3, retry_backoff_ms: 0, ..IoConfig::default() },
+            flaky_source(4, &[(0, 2)]),
+        );
+        eng.submit(key(0), Lane::Demand);
+        let c = eng.take_blocking(key(0), T).expect("completion");
+        assert_eq!(c.data.unwrap(), vec![0u8; 8], "recovered after 2 retries");
+        let s = eng.stats();
+        assert_eq!(s.demand.retries, 2);
+        assert_eq!(s.demand.completed, 1);
+        assert_eq!(s.demand.failed, 0);
+    }
+
+    /// Satellite: the retry path gives up after the bound and degrades
+    /// — the ticket fails (caller recomputes) instead of retrying
+    /// forever or crashing.
+    #[test]
+    fn retry_gives_up_after_bound_and_degrades() {
+        let eng = TransferEngine::new(
+            IoConfig { workers: 1, retries: 2, retry_backoff_ms: 0, ..IoConfig::default() },
+            flaky_source(4, &[(0, 10)]),
+        );
+        eng.submit(key(0), Lane::Demand);
+        let c = eng.take_blocking(key(0), T).expect("completion");
+        assert!(c.data.is_err(), "exhausted retries must fail the ticket");
+        let s = eng.stats();
+        assert_eq!(s.demand.retries, 2, "exactly the bound was spent");
+        assert_eq!(s.demand.failed, 1);
+        assert_eq!(s.demand.completed, 0);
+        // the engine is still healthy: the next read serves normally
+        eng.submit(key(1), Lane::Demand);
+        let c = eng.take_blocking(key(1), T).expect("completion");
+        assert!(c.data.is_ok());
+    }
+
+    #[test]
+    fn misses_are_not_retried() {
+        let eng = TransferEngine::new(
+            IoConfig { workers: 1, retries: 3, retry_backoff_ms: 0, ..IoConfig::default() },
+            source(1, Duration::ZERO),
+        );
+        eng.submit(ChunkKey(0xDEAD), Lane::Demand);
+        let c = eng.take_blocking(ChunkKey(0xDEAD), T).expect("completion");
+        assert!(c.data.is_err());
+        assert_eq!(eng.stats().demand.retries, 0, "Ok(None) is definitive");
+    }
+
+    #[test]
+    fn panicking_source_is_isolated_and_worker_respawned() {
+        struct Bomb {
+            store: Mutex<MemStore>,
+        }
+        impl FetchSource for Bomb {
+            fn fetch(&self, k: ChunkKey) -> Result<Option<Vec<u8>>> {
+                if k == key(13) {
+                    panic!("source exploded");
+                }
+                self.store.lock().unwrap().get(k)
+            }
+        }
+        let mut store = MemStore::new();
+        for i in 0..16 {
+            store.put(key(i), &[i as u8; 8]).unwrap();
+        }
+        let eng = TransferEngine::new(
+            IoConfig { workers: 1, retries: 0, retry_backoff_ms: 0, ..IoConfig::default() },
+            Arc::new(Bomb { store: Mutex::new(store) }),
+        );
+        eng.submit(key(13), Lane::Demand);
+        let c = eng.take_blocking(key(13), T).expect("panicked ticket still resolves");
+        assert!(c.data.is_err());
+        let s = eng.stats();
+        assert_eq!(s.worker_respawns, 1);
+        assert_eq!(s.demand.failed, 1);
+        // the respawned worker keeps serving
+        eng.submit(key(1), Lane::Demand);
+        let c = eng.take_blocking(key(1), T).expect("completion after respawn");
+        assert_eq!(c.data.unwrap(), vec![1u8; 8]);
+        assert!(eng.wait_quiescent(T));
     }
 }

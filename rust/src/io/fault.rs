@@ -1,0 +1,573 @@
+//! Deterministic, seeded fault injection for the tiered KV-cache path.
+//!
+//! PCR treats DRAM/SSD reuse as *best-effort acceleration over an
+//! always-correct recompute path*: a failed or corrupted cache load
+//! must degrade to a recompute, never fail the request. This module
+//! provides the harness that proves it — a [`FaultPlan`] describing
+//! *what* to break (rates + a seed), a [`FaultSession`] that makes the
+//! per-chunk decisions and counts every injection, and two wrappers
+//! that carry the plan into the real I/O path ([`FaultyStore`] below a
+//! [`ChunkStore`], [`FaultySource`] below the transfer engine's
+//! [`FetchSource`]).
+//!
+//! Every decision is a pure function of `(seed, fault kind, chunk
+//! key)`: two sessions built from the same plan inject the *same*
+//! faults in the *same* places, which is what lets the chaos proptest
+//! replay a faulted run bit-for-bit and account for every injection.
+//!
+//! Fault model (see the module guide in [`crate::io`] for the full
+//! degradation matrix):
+//!
+//! * **transient** — a read attempt fails with an error but the data is
+//!   intact; bounded retry-with-backoff recovers it. A key decided
+//!   flaky fails its first [`FaultPlan::transient_attempts`] attempts,
+//!   so a retry bound below that count exhausts and degrades.
+//! * **lost** — the stored bytes are permanently gone (medium failure).
+//!   Reads miss; the chunk is quarantined and recomputed. Loss sticks
+//!   to the key: a rewritten copy on the same "sector" is lost again.
+//! * **corrupt** — the stored bytes are silently flipped. The checksum
+//!   catches it on read, the bad *copy* is quarantined, and the
+//!   rewritten copy is clean (one-shot per key).
+//! * **spike** — the read succeeds but takes [`FaultPlan::spike_seconds`]
+//!   longer (latency injection only; no degradation).
+//! * **replica kill** — cluster level: replica
+//!   [`FaultPlan::kill_replica`] dies after
+//!   [`FaultPlan::kill_after`] routed requests (see `cluster::sim`).
+
+use crate::cache::chunk::ChunkKey;
+use crate::cache::store::ChunkStore;
+use crate::io::engine::FetchSource;
+use crate::util::rng::splitmix64;
+use anyhow::{anyhow, Result};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A seeded description of what to inject. All rates are probabilities
+/// in `[0, 1]` applied per chunk key; `Default` injects nothing.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    /// Seed for every per-key decision.
+    pub seed: u64,
+    /// Probability a key's reads fail transiently.
+    pub transient: f64,
+    /// How many consecutive attempts fail for a transient-flaky key.
+    pub transient_attempts: u32,
+    /// Probability a key's stored bytes are permanently lost.
+    pub loss: f64,
+    /// Probability a key's first stored copy is corrupted.
+    pub corrupt: f64,
+    /// Probability a key's reads take a latency spike.
+    pub spike: f64,
+    /// Extra read latency per spike, in seconds.
+    pub spike_seconds: f64,
+    /// Cluster: kill this replica index mid-run (`None` = nobody dies).
+    pub kill_replica: Option<usize>,
+    /// Cluster: the kill fires once this many requests have been routed.
+    pub kill_after: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0xFA17,
+            transient: 0.0,
+            transient_attempts: 1,
+            loss: 0.0,
+            corrupt: 0.0,
+            spike: 0.0,
+            spike_seconds: 0.05,
+            kill_replica: None,
+            kill_after: 0,
+        }
+    }
+}
+
+/// Decision domains: each fault kind draws from its own stream so
+/// (e.g.) raising the loss rate never changes which keys are flaky.
+const D_LOSS: u64 = 1;
+const D_CORRUPT: u64 = 2;
+const D_TRANSIENT: u64 = 3;
+const D_SPIKE: u64 = 4;
+
+impl FaultPlan {
+    /// Anything to inject at the chunk level?
+    pub fn enabled(&self) -> bool {
+        self.transient > 0.0 || self.loss > 0.0 || self.corrupt > 0.0 || self.spike > 0.0
+    }
+
+    /// Anything to inject at all (chunk or cluster level)?
+    pub fn any(&self) -> bool {
+        self.enabled() || self.kill_replica.is_some()
+    }
+
+    /// Deterministic uniform draw in `[0, 1)` for (kind, key).
+    fn unit(&self, domain: u64, key: ChunkKey) -> f64 {
+        let mut s = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(domain)
+            ^ key.0;
+        (splitmix64(&mut s) >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Is this key's stored copy permanently lost?
+    pub fn is_lost(&self, key: ChunkKey) -> bool {
+        self.loss > 0.0 && self.unit(D_LOSS, key) < self.loss
+    }
+
+    /// Is this key's first stored copy corrupted?
+    pub fn is_corrupted(&self, key: ChunkKey) -> bool {
+        self.corrupt > 0.0 && self.unit(D_CORRUPT, key) < self.corrupt
+    }
+
+    /// How many consecutive read attempts fail for this key (0 = clean)?
+    pub fn transient_failures(&self, key: ChunkKey) -> u32 {
+        if self.transient > 0.0 && self.unit(D_TRANSIENT, key) < self.transient {
+            self.transient_attempts.max(1)
+        } else {
+            0
+        }
+    }
+
+    /// Does a read of this key take a latency spike?
+    pub fn is_spiked(&self, key: ChunkKey) -> bool {
+        self.spike > 0.0 && self.unit(D_SPIKE, key) < self.spike
+    }
+}
+
+#[derive(Debug, Default)]
+struct InjectedInner {
+    lost: AtomicU64,
+    corrupted: AtomicU64,
+    retries: AtomicU64,
+    exhausted: AtomicU64,
+    spikes: AtomicU64,
+}
+
+/// Snapshot of everything a [`FaultSession`] has injected so far — the
+/// chaos proptest's ground truth to reconcile degradation counters
+/// against.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Injected {
+    /// Reads that hit a permanently-lost copy.
+    pub lost: u64,
+    /// Corrupted copies detected (and therefore quarantined).
+    pub corrupted: u64,
+    /// Failed attempts that were retried (recovered or not).
+    pub retries: u64,
+    /// Reads whose retries ran out (degraded to recompute).
+    pub exhausted: u64,
+    /// Latency spikes served.
+    pub spikes: u64,
+}
+
+impl Injected {
+    /// Injections that force the degrade-to-recompute path.
+    pub fn degrading(&self) -> u64 {
+        self.lost + self.corrupted + self.exhausted
+    }
+}
+
+/// Outcome of the transient-fault decision for one read, against a
+/// caller-supplied retry bound.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transient {
+    /// No transient fault: the first attempt succeeds.
+    Clean,
+    /// The first `n` attempts failed; retries recovered the read.
+    Recovered(u32),
+    /// The retry bound ran out: the read degrades to a miss.
+    Exhausted(u32),
+}
+
+/// One run's fault state: the shared plan plus injection counters and
+/// the per-key one-shot bookkeeping for corruption. Cheap to clone —
+/// clones share counters and state.
+#[derive(Clone, Debug, Default)]
+pub struct FaultSession {
+    plan: Arc<FaultPlan>,
+    counts: Arc<InjectedInner>,
+    /// Keys whose corrupted copy was already detected: the rewritten
+    /// copy is clean (corruption is a property of one bad write).
+    tripped: Arc<Mutex<HashSet<ChunkKey>>>,
+}
+
+impl FaultSession {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultSession {
+            plan: Arc::new(plan),
+            counts: Arc::new(InjectedInner::default()),
+            tripped: Arc::new(Mutex::new(HashSet::new())),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Counting decision: is this read of `key` lost? (Sticky per key.)
+    pub fn lost(&self, key: ChunkKey) -> bool {
+        let hit = self.plan.is_lost(key);
+        if hit {
+            self.counts.lost.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Counting decision: does this read of `key` detect corruption?
+    /// One-shot per key — the quarantined copy's replacement is clean.
+    pub fn corrupted(&self, key: ChunkKey) -> bool {
+        if !self.plan.is_corrupted(key) {
+            return false;
+        }
+        let mut tripped = self.tripped.lock().unwrap_or_else(|p| p.into_inner());
+        if !tripped.insert(key) {
+            return false;
+        }
+        self.counts.corrupted.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Counting decision: transient outcome of one read of `key` under
+    /// a `retry_limit`-retry budget (attempts = 1 + retry_limit).
+    pub fn transient(&self, key: ChunkKey, retry_limit: u32) -> Transient {
+        let fails = self.plan.transient_failures(key);
+        if fails == 0 {
+            return Transient::Clean;
+        }
+        let performed = fails.min(retry_limit);
+        self.counts
+            .retries
+            .fetch_add(performed as u64, Ordering::Relaxed);
+        if fails > retry_limit {
+            self.counts.exhausted.fetch_add(1, Ordering::Relaxed);
+            Transient::Exhausted(performed)
+        } else {
+            Transient::Recovered(performed)
+        }
+    }
+
+    /// Counting decision: does this read of `key` take a spike?
+    pub fn spiked(&self, key: ChunkKey) -> bool {
+        let hit = self.plan.is_spiked(key);
+        if hit {
+            self.counts.spikes.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Snapshot the injection counters.
+    pub fn injected(&self) -> Injected {
+        Injected {
+            lost: self.counts.lost.load(Ordering::Relaxed),
+            corrupted: self.counts.corrupted.load(Ordering::Relaxed),
+            retries: self.counts.retries.load(Ordering::Relaxed),
+            exhausted: self.counts.exhausted.load(Ordering::Relaxed),
+            spikes: self.counts.spikes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A [`ChunkStore`] wrapper that injects the session's plan below an
+/// otherwise-healthy store: lost keys read as misses, corrupted copies
+/// are deleted at detection (mirroring `FileStore`'s own checksum
+/// quarantine) and read as misses, flaky keys error for their first
+/// `transient_attempts` reads, spiked keys sleep. Writes and metadata
+/// pass straight through — `contains` still reports lost keys present,
+/// exactly the stale-metadata situation the read path must survive.
+pub struct FaultyStore<S: ChunkStore> {
+    inner: S,
+    session: FaultSession,
+    /// Failed attempts served so far per flaky key.
+    attempts: Mutex<HashMap<ChunkKey, u32>>,
+}
+
+impl<S: ChunkStore> FaultyStore<S> {
+    pub fn new(inner: S, session: FaultSession) -> Self {
+        FaultyStore { inner, session, attempts: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn session(&self) -> &FaultSession {
+        &self.session
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+
+    /// Should this read attempt fail transiently? Burns one failure
+    /// from the key's budget per call; counts the injection.
+    fn transient_attempt(&self, key: ChunkKey) -> bool {
+        let budget = self.session.plan.transient_failures(key);
+        if budget == 0 {
+            return false;
+        }
+        let mut attempts = self.attempts.lock().unwrap_or_else(|p| p.into_inner());
+        let served = attempts.entry(key).or_insert(0);
+        if *served < budget {
+            *served += 1;
+            self.session.counts.retries.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            // budget burnt: the key reads clean from here on
+            false
+        }
+    }
+}
+
+impl<S: ChunkStore> ChunkStore for FaultyStore<S> {
+    fn put(&mut self, key: ChunkKey, data: &[u8]) -> Result<()> {
+        self.inner.put(key, data)
+    }
+
+    fn get(&self, key: ChunkKey) -> Result<Option<Vec<u8>>> {
+        if self.session.lost(key) {
+            return Ok(None);
+        }
+        if self.transient_attempt(key) {
+            return Err(anyhow!("injected transient read error for {key:?}"));
+        }
+        if self.session.spiked(key) {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                self.session.plan.spike_seconds,
+            ));
+        }
+        if self.session.corrupted(key) {
+            // checksum mismatch: the bad copy is quarantined (deleted);
+            // FaultyStore can't mutate through &self, so corruption
+            // reads as a miss and the next put rewrites a clean copy.
+            return Ok(None);
+        }
+        self.inner.get(key)
+    }
+
+    fn delete(&mut self, key: ChunkKey) -> Result<()> {
+        self.inner.delete(key)
+    }
+
+    fn contains(&self, key: ChunkKey) -> bool {
+        self.inner.contains(key)
+    }
+
+    fn bytes_used(&self) -> u64 {
+        self.inner.bytes_used()
+    }
+}
+
+/// A [`FetchSource`] wrapper carrying the plan into the transfer
+/// engine: lost/corrupted keys fetch as `Ok(None)` (miss), flaky keys
+/// error for their first `transient_attempts` fetches (exercising the
+/// engine's bounded retry), spiked keys sleep before serving.
+pub struct FaultySource {
+    inner: Arc<dyn FetchSource>,
+    session: FaultSession,
+    attempts: Mutex<HashMap<ChunkKey, u32>>,
+}
+
+impl FaultySource {
+    pub fn new(inner: Arc<dyn FetchSource>, session: FaultSession) -> Self {
+        FaultySource { inner, session, attempts: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn session(&self) -> &FaultSession {
+        &self.session
+    }
+}
+
+impl FetchSource for FaultySource {
+    fn fetch(&self, key: ChunkKey) -> Result<Option<Vec<u8>>> {
+        if self.session.lost(key) {
+            return Ok(None);
+        }
+        let budget = self.session.plan.transient_failures(key);
+        if budget > 0 {
+            let mut attempts = self.attempts.lock().unwrap_or_else(|p| p.into_inner());
+            let served = attempts.entry(key).or_insert(0);
+            if *served < budget {
+                *served += 1;
+                self.session.counts.retries.fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow!("injected transient fetch error for {key:?}"));
+            }
+        }
+        if self.session.spiked(key) {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                self.session.plan.spike_seconds,
+            ));
+        }
+        if self.session.corrupted(key) {
+            return Ok(None);
+        }
+        self.inner.fetch(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::store::MemStore;
+
+    fn k(x: u64) -> ChunkKey {
+        ChunkKey(x)
+    }
+
+    #[test]
+    fn default_plan_injects_nothing() {
+        let plan = FaultPlan::default();
+        assert!(!plan.enabled());
+        assert!(!plan.any());
+        for i in 0..1000 {
+            assert!(!plan.is_lost(k(i)));
+            assert!(!plan.is_corrupted(k(i)));
+            assert_eq!(plan.transient_failures(k(i)), 0);
+            assert!(!plan.is_spiked(k(i)));
+        }
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_rate_shaped() {
+        let plan = FaultPlan {
+            seed: 42,
+            loss: 0.1,
+            corrupt: 0.2,
+            transient: 0.3,
+            spike: 0.05,
+            ..FaultPlan::default()
+        };
+        let twin = plan.clone();
+        let n = 20_000u64;
+        let (mut lost, mut corrupt, mut flaky, mut spiked) = (0u64, 0u64, 0u64, 0u64);
+        for i in 0..n {
+            assert_eq!(plan.is_lost(k(i)), twin.is_lost(k(i)));
+            assert_eq!(plan.is_corrupted(k(i)), twin.is_corrupted(k(i)));
+            assert_eq!(plan.transient_failures(k(i)), twin.transient_failures(k(i)));
+            assert_eq!(plan.is_spiked(k(i)), twin.is_spiked(k(i)));
+            lost += plan.is_lost(k(i)) as u64;
+            corrupt += plan.is_corrupted(k(i)) as u64;
+            flaky += (plan.transient_failures(k(i)) > 0) as u64;
+            spiked += plan.is_spiked(k(i)) as u64;
+        }
+        // rates land near their targets (loose 30% relative tolerance)
+        let near = |hits: u64, rate: f64| {
+            let expect = n as f64 * rate;
+            (hits as f64 - expect).abs() < expect * 0.3
+        };
+        assert!(near(lost, 0.1), "lost {lost}");
+        assert!(near(corrupt, 0.2), "corrupt {corrupt}");
+        assert!(near(flaky, 0.3), "flaky {flaky}");
+        assert!(near(spiked, 0.05), "spiked {spiked}");
+    }
+
+    #[test]
+    fn domains_are_independent() {
+        // raising the loss rate must not change which keys are flaky
+        let a = FaultPlan { seed: 7, transient: 0.3, loss: 0.0, ..FaultPlan::default() };
+        let b = FaultPlan { seed: 7, transient: 0.3, loss: 0.9, ..FaultPlan::default() };
+        for i in 0..2000 {
+            assert_eq!(a.transient_failures(k(i)), b.transient_failures(k(i)));
+        }
+    }
+
+    #[test]
+    fn session_counts_each_injection() {
+        let plan = FaultPlan { seed: 1, loss: 1.0, ..FaultPlan::default() };
+        let s = FaultSession::new(plan);
+        assert!(s.lost(k(1)));
+        assert!(s.lost(k(1))); // sticky and counted again
+        assert_eq!(s.injected().lost, 2);
+        assert_eq!(s.injected().degrading(), 2);
+    }
+
+    #[test]
+    fn corruption_is_one_shot_per_key() {
+        let plan = FaultPlan { seed: 1, corrupt: 1.0, ..FaultPlan::default() };
+        let s = FaultSession::new(plan);
+        assert!(s.corrupted(k(9)));
+        assert!(!s.corrupted(k(9)), "quarantined copy's replacement is clean");
+        assert_eq!(s.injected().corrupted, 1);
+    }
+
+    #[test]
+    fn transient_outcome_respects_retry_limit() {
+        let plan = FaultPlan {
+            seed: 1,
+            transient: 1.0,
+            transient_attempts: 3,
+            ..FaultPlan::default()
+        };
+        let s = FaultSession::new(plan);
+        assert_eq!(s.transient(k(5), 5), Transient::Recovered(3));
+        assert_eq!(s.transient(k(5), 2), Transient::Exhausted(2));
+        assert_eq!(s.transient(k(5), 0), Transient::Exhausted(0));
+        let i = s.injected();
+        assert_eq!(i.retries, 5);
+        assert_eq!(i.exhausted, 2);
+        let clean = FaultSession::new(FaultPlan::default());
+        assert_eq!(clean.transient(k(5), 2), Transient::Clean);
+    }
+
+    #[test]
+    fn faulty_store_lost_reads_miss_but_metadata_survives() {
+        let mut inner = MemStore::default();
+        inner.put(k(3), b"abc").unwrap();
+        let store = FaultyStore::new(
+            inner,
+            FaultSession::new(FaultPlan { seed: 1, loss: 1.0, ..FaultPlan::default() }),
+        );
+        assert!(store.contains(k(3)), "metadata still thinks it's there");
+        assert!(store.get(k(3)).unwrap().is_none(), "the read discovers the loss");
+        assert_eq!(store.session().injected().lost, 1);
+    }
+
+    #[test]
+    fn faulty_store_transient_burns_budget_then_serves() {
+        let mut inner = MemStore::default();
+        inner.put(k(4), b"data").unwrap();
+        let store = FaultyStore::new(
+            inner,
+            FaultSession::new(FaultPlan {
+                seed: 1,
+                transient: 1.0,
+                transient_attempts: 2,
+                ..FaultPlan::default()
+            }),
+        );
+        assert!(store.get(k(4)).is_err());
+        assert!(store.get(k(4)).is_err());
+        assert_eq!(store.get(k(4)).unwrap().unwrap(), b"data");
+        assert_eq!(store.session().injected().retries, 2);
+    }
+
+    #[test]
+    fn faulty_store_corruption_reads_miss_once() {
+        let mut inner = MemStore::default();
+        inner.put(k(8), b"body").unwrap();
+        let store = FaultyStore::new(
+            inner,
+            FaultSession::new(FaultPlan { seed: 1, corrupt: 1.0, ..FaultPlan::default() }),
+        );
+        assert!(store.get(k(8)).unwrap().is_none(), "first read detects corruption");
+        assert_eq!(store.get(k(8)).unwrap().unwrap(), b"body", "rewrite-free copy is clean");
+        assert_eq!(store.session().injected().corrupted, 1);
+    }
+
+    #[test]
+    fn faulty_source_injects_through_fetch() {
+        let mut inner = MemStore::default();
+        inner.put(k(6), b"zz").unwrap();
+        let src: Arc<dyn FetchSource> = Arc::new(std::sync::RwLock::new(inner));
+        let fs = FaultySource::new(
+            src,
+            FaultSession::new(FaultPlan {
+                seed: 1,
+                transient: 1.0,
+                transient_attempts: 1,
+                ..FaultPlan::default()
+            }),
+        );
+        assert!(fs.fetch(k(6)).is_err());
+        assert_eq!(fs.fetch(k(6)).unwrap().unwrap(), b"zz");
+        assert!(fs.fetch(k(7)).is_err(), "unknown keys are flaky too at rate 1.0");
+        assert!(fs.fetch(k(7)).unwrap().is_none(), "budget burnt: clean read misses");
+    }
+}

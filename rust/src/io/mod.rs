@@ -42,14 +42,43 @@
 //!   dropped or unboundedly buffered.
 //!
 //! Configured via the `[io]` TOML section (`io.workers`,
-//! `io.demand_depth`, `io.prefetch_depth`) — see
-//! [`crate::config::ExperimentConfig`].
+//! `io.demand_depth`, `io.prefetch_depth`, `io.retries`,
+//! `io.retry_backoff_ms`) — see [`crate::config::ExperimentConfig`].
+//!
+//! # Failure model & degradation matrix
+//!
+//! The storage hierarchy is **best-effort acceleration over an
+//! always-correct recompute path**: no fault below the cache boundary
+//! may fail a request, only slow it down. The [`fault`] module is the
+//! seeded injection harness that proves this, and the chaos proptest
+//! in `serve::engine` holds the headline invariant: under *any* fault
+//! plan every request completes with output identical to the
+//! fault-free run, and the degradation counters
+//! ([`crate::serve::metrics::DegradeStats`]) account for every
+//! injection.
+//!
+//! | Fault | Detection | Response | Counters |
+//! |---|---|---|---|
+//! | Transient read error | `FetchSource::fetch` returns `Err` | retried up to [`IoConfig::retries`] times with exponential backoff ([`IoConfig::retry_backoff_ms`] × 2ⁿ); recovery is invisible beyond latency | `LaneStats::retries` |
+//! | Retries exhausted | still `Err` after the bound | ticket fails → caller degrades to recompute; the copy is quarantined (evicted) | `retries`, `degraded_loads`, `quarantined_chunks` |
+//! | Permanent loss | read misses (`Ok(None)`) despite index metadata | never retried (a miss is definitive); quarantine + recompute | `degraded_loads`, `quarantined_chunks`, `StoreStats::lost_files` |
+//! | Corruption | fxhash checksum trailer mismatch on `FileStore::get`/restart reconcile | bad copy swept from disk + evicted from the tree; recompute rewrites a clean copy | `degraded_loads`, `quarantined_chunks`, `StoreStats::checksum_failures` |
+//! | Latency spike | n/a (indistinguishable from a slow disk) | absorbed; TTFT takes the hit | — |
+//! | Worker panic | `catch_unwind` in the worker shell | in-flight ticket fails (caller recomputes), worker respawns, poisoned locks recover | `IoStats::worker_respawns`, lane `failed` |
+//! | fsync / delete errors | `FileStore` put/delete syscalls | logged in store stats; never fatal (the payload write itself failing fails the put) | `StoreStats::fsync_errors` / `delete_errors` |
+//! | Replica failure | cluster: kill switch / health flag | replica stops receiving routed traffic, its directory holder bits clear, queued+decoding requests re-route and restart | `failovers` |
+//!
+//! Fatal (by design): nothing on the read path. Write-path errors on
+//! `put` still fail the insert — a chunk that was never durably stored
+//! must not be indexed as reusable.
 
 pub mod engine;
+pub mod fault;
 pub mod lanes;
 pub mod token;
 
 pub use engine::{Completion, FetchSource, Submit, TransferEngine};
+pub use fault::{FaultPlan, FaultSession, FaultyStore, FaultySource, Injected, Transient};
 pub use lanes::VirtualLanes;
 pub use token::CancelToken;
 
@@ -80,6 +109,11 @@ pub struct IoConfig {
     pub demand_depth: usize,
     /// Bound on queued prefetch tickets before submits are rejected.
     pub prefetch_depth: usize,
+    /// Times a read that errors is retried before the ticket fails
+    /// (attempts = 1 + retries). Misses are never retried.
+    pub retries: u32,
+    /// Base backoff between retry attempts, doubled per attempt.
+    pub retry_backoff_ms: u64,
 }
 
 impl Default for IoConfig {
@@ -88,6 +122,8 @@ impl Default for IoConfig {
             workers: 2,
             demand_depth: 64,
             prefetch_depth: 64,
+            retries: 2,
+            retry_backoff_ms: 1,
         }
     }
 }
@@ -107,6 +143,9 @@ pub struct LaneStats {
     pub rejected: u64,
     /// Reads that errored or found the key missing.
     pub failed: u64,
+    /// Retry attempts performed after transient read errors (spent
+    /// whether or not the read eventually recovered).
+    pub retries: u64,
     /// Payload bytes delivered.
     pub bytes_moved: u64,
     /// Total seconds tickets spent queued before a worker picked them up.
@@ -142,6 +181,7 @@ impl LaneStats {
         self.deduped += other.deduped;
         self.rejected += other.rejected;
         self.failed += other.failed;
+        self.retries += other.retries;
         self.bytes_moved += other.bytes_moved;
         self.wait_seconds += other.wait_seconds;
         self.serve_seconds += other.serve_seconds;
@@ -156,6 +196,9 @@ pub struct IoStats {
     /// Prefetch tickets promoted to demand priority (read once, served
     /// at demand priority instead of being re-read).
     pub upgraded: u64,
+    /// I/O workers respawned after a panic escaped the source
+    /// (panic-isolation: the engine survives, the ticket fails).
+    pub worker_respawns: u64,
 }
 
 impl IoStats {
@@ -179,13 +222,14 @@ impl IoStats {
         self.demand.absorb(&other.demand);
         self.prefetch.absorb(&other.prefetch);
         self.upgraded += other.upgraded;
+        self.worker_respawns += other.worker_respawns;
     }
 
     /// Two-line human-readable block (mirrors `Report::pretty` rows).
     pub fn pretty(&self) -> String {
         let row = |name: &str, s: &LaneStats| {
             format!(
-                "{name} sub={} done={} cancel={} dedup={} reject={} fail={} \
+                "{name} sub={} done={} cancel={} dedup={} reject={} fail={} retry={} \
                  bytes={} wait={:.4}s serve={:.4}s",
                 s.submitted,
                 s.completed,
@@ -193,16 +237,18 @@ impl IoStats {
                 s.deduped,
                 s.rejected,
                 s.failed,
+                s.retries,
                 s.bytes_moved,
                 s.wait_seconds,
                 s.serve_seconds,
             )
         };
         format!(
-            "{}\n  {} upgraded={}",
+            "{}\n  {} upgraded={} respawns={}",
             row("demand  ", &self.demand),
             row("prefetch", &self.prefetch),
-            self.upgraded
+            self.upgraded,
+            self.worker_respawns
         )
     }
 }

@@ -71,6 +71,16 @@ fn experiment_flags(cli: Cli) -> Cli {
         .opt("policy", "", "eviction policy override (see cache::policy::registry; empty = system default)")
         .opt("prefetch-strategy", "", "prefetch strategy override (none|queue-window|depth-bounded[:N]; empty = system default)")
         .opt("seed", "20260710", "master seed")
+        .opt("io-retries", "2", "transfer-engine retry bound for transient read errors")
+        .opt("fault-seed", "64023", "fault-injection seed (decisions are pure in seed+key)")
+        .opt("fault-transient", "0", "transient read-error rate per chunk [0,1]")
+        .opt("fault-transient-attempts", "1", "failed attempts before a transient read succeeds")
+        .opt("fault-loss", "0", "permanent chunk-loss rate [0,1]")
+        .opt("fault-corrupt", "0", "at-rest corruption rate [0,1] (one-shot per chunk)")
+        .opt("fault-spike", "0", "latency-spike rate per chunk load [0,1]")
+        .opt("fault-spike-seconds", "0.05", "added latency per injected spike")
+        .opt("fault-kill-replica", "-1", "replica to kill mid-run (cluster; -1 = none)")
+        .opt("fault-kill-after", "0", "routed requests before the kill fires")
         .switch("workload2", "sample without replacement (workload 2)")
 }
 
@@ -99,6 +109,16 @@ fn build_config(args: &pcr::util::cli::Args) -> ExperimentConfig {
         cfg.prefetch_strategy = strategy.to_string();
     }
     cfg.seed = args.parse_as("seed").unwrap();
+    cfg.io_retries = args.parse_as("io-retries").unwrap();
+    cfg.fault_seed = args.parse_as("fault-seed").unwrap();
+    cfg.fault_transient = args.f64_of("fault-transient");
+    cfg.fault_transient_attempts = args.parse_as("fault-transient-attempts").unwrap();
+    cfg.fault_loss = args.f64_of("fault-loss");
+    cfg.fault_corrupt = args.f64_of("fault-corrupt");
+    cfg.fault_spike = args.f64_of("fault-spike");
+    cfg.fault_spike_seconds = args.f64_of("fault-spike-seconds");
+    cfg.fault_kill_replica = args.parse_as("fault-kill-replica").unwrap();
+    cfg.fault_kill_after = args.parse_as("fault-kill-after").unwrap();
     cfg.oversample = !args.flag("workload2");
     // CLI-scale corpus (full paper scale lives in the benches)
     cfg.n_docs = 1200;
@@ -265,6 +285,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt("io-workers", "2", "transfer-engine I/O worker threads")
         .opt("io-demand-depth", "64", "transfer-engine demand queue bound")
         .opt("io-prefetch-depth", "64", "transfer-engine prefetch queue bound")
+        .opt("io-retries", "2", "transfer-engine retry bound for transient read errors")
         .opt("corpus-docs", "300", "retriever corpus size (0 = no /rag route)");
     let args = match cli.parse(argv) {
         Ok(a) => a,
@@ -287,6 +308,8 @@ fn cmd_serve(argv: &[String]) -> i32 {
         workers: args.usize_of("io-workers").max(1),
         demand_depth: args.usize_of("io-demand-depth").max(1),
         prefetch_depth: args.usize_of("io-prefetch-depth").max(1),
+        retries: args.parse_as("io-retries").unwrap(),
+        ..pcr::io::IoConfig::default()
     };
     let vocab = manifest.vocab as u32;
     let executor = match pcr::runtime::executor::ExecutorHandle::spawn(move || {

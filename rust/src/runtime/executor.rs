@@ -6,7 +6,7 @@
 use crate::cache::chunk::ChunkedSeq;
 use crate::cache::engine::{CacheConfig, CacheEngine};
 use crate::cache::policy::registry as policy_registry;
-use crate::cache::store::{ChunkStore, FileStore, MemStore};
+use crate::cache::store::{ChunkStore, FileStore, MemStore, StoreStats};
 use crate::cache::tier::Tier;
 use crate::io::{FetchSource, IoConfig, IoStats, Lane, TransferEngine};
 use crate::runtime::client::{PjrtModel, PrefillOut};
@@ -341,6 +341,22 @@ impl PjrtExecutor {
         self.io.as_ref().map(|io| io.stats())
     }
 
+    /// Keep spill files on shutdown so a restarted process reconciles
+    /// them instead of re-spilling from cold (deployment mode). Off by
+    /// default: tests and one-shot runs sweep their spill dirs.
+    pub fn set_spill_persist(&mut self, persist: bool) {
+        if let Some(ssd) = &self.ssd {
+            ssd.write().unwrap().set_persist(persist);
+        }
+    }
+
+    /// Spill-store error counters — fsync/delete failures, checksum
+    /// quarantines, vanished files (`None` without an SSD tier). The
+    /// handle is shared: it stays live across later puts/gets.
+    pub fn store_stats(&self) -> Option<StoreStats> {
+        self.ssd.as_ref().map(|s| s.read().unwrap().stats())
+    }
+
     /// Drop store bytes for chunks the metadata engine evicted.
     fn sync_stores(&mut self) {
         let dram_keys: Vec<_> = self
@@ -407,6 +423,9 @@ pub struct ExecStats {
     pub vocab: usize,
     /// Transfer-engine lane counters (`None` without an SSD tier).
     pub io: Option<IoStats>,
+    /// Total spill-store errors (fsync + delete + checksum + lost);
+    /// feeds the `store_errors` degradation metric.
+    pub store_errors: u64,
 }
 
 enum Job {
@@ -456,6 +475,9 @@ impl ExecutorHandle {
                                 cache: exec.cache.stats,
                                 vocab: exec.model.manifest.vocab,
                                 io: exec.io_stats(),
+                                store_errors: exec
+                                    .store_stats()
+                                    .map_or(0, |s| s.total()),
                             });
                         }
                     }

@@ -10,10 +10,12 @@
 
 use crate::cache::engine::{CacheConfig, CacheEngine, CacheStats};
 use crate::cache::prefetch;
+use crate::cache::prefix_tree::NodeId;
 use crate::cache::tier::Tier;
 use crate::config::ExperimentConfig;
 use crate::hw::spec::{model_spec, platform_spec, ModelSpec, PlatformSpec};
 use crate::hw::transfer::TransferFabric;
+use crate::io::fault::{FaultSession, Injected, Transient};
 use crate::io::{IoStats, Lane, VirtualLanes};
 use crate::serve::executor::SimExecutor;
 use crate::serve::metrics::{MetricsCollector, Report};
@@ -51,6 +53,8 @@ pub struct RunOutcome {
     pub prefetch_cancelled: u64,
     /// Dual-lane transfer counters for the SSD read resource.
     pub io: IoStats,
+    /// Faults injected by the harness (all zero without a fault plan).
+    pub injected: Injected,
     /// Mean chunks reused per tier per request.
     pub reused_gpu_chunks: u64,
     pub reused_dram_chunks: u64,
@@ -126,6 +130,12 @@ pub struct EngineCore {
     reused_gpu: u64,
     reused_dram: u64,
     reused_ssd: u64,
+    /// Seeded fault-injection session (None on healthy runs — the
+    /// entire degradation path is then a strict no-op).
+    faults: Option<FaultSession>,
+    /// Virtual retry budget for transient SSD read errors (mirrors
+    /// `IoConfig::retries` on the real path).
+    io_retry_limit: u32,
 }
 
 impl EngineCore {
@@ -180,6 +190,11 @@ impl EngineCore {
             reused_gpu: 0,
             reused_dram: 0,
             reused_ssd: 0,
+            faults: cfg
+                .fault_plan()
+                .filter(|p| p.enabled())
+                .map(FaultSession::new),
+            io_retry_limit: cfg.io_retries,
         }
     }
 
@@ -202,6 +217,19 @@ impl EngineCore {
     /// Open requests (queued + decoding) — the router's load signal.
     pub fn load(&self) -> usize {
         self.waiting.len() + self.decoding.len()
+    }
+
+    /// Take every open request (queued then decoding) out of the
+    /// engine, reset to freshly-queued — the failover path: a dying
+    /// replica's work is evacuated for re-routing. Its cache and
+    /// metrics stay as they were at the moment of failure.
+    pub fn evacuate(&mut self) -> Vec<Request> {
+        let mut out = self.waiting.drain_all();
+        out.append(&mut self.decoding);
+        for r in &mut out {
+            r.reset_for_retry();
+        }
+        out
     }
 
     /// One engine pass: look-ahead hints + prefetch submission, then
@@ -250,13 +278,69 @@ impl EngineCore {
         // round if nothing is waiting.
         if let Some(mut req) = self.waiting.pop() {
             req.started_at = Some(clock);
-            let plan = plan_movement(&mut self.cache, &req.chain);
+            let mut plan = plan_movement(&mut self.cache, &req.chain);
             if let Some(predicted) = req.routed_matched {
                 // the cluster directory promised `predicted` matched
                 // chunks when this request was placed; anything shorter
                 // means residency changed in between
                 if plan.matched.len() < predicted {
                     self.directory_stale += 1;
+                }
+            }
+
+            // fault-injection pre-pass (virtual-time twin of the real
+            // read path's degradation): decide per demand SSD load
+            // whether it is lost, corrupted, flaky, or spiked *before*
+            // booking transfers. Recoverable faults only add latency;
+            // an unreadable chunk is quarantined and the plan
+            // recomputed, so the request serves the shortened matched
+            // prefix and recomputes the rest — output unchanged.
+            let mut load_extra: Vec<(NodeId, f64)> = Vec::new();
+            if let Some(fs) = self.faults.clone() {
+                let mut cut = None;
+                for &id in &plan.ssd_nodes {
+                    let key = self.cache.tree.node(id).key;
+                    // lost checked first: a vanished copy can't also
+                    // fail its checksum
+                    if fs.lost(key) || fs.corrupted(key) {
+                        cut = Some(id);
+                        break;
+                    }
+                    let mut extra = 0.0;
+                    match fs.transient(key, self.io_retry_limit) {
+                        Transient::Clean => {}
+                        Transient::Recovered(n) => {
+                            self.metrics.degrade.retries += n as u64;
+                            self.lanes.stats.demand.retries += n as u64;
+                            let bytes = self.cache.tree.node(id).bytes;
+                            extra += n as f64 * self.lanes.copy_time(bytes);
+                        }
+                        Transient::Exhausted(n) => {
+                            self.metrics.degrade.retries += n as u64;
+                            self.lanes.stats.demand.retries += n as u64;
+                            cut = Some(id);
+                            break;
+                        }
+                    }
+                    if fs.spiked(key) {
+                        extra += fs.plan().spike_seconds;
+                    }
+                    if extra > 0.0 {
+                        load_extra.push((id, extra));
+                    }
+                }
+                if let Some(cid) = cut {
+                    self.metrics.degrade.degraded_loads += 1;
+                    self.metrics.degrade.quarantined_chunks += 1;
+                    // release the plan's pins, drop the unreadable
+                    // chunk (and its now-unreachable resident subtree),
+                    // then re-plan: the new plan matches only the
+                    // prefix before the cut, whose load decisions above
+                    // all came back readable
+                    unpin_plan(&mut self.cache, &plan);
+                    self.cache.quarantine(cid);
+                    plan = plan_movement(&mut self.cache, &req.chain);
+                    load_extra.retain(|(id, _)| plan.ssd_nodes.contains(id));
                 }
             }
 
@@ -295,7 +379,12 @@ impl EngineCore {
                         }
                     }
                 };
-                ssd_ready = ssd_ready.max(t);
+                // injected retry/spike latency for this load, if any
+                let extra = load_extra
+                    .iter()
+                    .find(|(n, _)| n == id)
+                    .map_or(0.0, |(_, e)| *e);
+                ssd_ready = ssd_ready.max(t + extra);
             }
 
             let step =
@@ -403,6 +492,10 @@ impl EngineCore {
     /// outcome struct every bench consumes.
     pub fn into_outcome(mut self) -> RunOutcome {
         self.metrics.io = self.lanes.stats;
+        let injected = self
+            .faults
+            .as_ref()
+            .map_or(Injected::default(), |f| f.injected());
         RunOutcome {
             system: self.spec.name,
             report: self.metrics.report(),
@@ -414,6 +507,7 @@ impl EngineCore {
             prefetch_dropped: self.prefetcher.dropped,
             prefetch_cancelled: self.prefetcher.cancelled,
             io: self.lanes.stats,
+            injected,
             reused_gpu_chunks: self.reused_gpu,
             reused_dram_chunks: self.reused_dram,
             reused_ssd_chunks: self.reused_ssd,
@@ -675,6 +769,109 @@ mod tests {
         assert_eq!(scc.io.prefetch.submitted, 0);
         assert!(scc.io.demand.submitted > 0, "sccache serves SSD demand reads");
         assert_eq!(scc.io.upgraded, 0);
+    }
+
+    #[test]
+    fn chaos_faults_never_lose_requests_and_counters_reconcile() {
+        // The headline robustness invariant: under ANY seeded fault
+        // plan, every request completes and emits the same token
+        // stream as the fault-free run — faults may only cost latency
+        // and hit ratio — and the degradation counters account for
+        // every injection the session made.
+        use crate::util::proptest::{check, forall};
+        use crate::util::rng::splitmix64;
+        let base = test_cfg("pcr", 0.8);
+        let wl = Workload::build(&base);
+        let spec = SystemSpec::named("pcr", base.prefetch_window).unwrap();
+        let clean = run(&base, &spec, &wl);
+        let mut injected_total = 0u64;
+        forall(
+            0xFA117,
+            5,
+            |rng| rng.below(1 << 32),
+            |&s| {
+                let mut st = s;
+                let mut cfg = test_cfg("pcr", 0.8);
+                cfg.fault_seed = splitmix64(&mut st);
+                cfg.fault_transient = (splitmix64(&mut st) % 16) as f64 / 100.0;
+                cfg.fault_transient_attempts = 1 + (splitmix64(&mut st) % 3) as u32;
+                cfg.fault_loss = (splitmix64(&mut st) % 8) as f64 / 100.0;
+                cfg.fault_corrupt = (splitmix64(&mut st) % 8) as f64 / 100.0;
+                cfg.fault_spike = (splitmix64(&mut st) % 10) as f64 / 100.0;
+                let a = run(&cfg, &spec, &wl);
+                let d = a.report.degrade;
+                let i = a.injected;
+                injected_total += i.lost + i.corrupted + i.retries + i.spikes;
+                check(
+                    a.report.finished == clean.report.finished,
+                    format!("lost requests: {} != {}", a.report.finished, clean.report.finished),
+                )?;
+                check(
+                    a.report.itl.n == clean.report.itl.n,
+                    "token stream changed under faults",
+                )?;
+                check(
+                    d.degraded_loads == i.degrading(),
+                    format!("degraded {} != injected {}", d.degraded_loads, i.degrading()),
+                )?;
+                check(
+                    d.quarantined_chunks == d.degraded_loads,
+                    "every degrading fault quarantines exactly one chunk",
+                )?;
+                check(d.retries == i.retries, "retry accounting diverged")?;
+                check(
+                    d.failovers == 0 && d.store_errors == 0,
+                    "virtual single-engine runs have no failovers/store errors",
+                )?;
+                // the faulted run must replay bit-for-bit under the
+                // same plan (the decisions are pure functions of it)
+                let b = run(&cfg, &spec, &wl);
+                check(a.report.ttft.mean == b.report.ttft.mean, "ttft replay diverged")?;
+                check(b.injected == i, "injection replay diverged")?;
+                check(b.report.degrade == d, "degrade replay diverged")?;
+                Ok(())
+            },
+        );
+        assert!(injected_total > 0, "chaos sweep never injected anything");
+    }
+
+    #[test]
+    fn total_ssd_loss_degrades_but_every_request_finishes() {
+        let spec = SystemSpec::named("pcr", 4).unwrap();
+        let base = test_cfg("pcr", 0.8);
+        let wl = Workload::build(&base);
+        let clean = run(&base, &spec, &wl);
+        let mut cfg = test_cfg("pcr", 0.8);
+        cfg.fault_loss = 1.0;
+        let out = run(&cfg, &spec, &wl);
+        assert_eq!(out.report.finished, 120, "loss must never fail a request");
+        assert!(out.injected.lost > 0, "no loss injected");
+        assert_eq!(out.report.degrade.degraded_loads, out.injected.degrading());
+        assert_eq!(
+            out.report.degrade.quarantined_chunks,
+            out.report.degrade.degraded_loads
+        );
+        // SSD reuse-through-load is gone; GPU/DRAM reuse survives
+        assert!(out.report.mean_reuse_ratio < clean.report.mean_reuse_ratio);
+        assert!(out.report.mean_reuse_ratio > 0.0);
+        assert!(out.report.pretty().contains("degrade loads="));
+    }
+
+    #[test]
+    fn latency_spikes_slow_but_never_degrade() {
+        let spec = SystemSpec::named("pcr", 4).unwrap();
+        let base = test_cfg("pcr", 0.8);
+        let wl = Workload::build(&base);
+        let clean = run(&base, &spec, &wl);
+        let mut cfg = test_cfg("pcr", 0.8);
+        cfg.fault_spike = 1.0;
+        cfg.fault_spike_seconds = 0.2;
+        let out = run(&cfg, &spec, &wl);
+        assert_eq!(out.report.finished, 120);
+        assert!(out.injected.spikes > 0, "no spikes served");
+        assert_eq!(out.injected.degrading(), 0);
+        assert!(!out.report.degrade.any(), "spikes are latency-only");
+        assert!(out.report.ttft.mean >= clean.report.ttft.mean);
     }
 
     #[test]

@@ -5,6 +5,43 @@ use crate::io::IoStats;
 use crate::serve::request::Request;
 use crate::util::stats::{Samples, Summary};
 
+/// Graceful-degradation counters: how often the cache path *failed
+/// to accelerate* and fell back to the always-correct recompute path
+/// (see the failure model in [`crate::io`]). All zero on a healthy
+/// run; under fault injection the chaos proptest reconciles these
+/// against the injection session's own counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DegradeStats {
+    /// SSD loads that degraded to recompute (lost + corrupted +
+    /// retries-exhausted chunks).
+    pub degraded_loads: u64,
+    /// Chunks evicted because their stored bytes were unreadable.
+    pub quarantined_chunks: u64,
+    /// Retry attempts spent on transient read errors.
+    pub retries: u64,
+    /// Requests re-routed off a failed replica (cluster runs only).
+    pub failovers: u64,
+    /// Store-level syscall errors absorbed (fsync, delete, lost files,
+    /// checksum sweeps) — surfaced from `StoreStats` on the real path.
+    pub store_errors: u64,
+}
+
+impl DegradeStats {
+    pub fn any(&self) -> bool {
+        self.degraded_loads + self.quarantined_chunks + self.retries + self.failovers
+            + self.store_errors
+            > 0
+    }
+
+    pub fn absorb(&mut self, other: &DegradeStats) {
+        self.degraded_loads += other.degraded_loads;
+        self.quarantined_chunks += other.quarantined_chunks;
+        self.retries += other.retries;
+        self.failovers += other.failovers;
+        self.store_errors += other.store_errors;
+    }
+}
+
 /// All samples collected over one serving run.
 #[derive(Clone, Debug, Default)]
 pub struct MetricsCollector {
@@ -19,6 +56,8 @@ pub struct MetricsCollector {
     pub finished: usize,
     /// Transfer-lane counters (set by the engine before `report`).
     pub io: IoStats,
+    /// Graceful-degradation counters (all zero on a healthy run).
+    pub degrade: DegradeStats,
 }
 
 impl MetricsCollector {
@@ -53,6 +92,13 @@ impl MetricsCollector {
         self.finished += 1;
     }
 
+    /// Surface store-layer error counts (the real path's `StoreStats`
+    /// totals) so they appear in the degradation block of the report.
+    /// Takes the running total — call once, right before `report`.
+    pub fn record_store_errors(&mut self, total: u64) {
+        self.degrade.store_errors = total;
+    }
+
     /// Merge another collector's samples and counters into this one —
     /// the cluster aggregation path (per-replica collectors fold into
     /// one fleet-wide report).
@@ -66,6 +112,7 @@ impl MetricsCollector {
         self.reuse_ratio.extend_from(&other.reuse_ratio);
         self.finished += other.finished;
         self.io.absorb(&other.io);
+        self.degrade.absorb(&other.degrade);
     }
 
     pub fn report(&mut self) -> Report {
@@ -79,6 +126,7 @@ impl MetricsCollector {
             retrieval: self.retrieval_time.summary(),
             mean_reuse_ratio: self.reuse_ratio.mean(),
             io: self.io,
+            degrade: self.degrade,
         }
     }
 }
@@ -97,6 +145,8 @@ pub struct Report {
     pub mean_reuse_ratio: f64,
     /// Dual-lane transfer counters (demand vs prefetch, upgrades).
     pub io: IoStats,
+    /// Graceful-degradation counters (all zero on a healthy run).
+    pub degrade: DegradeStats,
 }
 
 impl Report {
@@ -116,6 +166,13 @@ impl Report {
         if self.io.demand.submitted + self.io.prefetch.submitted > 0 {
             s.push_str("\n  ");
             s.push_str(&self.io.pretty().replace('\n', "\n  "));
+        }
+        if self.degrade.any() {
+            let d = &self.degrade;
+            s.push_str(&format!(
+                "\n  degrade loads={} quarantined={} retries={} failovers={} store_errors={}",
+                d.degraded_loads, d.quarantined_chunks, d.retries, d.failovers, d.store_errors
+            ));
         }
         s
     }
@@ -191,6 +248,30 @@ mod tests {
         assert_eq!(rep.retrieval.n, 8);
         assert_eq!(rep.io.upgraded, 7);
         assert_eq!(rep.io.demand.submitted, 7);
+    }
+
+    #[test]
+    fn degrade_counters_merge_and_print_only_when_nonzero() {
+        let mut a = MetricsCollector::new();
+        let mut b = MetricsCollector::new();
+        a.record(&finished_request(0.0, 1.0, 2.0));
+        b.record(&finished_request(1.0, 1.0, 2.0));
+        assert!(!a.report().degrade.any());
+        assert!(!a.report().pretty().contains("degrade"));
+        b.degrade.degraded_loads = 3;
+        b.degrade.quarantined_chunks = 2;
+        b.degrade.retries = 5;
+        b.degrade.failovers = 1;
+        a.record_store_errors(4);
+        a.absorb(&b);
+        let rep = a.report();
+        assert_eq!(rep.degrade.degraded_loads, 3);
+        assert_eq!(rep.degrade.quarantined_chunks, 2);
+        assert_eq!(rep.degrade.retries, 5);
+        assert_eq!(rep.degrade.failovers, 1);
+        assert_eq!(rep.degrade.store_errors, 4);
+        assert!(rep.degrade.any());
+        assert!(rep.pretty().contains("degrade loads=3"));
     }
 
     #[test]

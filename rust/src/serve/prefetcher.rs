@@ -354,6 +354,30 @@ mod tests {
     }
 
     #[test]
+    fn quarantined_targets_are_cancelled_not_promoted() {
+        let (mut cache, mut lanes) = setup();
+        let keys = chain(&mut cache, 10, 3);
+        let ids: Vec<NodeId> = keys.iter().map(|k| cache.tree.get(*k).unwrap()).collect();
+        let mut pf = SimPrefetcher::new();
+        pf.submit_targets(&cache, &mut lanes, 0.0, &ids, DEEP);
+        assert_eq!(pf.inflight_count(), 3);
+        // the middle chunk's stored copy turned out unreadable: the
+        // engine quarantines it and its resident subtree (ids[2] goes
+        // too — unreachable behind the hole)
+        cache.quarantine(ids[1]);
+        // loads start at 0/1/2s; at t=0.5 the reads for ids[1..] have
+        // not started — they cancel instead of promoting ghosts
+        let n = pf.cancel_stale(&cache, &mut lanes, 0.5);
+        assert_eq!(n, 2);
+        assert_eq!(pf.inflight_count(), 1);
+        // the started load for the still-resident ids[0] lands fine
+        pf.drain(&mut cache, &mut lanes, 10.0);
+        assert_eq!(pf.completed, 1);
+        assert_eq!(pf.dropped, 0);
+        cache.check_accounting().unwrap();
+    }
+
+    #[test]
     fn cancel_stale_drops_unstarted_loads_only() {
         let (mut cache, mut lanes) = setup();
         let keys = chain(&mut cache, 9, 3);

@@ -51,6 +51,12 @@ impl WaitingQueue {
     pub fn iter(&self) -> impl Iterator<Item = &Request> {
         self.items.iter()
     }
+
+    /// Take every queued request out, front-to-back (replica failover:
+    /// the queue's work is evacuated for re-routing).
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        self.items.drain(..).collect()
+    }
 }
 
 #[cfg(test)]

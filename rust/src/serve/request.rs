@@ -119,6 +119,25 @@ impl Request {
     pub fn total_tokens(&self) -> usize {
         self.tokens.len()
     }
+
+    /// Roll the request back to freshly-queued so it can be re-routed
+    /// after a replica failure. Arrival and queue timestamps survive —
+    /// TTFT/E2EL keep charging from the original admission, so a
+    /// failover shows up as latency, never as lost work.
+    pub fn reset_for_retry(&mut self) {
+        self.state = RequestState::Waiting;
+        self.started_at = None;
+        self.first_token_at = None;
+        self.finished_at = None;
+        self.itl.clear();
+        self.generated = 0;
+        self.routed_matched = None;
+        self.reused_tokens = 0;
+        self.computed_tokens = 0;
+        self.reused_from_gpu = 0;
+        self.reused_from_dram = 0;
+        self.reused_from_ssd = 0;
+    }
 }
 
 #[cfg(test)]
@@ -143,6 +162,28 @@ mod tests {
         assert!((r.e2el().unwrap() - 3.0).abs() < 1e-12);
         assert!((r.queue_time().unwrap() - 0.8).abs() < 1e-12);
         assert!((r.compute_time().unwrap() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_for_retry_keeps_admission_times() {
+        let mut r = req();
+        r.state = RequestState::Decoding;
+        r.started_at = Some(11.0);
+        r.first_token_at = Some(12.5);
+        r.itl = vec![0.02; 5];
+        r.generated = 6;
+        r.reused_tokens = 512;
+        r.routed_matched = Some(2);
+        r.reset_for_retry();
+        assert_eq!(r.state, RequestState::Waiting);
+        assert_eq!(r.ttft(), None);
+        assert!(r.itl.is_empty());
+        assert_eq!(r.generated, 0);
+        assert_eq!(r.reused_tokens, 0);
+        assert_eq!(r.routed_matched, None);
+        // latency still charges from the original admission
+        assert_eq!(r.arrival, 10.0);
+        assert_eq!(r.queued_at, 10.2);
     }
 
     #[test]
