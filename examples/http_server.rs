@@ -8,7 +8,7 @@ use pcr::rag::retriever::Retriever;
 use pcr::rag::tokenizer::Tokenizer;
 use pcr::runtime::executor::{ExecutorHandle, PjrtExecutor};
 use pcr::runtime::manifest::{default_artifacts_dir, Manifest};
-use pcr::serve::server::{http_request, HttpServer, ServerState};
+use pcr::serve::server::{http_request, http_request_text, HttpServer, ServerState};
 use pcr::util::json::Json;
 use pcr::util::stats::Samples;
 use std::sync::atomic::Ordering;
@@ -85,6 +85,20 @@ fn main() -> anyhow::Result<()> {
     let (_, stats) = http_request(&addr, "GET", "/stats", "")?;
     println!("\n/stats: {stats}");
     println!("total reused tokens across clients: {total_reused}");
+
+    // Prometheus scrape: the same counters in text exposition format,
+    // ready for a scrape config pointed at this port.
+    let (code, scrape) = http_request_text(&addr, "GET", "/metrics", "")?;
+    anyhow::ensure!(code == 200, "metrics scrape failed: {code}");
+    for series in [
+        "pcr_requests_total",
+        "pcr_ttft_seconds_mean",
+        "pcr_cache_hit_ratio",
+        "pcr_degrade_store_errors_total",
+    ] {
+        anyhow::ensure!(scrape.contains(series), "scrape missing {series}:\n{scrape}");
+    }
+    println!("\n/metrics:\n{}", scrape.trim_end());
 
     stop.store(true, Ordering::SeqCst);
     handle.join().unwrap()?;

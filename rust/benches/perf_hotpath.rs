@@ -14,12 +14,15 @@
 //! Plus the §Robustness fault-injection sweep (fault rate × TTFT ×
 //! degradation counters, and the checksum overhead of the integrity
 //! trailer on the fault-free path — emitted as
-//! `BENCH_fault_injection.json`).
+//! `BENCH_fault_injection.json`), and the §Observability TTFT
+//! attribution table (per-stage breakdown per system + the tracing
+//! overhead gate — emitted as `BENCH_ttft_breakdown.json`).
 //!
 //! Args (after `cargo bench --bench perf_hotpath --`):
 //!   --eviction-pressure   run only the eviction-pressure section
 //!   --cluster-routing     run only the cluster router sweep
 //!   --fault-sweep         run only the fault-injection sweep
+//!   --ttft-breakdown      run only the TTFT attribution section
 //!   --smoke               small trees + short timing (CI smoke mode)
 
 use pcr::bench::{black_box, section, Bench};
@@ -385,11 +388,140 @@ fn fault_sweep(smoke: bool) {
     println!("  -> wrote {path}");
 }
 
+/// §Observability: per-stage TTFT attribution across the evaluated
+/// systems — the runnable analog of paper Table 1. Per system it
+/// asserts the exact-reconciliation invariant (stages sum to TTFT
+/// within 1e-9) and prints/records the mean stage split. Then the
+/// tracing cost probe: a traced run must leave virtual time
+/// bit-identical, and the ring-sink wall-time overhead on the full
+/// engine step is measured against the null-sink path. Emits
+/// `BENCH_ttft_breakdown.json` (CI uploads it as an artifact).
+fn ttft_breakdown(smoke: bool) {
+    use pcr::config::ExperimentConfig;
+    use pcr::serve::system::SystemSpec;
+    use pcr::serve::workload::Workload;
+    use pcr::util::fmt_secs;
+
+    section("obs: TTFT breakdown — retrieval/queue/stall/compute per system");
+    let (n_inputs, n_requests) = if smoke { (40, 120) } else { (150, 600) };
+    let base = ExperimentConfig {
+        model: "llama2-7b".into(),
+        platform: "a6000".into(),
+        system: "pcr".into(),
+        n_inputs,
+        n_requests,
+        oversample: true,
+        rate: 0.8,
+        n_docs: 150,
+        n_topics: 12,
+        mean_doc_tokens: 600,
+        query_tokens: 48,
+        chunk_tokens: 256,
+        gpu_bytes: 2 * (1 << 30),
+        dram_bytes: 6 * (1 << 30),
+        ssd_bytes: 40 * (1 << 30),
+        ..Default::default()
+    };
+    base.validate().expect("bench config");
+    let wl = Workload::build(&base);
+    println!(
+        "  {} requests over {} inputs, repetition {:.1}%",
+        wl.len(),
+        wl.n_distinct_inputs,
+        wl.repetition_ratio * 100.0
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for name in SystemSpec::NAMES {
+        let spec = SystemSpec::try_named(name, base.prefetch_window).expect("registered system");
+        let out = pcr::serve::engine::run(&base, &spec, &wl);
+        let residual = out.attribution.max_residual();
+        assert!(
+            residual < 1e-9,
+            "breakdown stages must reconcile with TTFT ({name}: {residual:e})"
+        );
+        let b = out.report.ttft_breakdown;
+        println!(
+            "  {name:<8} ttft {}  retr {}  queue {}  stall {}  comp {}  hidden {}",
+            fmt_secs(b.ttft),
+            fmt_secs(b.retrieval),
+            fmt_secs(b.queue),
+            fmt_secs(b.load_stall),
+            fmt_secs(b.compute),
+            fmt_secs(b.hidden),
+        );
+        let mut row = b.to_json();
+        row.set("system", name.into());
+        row.set("max_residual", residual.into());
+        rows.push(row);
+    }
+
+    section("obs: tracing overhead — null sink vs ring sink on the engine step");
+    let spec = SystemSpec::try_named("pcr", base.prefetch_window).expect("registered system");
+    let mut cfg_on = base.clone();
+    cfg_on.obs_trace = true;
+    // zero-perturbation gate first: tracing must not move the clock
+    let off = pcr::serve::engine::run(&base, &spec, &wl);
+    let on = pcr::serve::engine::run(&cfg_on, &spec, &wl);
+    assert_eq!(
+        off.report.ttft.mean.to_bits(),
+        on.report.ttft.mean.to_bits(),
+        "tracing must not perturb the virtual clock"
+    );
+    let reps = if smoke { 3 } else { 10 };
+    let time = |cfg: &ExperimentConfig| {
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            black_box(pcr::serve::engine::run(cfg, &spec, &wl).report.finished);
+        }
+        t0.elapsed().as_secs_f64() / reps as f64
+    };
+    let t_off = time(&base);
+    let t_on = time(&cfg_on);
+    let overhead_pct = 100.0 * (t_on / t_off - 1.0);
+    println!(
+        "  {} events traced; run {:.1} ms off / {:.1} ms on -> overhead {overhead_pct:+.2}%",
+        on.trace.len(),
+        t_off * 1e3,
+        t_on * 1e3
+    );
+
+    let doc = Json::from_pairs(vec![
+        ("bench", "ttft_breakdown".into()),
+        ("smoke", smoke.into()),
+        (
+            "workload",
+            format!(
+                "{} requests over {} inputs, oversampled, rate 0.8 req/s",
+                n_requests, n_inputs
+            )
+            .into(),
+        ),
+        ("rows", rows.into()),
+        (
+            "trace_overhead",
+            Json::from_pairs(vec![
+                ("run_s_trace_off", t_off.into()),
+                ("run_s_trace_on", t_on.into()),
+                ("overhead_pct", overhead_pct.into()),
+                ("events_traced", on.trace.len().into()),
+                ("virtual_time_bit_identical", true.into()),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_ttft_breakdown.json";
+    std::fs::write(path, doc.dump() + "\n").expect("write bench json");
+    println!("  -> wrote {path}");
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
     if args.iter().any(|a| a == "--eviction-pressure") {
         eviction_pressure(smoke);
+        return;
+    }
+    if args.iter().any(|a| a == "--ttft-breakdown") {
+        ttft_breakdown(smoke);
         return;
     }
     if args.iter().any(|a| a == "--cluster-routing") {
@@ -591,6 +723,7 @@ fn main() {
 
     cluster_routing(smoke);
     fault_sweep(smoke);
+    ttft_breakdown(smoke);
 }
 
 /// Helper: eviction benchmark needs per-iteration setup (each eviction

@@ -9,6 +9,7 @@ use crate::cache::policy::{registry, EvictionPolicy};
 use crate::cache::prefix_tree::{NodeId, PrefixTree};
 use crate::cache::tier::{Tier, TierUsage};
 use crate::cache::victim_index::VictimIndex;
+use crate::obs::trace::{Kind, Phase, TraceEvent, Track};
 
 /// Capacity/policy configuration of one cache engine instance. A tier
 /// with zero capacity is disabled (e.g. the vLLM baseline has DRAM=0,
@@ -134,6 +135,14 @@ pub struct CacheEngine {
     /// [`take_events`](CacheEngine::take_events) — with `track_events`
     /// on and no consumer, this grows without bound.
     pub events: Vec<CacheEvent>,
+    /// Observability feed, independent of [`track_events`]: when `Some`
+    /// (the serving engine sets it iff tracing is on), every cache
+    /// transition pushes a [`TraceEvent`] with a placeholder timestamp;
+    /// the owner stamps the virtual clock and forwards to its tracer
+    /// after each step. `None` (the default) costs one branch per hook.
+    ///
+    /// [`track_events`]: CacheEngine::track_events
+    pub obs: Option<Vec<TraceEvent>>,
     sweep_countdown: u32,
 }
 
@@ -170,7 +179,24 @@ impl CacheEngine {
             use_indexed_eviction: true,
             track_events: false,
             events: Vec::new(),
+            obs: None,
             sweep_countdown: SWEEP_PERIOD,
+        }
+    }
+
+    /// Push one cache transition onto the observability feed (no-op
+    /// when tracing is off). Timestamps are placeholders — the owning
+    /// engine stamps its virtual clock when it drains the buffer.
+    #[inline]
+    fn obs_push(&mut self, kind: Kind, id: u64) {
+        if let Some(buf) = self.obs.as_mut() {
+            buf.push(TraceEvent {
+                t: 0.0,
+                track: Track::Cache,
+                kind,
+                id,
+                phase: Phase::Instant,
+            });
         }
     }
 
@@ -193,6 +219,10 @@ impl CacheEngine {
             out.from[tier.idx()] += 1;
             self.stats.hit_chunks[tier.idx()] += 1;
             self.stats.hit_bytes[tier.idx()] += self.tree.node(id).bytes;
+            if self.obs.is_some() {
+                let key = self.tree.node(id).key.0;
+                self.obs_push(Kind::CacheHit, key);
+            }
             out.tiers.push(tier);
             out.nodes.push(id);
         }
@@ -237,6 +267,7 @@ impl CacheEngine {
             if self.track_events {
                 self.events.push(CacheEvent::Gone(key));
             }
+            self.obs_push(Kind::CacheEvict, key.0);
             self.maybe_sweep();
         }
         Some(victim)
@@ -289,6 +320,7 @@ impl CacheEngine {
             if self.track_events {
                 self.events.push(CacheEvent::Resident(key));
             }
+            self.obs_push(Kind::CacheInsert, key.0);
         }
         Some(id)
     }
@@ -318,6 +350,10 @@ impl CacheEngine {
         if was_absent && self.track_events {
             self.events.push(CacheEvent::Resident(self.tree.node(id).key));
         }
+        if self.obs.is_some() {
+            let key = self.tree.node(id).key.0;
+            self.obs_push(Kind::CachePromote, key);
+        }
         true
     }
 
@@ -334,6 +370,7 @@ impl CacheEngine {
         if fully_gone && self.track_events {
             self.events.push(CacheEvent::Gone(key));
         }
+        self.obs_push(Kind::CacheDemote, key.0);
     }
 
     /// Drain pending residency transitions (the cluster directory's
@@ -457,6 +494,7 @@ impl CacheEngine {
             if self.track_events {
                 self.events.push(CacheEvent::Gone(key));
             }
+            self.obs_push(Kind::CacheQuarantine, key.0);
         }
         // Sweep bookkeeping after all removals so an eager sweep can
         // never erase a node the loop still has to visit.
@@ -810,6 +848,46 @@ mod tests {
         insert_chain(&mut e, &chain_of(1, 1), Tier::Dram);
         assert!(!e.track_events);
         assert!(e.take_events().is_empty());
+    }
+
+    #[test]
+    fn obs_feed_covers_every_cache_transition() {
+        // off by default: nothing allocated, nothing recorded
+        let mut e = CacheEngine::new(cfg(0, 200, 1000));
+        insert_chain(&mut e, &chain_of(9, 1), Tier::Dram);
+        assert!(e.obs.is_none());
+        // on: each transition pushes a placeholder-stamped instant
+        e.obs = Some(Vec::new());
+        let c = chain_of(1, 2);
+        let ids = insert_chain(&mut e, &c, Tier::Ssd);
+        e.lookup(&c);
+        e.promote(ids[0], Tier::Dram);
+        e.demote(ids[0], Tier::Dram);
+        insert_chain(&mut e, &chain_of(2, 1), Tier::Dram); // evicts chunk 9
+        insert_chain(&mut e, &chain_of(3, 1), Tier::Dram);
+        e.quarantine(ids[0]);
+        let kinds: std::collections::BTreeSet<&str> = e
+            .obs
+            .as_ref()
+            .unwrap()
+            .iter()
+            .map(|ev| ev.kind.name())
+            .collect();
+        for want in [
+            "cache_insert",
+            "cache_hit",
+            "cache_promote",
+            "cache_demote",
+            "cache_evict",
+            "cache_quarantine",
+        ] {
+            assert!(kinds.contains(want), "missing {want} in {kinds:?}");
+        }
+        for ev in e.obs.as_ref().unwrap() {
+            assert_eq!(ev.track, Track::Cache);
+            assert_eq!(ev.phase, Phase::Instant);
+        }
+        e.check_accounting().unwrap();
     }
 
     /// Property: after an arbitrary interleaving of inserts, lookups,

@@ -12,6 +12,7 @@ use crate::cluster::directory::PrefixDirectory;
 use crate::cluster::replica::Replica;
 use crate::cluster::router::{registry, RoutingPolicy};
 use crate::config::ExperimentConfig;
+use crate::obs::trace::{Kind, Phase, TraceEvent, Track};
 use crate::serve::engine::RunOutcome;
 use crate::serve::metrics::{MetricsCollector, Report};
 use crate::serve::request::Request;
@@ -233,6 +234,16 @@ fn route_one(
     let pos = router.route(&req.chain.keys, &views, directory).min(views.len() - 1);
     let target = views[pos].id;
     req.routed_matched = Some(directory.matched_prefix_one(target, &req.chain.keys));
+    // routing decisions land on the chosen replica's router track, at
+    // the virtual instant the request became routable
+    let (rid, t) = (req.id, req.queued_at);
+    replicas[target].core.tracer.emit(|| TraceEvent {
+        t,
+        track: Track::Router,
+        kind: Kind::Route,
+        id: rid,
+        phase: Phase::Instant,
+    });
     replicas[target].enqueue(req);
 }
 
@@ -414,6 +425,60 @@ mod tests {
         assert_eq!(out.aggregate.finished, 120);
         assert_eq!(out.failovers, 0);
         assert_eq!(out.replicas[0].report.finished, 120);
+    }
+
+    #[test]
+    fn cluster_traces_carry_routing_and_failover_events() {
+        let mut cfg = test_cfg(2.0);
+        cfg.obs_trace = true;
+        cfg.fault_kill_replica = 1;
+        cfg.fault_kill_after = 60;
+        let wl = Workload::build(&cfg);
+        let spec = pcr_spec(&cfg);
+        let a = run_with(&cfg, &spec, &wl, 3, registry::parse("round-robin").unwrap());
+        let b = run_with(&cfg, &spec, &wl, 3, registry::parse("round-robin").unwrap());
+        assert!(a.failovers > 0);
+        for (ra, rb) in a.replicas.iter().zip(&b.replicas) {
+            assert_eq!(ra.trace, rb.trace, "same seed must replay byte-identically");
+        }
+        // every live replica saw routing decisions; the killed one
+        // recorded the evacuation of its open requests
+        for (i, rep) in a.replicas.iter().enumerate() {
+            if i == 1 {
+                assert!(rep.trace.iter().any(|e| e.kind == Kind::Failover), "replica {i}");
+            } else {
+                assert!(rep.trace.iter().any(|e| e.kind == Kind::Route), "replica {i}");
+            }
+        }
+        // the fleet export is one Chrome doc, one pid per replica
+        let views: Vec<(usize, &[TraceEvent])> =
+            a.replicas.iter().enumerate().map(|(i, r)| (i, r.trace.as_slice())).collect();
+        let views_b: Vec<(usize, &[TraceEvent])> =
+            b.replicas.iter().enumerate().map(|(i, r)| (i, r.trace.as_slice())).collect();
+        let doc = crate::obs::trace::chrome_trace(&views);
+        assert_eq!(doc.dump(), crate::obs::trace::chrome_trace(&views_b).dump());
+    }
+
+    /// Breakdown rows stay exact under failover: an evacuated request
+    /// re-runs its prefill on a survivor, so attempts may outnumber
+    /// finishes, but every row still reconciles against its own TTFT.
+    #[test]
+    fn failover_breakdown_rows_reconcile() {
+        let mut cfg = test_cfg(2.0);
+        cfg.fault_kill_replica = 1;
+        cfg.fault_kill_after = 60;
+        let wl = Workload::build(&cfg);
+        let spec = pcr_spec(&cfg);
+        let out = run_with(&cfg, &spec, &wl, 3, registry::parse("round-robin").unwrap());
+        assert!(out.failovers > 0);
+        let mut rows = 0usize;
+        for rep in &out.replicas {
+            assert!(rep.attribution.max_residual() < 1e-9);
+            rows += rep.attribution.rows.len();
+        }
+        assert!(rows >= out.aggregate.finished, "{rows} rows < {}", out.aggregate.finished);
+        assert!(out.aggregate.ttft_breakdown.any());
+        assert!(out.aggregate.ttft_breakdown.n >= out.aggregate.finished);
     }
 
     #[test]

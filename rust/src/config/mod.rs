@@ -91,6 +91,22 @@ pub struct ExperimentConfig {
     /// Cluster: the kill fires once this many requests were routed.
     pub fault_kill_after: u64,
 
+    // --- observability (`[obs]` section; all off by default) ---
+    /// Record per-request spans and cache/io/cluster events into the
+    /// trace ring (exportable as Chrome trace JSON via `--trace-out`).
+    pub obs_trace: bool,
+    /// Trace ring capacity in events; the oldest are dropped (and
+    /// counted) beyond it.
+    pub obs_trace_capacity: usize,
+    /// Sample periodic telemetry gauges (tier occupancy, queue depth,
+    /// inflight prefetches, windowed hit ratio).
+    pub obs_timeline: bool,
+    /// Gauge sampling interval, virtual seconds.
+    pub obs_timeline_interval: f64,
+    /// Flight-recorder depth: events snapshotted when a degrade or
+    /// failover fires (0 disables; needs `obs.trace` for a feed).
+    pub obs_flight_depth: usize,
+
     // --- cluster serving (`[cluster]` section) ---
     /// Serving replicas driven by `cluster::sim` (1 = the single-engine
     /// path). Bounded by the directory's replica-set word width (64).
@@ -159,6 +175,11 @@ impl Default for ExperimentConfig {
             fault_spike_seconds: 0.05,
             fault_kill_replica: -1,
             fault_kill_after: 0,
+            obs_trace: false,
+            obs_trace_capacity: 65536,
+            obs_timeline: false,
+            obs_timeline_interval: 0.5,
+            obs_flight_depth: 64,
             replicas: 1,
             router: "prefix-affinity".into(),
             n_inputs: 1000,
@@ -232,6 +253,11 @@ impl ExperimentConfig {
             "faults.spike_seconds" => self.fault_spike_seconds = need_f64()?,
             "faults.kill_replica" => self.fault_kill_replica = need_f64()? as i64,
             "faults.kill_after" => self.fault_kill_after = need_f64()? as u64,
+            "obs.trace" => self.obs_trace = need_bool()?,
+            "obs.trace_capacity" => self.obs_trace_capacity = need_f64()? as usize,
+            "obs.timeline" => self.obs_timeline = need_bool()?,
+            "obs.timeline_interval" => self.obs_timeline_interval = need_f64()?,
+            "obs.flight_depth" => self.obs_flight_depth = need_f64()? as usize,
             "cluster.replicas" => self.replicas = need_f64()? as usize,
             "cluster.router" => self.router = need_str()?,
             "workload.n_inputs" => self.n_inputs = need_f64()? as usize,
@@ -333,6 +359,15 @@ impl ExperimentConfig {
         }
         if self.fault_spike_seconds < 0.0 {
             bail!("faults.spike_seconds must be >= 0");
+        }
+        if self.obs_trace && self.obs_trace_capacity == 0 {
+            bail!("obs.trace_capacity must be >= 1 when obs.trace is on");
+        }
+        if self.obs_timeline && self.obs_timeline_interval <= 0.0 {
+            bail!(
+                "obs.timeline_interval must be > 0 (got {})",
+                self.obs_timeline_interval
+            );
         }
         if self.fault_kill_replica >= 0
             && self.fault_kill_replica as usize >= self.replicas
@@ -562,6 +597,35 @@ spike_seconds = 0.2
         assert_eq!(plan.kill_replica, Some(1));
         assert!(!plan.enabled(), "no chunk-level faults");
         assert!(plan.any());
+    }
+
+    #[test]
+    fn obs_section_keys() {
+        // off by default: runs stay un-instrumented unless asked
+        let d = ExperimentConfig::default();
+        assert!(!d.obs_trace && !d.obs_timeline);
+        let text = r#"
+[obs]
+trace = true
+trace_capacity = 1024
+timeline = true
+timeline_interval = 0.25
+flight_depth = 32
+"#;
+        let map = file::parse(text).unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply(&map).unwrap();
+        assert!(cfg.obs_trace);
+        assert_eq!(cfg.obs_trace_capacity, 1024);
+        assert!(cfg.obs_timeline);
+        assert!((cfg.obs_timeline_interval - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.obs_flight_depth, 32);
+        cfg.validate().unwrap();
+        cfg.obs_trace_capacity = 0;
+        assert!(cfg.validate().is_err(), "zero-capacity ring rejected");
+        cfg.obs_trace_capacity = 1024;
+        cfg.obs_timeline_interval = 0.0;
+        assert!(cfg.validate().is_err(), "zero interval rejected");
     }
 
     #[test]

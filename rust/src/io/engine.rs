@@ -193,6 +193,7 @@ impl TransferEngine {
                 e.lane = Lane::Demand;
                 e.upgraded = true;
                 st.stats.upgraded += 1;
+                crate::log_trace!("upgrade {:016x} to demand priority", key.0);
                 self.shared.work.notify_all();
                 return Submit::Upgraded;
             }
@@ -205,6 +206,7 @@ impl TransferEngine {
         };
         if full {
             st.stats.lane_mut(lane).rejected += 1;
+            crate::log_debug!("{} lane full, rejected {:016x}", lane.name(), key.0);
             return Submit::Rejected;
         }
         let token = CancelToken::new();
@@ -346,6 +348,7 @@ fn worker_entry(shared: &Shared, source: &dyn FetchSource, wid: usize, cfg: IoCo
         match exited {
             Ok(()) => return, // clean shutdown
             Err(_) => {
+                crate::log_warn!("io worker {wid} respawned after a source panic");
                 let mut st = lock(&shared.state);
                 st.stats.worker_respawns += 1;
                 if let Some(key) = st.executing[wid].take() {
@@ -416,6 +419,12 @@ fn worker_loop(shared: &Shared, source: &dyn FetchSource, wid: usize, cfg: IoCon
         let mut retries = 0u32;
         let mut fetched = source.fetch(ticket.key);
         while fetched.is_err() && retries < cfg.retries && !token.is_cancelled() {
+            crate::log_debug!(
+                "transient read error on {:016x}, retry {}/{}",
+                ticket.key.0,
+                retries + 1,
+                cfg.retries
+            );
             let backoff = cfg.retry_backoff_ms << retries.min(6);
             if backoff > 0 {
                 std::thread::sleep(Duration::from_millis(backoff));
@@ -453,10 +462,12 @@ fn worker_loop(shared: &Shared, source: &dyn FetchSource, wid: usize, cfg: IoCon
                 }
                 Ok(None) => {
                     s.failed += 1;
+                    crate::log_debug!("chunk {:016x} missing from source", ticket.key.0);
                     Err(anyhow!("chunk {:016x} missing from source", ticket.key.0))
                 }
                 Err(e) => {
                     s.failed += 1;
+                    crate::log_debug!("read of {:016x} failed: {e:#}", ticket.key.0);
                     Err(e)
                 }
             }

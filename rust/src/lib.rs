@@ -59,6 +59,7 @@ pub mod cluster;
 pub mod config;
 pub mod hw;
 pub mod io;
+pub mod obs;
 pub mod rag;
 pub mod runtime;
 pub mod serve;

@@ -15,8 +15,11 @@ use pcr::config::ExperimentConfig;
 use pcr::serve::system::SystemSpec;
 use pcr::serve::workload::Workload;
 use pcr::serve::{engine, server};
-use pcr::util::cli::Cli;
+use pcr::obs::timeline::{samples_to_csv, samples_to_json, TimelineSample};
+use pcr::obs::trace::{chrome_trace, TraceEvent};
+use pcr::util::cli::{Args, Cli};
 use pcr::util::fmt_secs;
+use pcr::util::logging::{self, Level};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -81,10 +84,63 @@ fn experiment_flags(cli: Cli) -> Cli {
         .opt("fault-spike-seconds", "0.05", "added latency per injected spike")
         .opt("fault-kill-replica", "-1", "replica to kill mid-run (cluster; -1 = none)")
         .opt("fault-kill-after", "0", "routed requests before the kill fires")
+        .opt("log", "", "log level (error|warn|info|debug|trace); overrides the PCR_LOG env var")
+        .opt("trace-out", "", "write the run as Chrome trace-event JSON (enables [obs] tracing; open in Perfetto)")
+        .opt("timeline-out", "", "write telemetry gauges (.csv suffix = CSV, else JSON; enables [obs] timeline)")
         .switch("workload2", "sample without replacement (workload 2)")
 }
 
-fn build_config(args: &pcr::util::cli::Args) -> ExperimentConfig {
+/// Apply `--log <level>` (satellite of the obs PR): an explicit flag
+/// beats the `PCR_LOG` environment variable.
+fn apply_log_flag(args: &Args) {
+    if let Some(s) = args.get("log").filter(|s| !s.is_empty()) {
+        match Level::parse(s) {
+            Some(l) => logging::set_level(l),
+            None => {
+                eprintln!("invalid --log level '{s}' (error|warn|info|debug|trace)");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// Write one Chrome trace-event JSON doc (`pid` per replica).
+fn write_trace(path: &str, replicas: &[(usize, &[TraceEvent])], dropped: u64) -> bool {
+    let n: usize = replicas.iter().map(|(_, evs)| evs.len()).sum();
+    let doc = chrome_trace(replicas);
+    match std::fs::write(path, doc.dump() + "\n") {
+        Ok(()) => {
+            println!("trace: {n} events -> {path} ({dropped} dropped by the ring)");
+            true
+        }
+        Err(e) => {
+            eprintln!("error writing trace {path}: {e}");
+            false
+        }
+    }
+}
+
+/// Write telemetry samples: CSV for `.csv` paths, JSON otherwise.
+fn write_timeline(path: &str, samples: &[TimelineSample]) -> bool {
+    let body = if path.ends_with(".csv") {
+        samples_to_csv(samples)
+    } else {
+        samples_to_json(samples).dump() + "\n"
+    };
+    match std::fs::write(path, body) {
+        Ok(()) => {
+            println!("timeline: {} samples -> {path}", samples.len());
+            true
+        }
+        Err(e) => {
+            eprintln!("error writing timeline {path}: {e}");
+            false
+        }
+    }
+}
+
+fn build_config(args: &Args) -> ExperimentConfig {
+    apply_log_flag(args);
     let mut cfg = ExperimentConfig::default();
     if let Some(path) = args.get("config").filter(|p| !p.is_empty()) {
         cfg = ExperimentConfig::from_file(path).unwrap_or_else(|e| {
@@ -120,6 +176,13 @@ fn build_config(args: &pcr::util::cli::Args) -> ExperimentConfig {
     cfg.fault_kill_replica = args.parse_as("fault-kill-replica").unwrap();
     cfg.fault_kill_after = args.parse_as("fault-kill-after").unwrap();
     cfg.oversample = !args.flag("workload2");
+    // asking for an artifact implies turning the recorder on
+    if args.get("trace-out").is_some_and(|p| !p.is_empty()) {
+        cfg.obs_trace = true;
+    }
+    if args.get("timeline-out").is_some_and(|p| !p.is_empty()) {
+        cfg.obs_timeline = true;
+    }
     // CLI-scale corpus (full paper scale lives in the benches)
     cfg.n_docs = 1200;
     cfg.mean_doc_tokens = 1600;
@@ -170,6 +233,16 @@ fn cmd_sim(argv: &[String]) -> i32 {
         out.prefetch_submitted,
         out.prefetch_dropped
     );
+    if let Some(path) = args.get("trace-out").filter(|p| !p.is_empty()) {
+        if !write_trace(path, &[(0, out.trace.as_slice())], out.trace_dropped) {
+            return 1;
+        }
+    }
+    if let Some(path) = args.get("timeline-out").filter(|p| !p.is_empty()) {
+        if !write_timeline(path, &out.timeline) {
+            return 1;
+        }
+    }
     0
 }
 
@@ -271,6 +344,34 @@ fn cmd_cluster(argv: &[String]) -> i32 {
         out.directory_entries,
         out.directory_stale
     );
+    if let Some(path) = args.get("trace-out").filter(|p| !p.is_empty()) {
+        let views: Vec<(usize, &[TraceEvent])> = out
+            .replicas
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (i, r.trace.as_slice()))
+            .collect();
+        let dropped: u64 = out.replicas.iter().map(|r| r.trace_dropped).sum();
+        if !write_trace(path, &views, dropped) {
+            return 1;
+        }
+    }
+    if let Some(path) = args.get("timeline-out").filter(|p| !p.is_empty()) {
+        // fleet telemetry: one JSON array of samples per replica
+        let per_replica: Vec<pcr::util::json::Json> = out
+            .replicas
+            .iter()
+            .map(|r| samples_to_json(&r.timeline))
+            .collect();
+        let doc = pcr::util::json::Json::from_pairs(vec![("replicas", per_replica.into())]);
+        match std::fs::write(path, doc.dump() + "\n") {
+            Ok(()) => println!("timeline: {} replicas -> {path}", out.replicas.len()),
+            Err(e) => {
+                eprintln!("error writing timeline {path}: {e}");
+                return 1;
+            }
+        }
+    }
     0
 }
 
@@ -286,11 +387,13 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt("io-demand-depth", "64", "transfer-engine demand queue bound")
         .opt("io-prefetch-depth", "64", "transfer-engine prefetch queue bound")
         .opt("io-retries", "2", "transfer-engine retry bound for transient read errors")
-        .opt("corpus-docs", "300", "retriever corpus size (0 = no /rag route)");
+        .opt("corpus-docs", "300", "retriever corpus size (0 = no /rag route)")
+        .opt("log", "", "log level (error|warn|info|debug|trace); overrides the PCR_LOG env var");
     let args = match cli.parse(argv) {
         Ok(a) => a,
         Err(e) => return cli_err(&cli, e),
     };
+    apply_log_flag(&args);
     let manifest = match pcr::runtime::manifest::Manifest::load(
         pcr::runtime::manifest::default_artifacts_dir(),
     ) {
@@ -350,7 +453,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
         }
     };
     println!("pcr serving on http://{}", srv.local_addr().unwrap());
-    println!("routes: POST /generate {{\"tokens\":[..]}}, POST /rag {{\"query\":\"..\"}}, GET /stats");
+    println!("routes: POST /generate {{\"tokens\":[..]}}, POST /rag {{\"query\":\"..\"}}, GET /stats, GET /metrics (Prometheus)");
     if let Err(e) = srv.serve(args.usize_of("workers")) {
         eprintln!("server error: {e:#}");
         return 1;

@@ -1,0 +1,243 @@
+//! Per-request TTFT attribution — the runnable analog of the paper's
+//! Table 1 ("where does time-to-first-token go?").
+//!
+//! For every prefill the engine records one [`RequestBreakdown`] row
+//! splitting the attempt's TTFT into the stages of the serving
+//! pipeline. The split is exact by construction (see `serve::engine`):
+//!
+//! ```text
+//!   ttft = retrieval + queue + load_stall + compute + exposed
+//! ```
+//!
+//! * `retrieval`  — arrival → documents ready (queued).
+//! * `queue`      — queued → popped by the scheduler.
+//! * `load_stall` — SSD demand-load time the prefill waited on before
+//!   the first layer could start (`StepBreakdown::ssd_wait`).
+//! * `compute`    — pure prefill FLOP time.
+//! * `exposed`    — transfer time *not* hidden behind compute
+//!   (`pipeline − compute`): what the layer-wise overlap failed to
+//!   absorb.
+//! * `hidden`     — transfer time the overlap *did* absorb
+//!   (`upload + offload − exposed`). Reported for the overlap claim
+//!   but excluded from the reconciling sum — it never reached TTFT.
+//!
+//! Failover note: on a replica kill a re-routed request prefills
+//! again, so a cluster run records one row per *prefill attempt* —
+//! rows can outnumber finished requests. Each row still reconciles
+//! against its own attempt's TTFT within 1e-9 (pinned by a proptest).
+
+use crate::util::fmt_secs;
+use crate::util::json::Json;
+
+/// One prefill attempt's TTFT split (all fields virtual seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RequestBreakdown {
+    /// Request id (unique per request, repeated across retry attempts).
+    pub request: u64,
+    pub retrieval: f64,
+    pub queue: f64,
+    pub load_stall: f64,
+    pub compute: f64,
+    pub exposed: f64,
+    pub hidden: f64,
+    /// The attempt's TTFT (arrival → first token of this attempt).
+    pub ttft: f64,
+}
+
+impl RequestBreakdown {
+    /// Sum of the attributed stages — must equal `ttft` within 1e-9.
+    pub fn stage_sum(&self) -> f64 {
+        self.retrieval + self.queue + self.load_stall + self.compute + self.exposed
+    }
+
+    /// Attribution residual: |stage_sum − ttft|.
+    pub fn residual(&self) -> f64 {
+        (self.stage_sum() - self.ttft).abs()
+    }
+}
+
+/// Accumulates rows over a run; absorbable across cluster replicas.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TtftAttribution {
+    pub rows: Vec<RequestBreakdown>,
+}
+
+impl TtftAttribution {
+    pub fn record(&mut self, row: RequestBreakdown) {
+        self.rows.push(row);
+    }
+
+    pub fn absorb(&mut self, other: &TtftAttribution) {
+        self.rows.extend_from_slice(&other.rows);
+    }
+
+    /// Largest attribution residual over all rows (0 when empty) —
+    /// the reconciliation invariant's test probe.
+    pub fn max_residual(&self) -> f64 {
+        self.rows.iter().map(|r| r.residual()).fold(0.0, f64::max)
+    }
+
+    /// Mean seconds per stage over all recorded prefills.
+    pub fn summary(&self) -> BreakdownSummary {
+        let n = self.rows.len();
+        if n == 0 {
+            return BreakdownSummary::default();
+        }
+        let inv = 1.0 / n as f64;
+        let mut s = BreakdownSummary { n, ..BreakdownSummary::default() };
+        for r in &self.rows {
+            s.retrieval += r.retrieval * inv;
+            s.queue += r.queue * inv;
+            s.load_stall += r.load_stall * inv;
+            s.compute += r.compute * inv;
+            s.exposed += r.exposed * inv;
+            s.hidden += r.hidden * inv;
+            s.ttft += r.ttft * inv;
+        }
+        s
+    }
+}
+
+/// Mean per-stage seconds over a run — the `Report::pretty` block and
+/// the `BENCH_ttft_breakdown.json` row shape. `Copy` so `Report`
+/// stays `Copy`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BreakdownSummary {
+    /// Number of prefill attempts aggregated.
+    pub n: usize,
+    pub retrieval: f64,
+    pub queue: f64,
+    pub load_stall: f64,
+    pub compute: f64,
+    pub exposed: f64,
+    pub hidden: f64,
+    pub ttft: f64,
+}
+
+impl BreakdownSummary {
+    pub fn any(&self) -> bool {
+        self.n > 0
+    }
+
+    fn pct(&self, x: f64) -> f64 {
+        if self.ttft > 0.0 {
+            100.0 * x / self.ttft
+        } else {
+            0.0
+        }
+    }
+
+    /// One-line block for `Report::pretty`: mean seconds and share of
+    /// TTFT per stage, plus how much transfer the overlap hid.
+    pub fn pretty(&self) -> String {
+        format!(
+            "ttft = retr {} ({:.0}%) + queue {} ({:.0}%) + stall {} ({:.0}%) + comp {} ({:.0}%) \
+             + xfer {} ({:.0}%); overlap hid {} [{} prefills]",
+            fmt_secs(self.retrieval),
+            self.pct(self.retrieval),
+            fmt_secs(self.queue),
+            self.pct(self.queue),
+            fmt_secs(self.load_stall),
+            self.pct(self.load_stall),
+            fmt_secs(self.compute),
+            self.pct(self.compute),
+            fmt_secs(self.exposed),
+            self.pct(self.exposed),
+            fmt_secs(self.hidden),
+            self.n,
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("prefills", self.n.into()),
+            ("retrieval_s", self.retrieval.into()),
+            ("queue_s", self.queue.into()),
+            ("load_stall_s", self.load_stall.into()),
+            ("compute_s", self.compute.into()),
+            ("exposed_transfer_s", self.exposed.into()),
+            ("overlap_hidden_s", self.hidden.into()),
+            ("ttft_mean_s", self.ttft.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(request: u64, queue: f64, compute: f64) -> RequestBreakdown {
+        let (retrieval, load_stall, exposed) = (0.01, 0.05, 0.002);
+        RequestBreakdown {
+            request,
+            retrieval,
+            queue,
+            load_stall,
+            compute,
+            exposed,
+            hidden: 0.1,
+            ttft: retrieval + queue + load_stall + compute + exposed,
+        }
+    }
+
+    #[test]
+    fn rows_reconcile_and_summary_averages() {
+        let mut a = TtftAttribution::default();
+        a.record(row(0, 0.2, 1.0));
+        a.record(row(1, 0.4, 2.0));
+        assert!(a.max_residual() < 1e-12);
+        let s = a.summary();
+        assert_eq!(s.n, 2);
+        assert!((s.queue - 0.3).abs() < 1e-12);
+        assert!((s.compute - 1.5).abs() < 1e-12);
+        // summary means preserve the identity too
+        let sum = s.retrieval + s.queue + s.load_stall + s.compute + s.exposed;
+        assert!((sum - s.ttft).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_summary_is_inert() {
+        let a = TtftAttribution::default();
+        let s = a.summary();
+        assert!(!s.any());
+        assert_eq!(s.n, 0);
+        assert_eq!(s.ttft, 0.0);
+        assert_eq!(a.max_residual(), 0.0);
+    }
+
+    #[test]
+    fn absorb_merges_rows() {
+        let mut a = TtftAttribution::default();
+        let mut b = TtftAttribution::default();
+        a.record(row(0, 0.2, 1.0));
+        b.record(row(1, 0.4, 2.0));
+        b.record(row(2, 0.6, 3.0));
+        a.absorb(&b);
+        assert_eq!(a.rows.len(), 3);
+        assert_eq!(a.summary().n, 3);
+    }
+
+    #[test]
+    fn pretty_and_json_expose_every_stage() {
+        let mut a = TtftAttribution::default();
+        a.record(row(0, 0.2, 1.0));
+        let s = a.summary();
+        let p = s.pretty();
+        assert!(p.contains("ttft ="));
+        assert!(p.contains("overlap hid"));
+        assert!(p.contains("1 prefills"));
+        let j = s.to_json();
+        for k in [
+            "prefills",
+            "retrieval_s",
+            "queue_s",
+            "load_stall_s",
+            "compute_s",
+            "exposed_transfer_s",
+            "overlap_hidden_s",
+            "ttft_mean_s",
+        ] {
+            assert!(j.get(k).is_some(), "missing json key {k}");
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! # Observability: tracing, TTFT attribution, and telemetry
+//!
+//! Three building blocks, all driven by the engine's deterministic
+//! virtual clock so every artifact replays byte-identically at a
+//! fixed seed:
+//!
+//! * [`trace`] — bounded ring-buffer span/event recorder behind the
+//!   zero-cost [`TraceSink`] trait (null sink when disabled), exported
+//!   as Chrome trace-event JSON.
+//! * [`breakdown`] — per-request TTFT attribution
+//!   (`retrieval + queue + load_stall + compute + exposed = ttft`,
+//!   exact within 1e-9), aggregated into `Report::pretty` and
+//!   `BENCH_ttft_breakdown.json` — the runnable analog of the paper's
+//!   Table 1.
+//! * [`timeline`] — periodic gauge sampler (tier occupancy, queue
+//!   depth, inflight prefetches, windowed hit ratio) with CSV/JSON
+//!   dump, plus a flight recorder that snapshots the last-N events
+//!   when a degrade/failover counter fires.
+//!
+//! Configured by the `[obs]` TOML section (`obs.trace`,
+//! `obs.trace_capacity`, `obs.timeline`, `obs.timeline_interval`,
+//! `obs.flight_depth`) or the `--trace-out` / `--timeline-out` CLI
+//! flags, which enable the matching recorder and write the artifact
+//! after the run.
+//!
+//! # Event taxonomy
+//!
+//! | kind               | track           | phase     | meaning                                     |
+//! |--------------------|-----------------|-----------|---------------------------------------------|
+//! | `retrieval`        | `engine`        | b/e span  | arrival → documents ready (id = request)    |
+//! | `queue`            | `engine`        | b/e span  | queued → popped by the scheduler            |
+//! | `fault_prepass`    | `engine`        | instant   | fault pre-pass degraded/retried a plan      |
+//! | `kv_load`          | `lane:*`        | X span    | one SSD chunk load occupying a lane         |
+//! | `prefill`          | `engine`        | X span    | prefill attempt (dur = ssd_wait + pipeline) |
+//! | `decode_round`     | `engine`        | X span    | one batched decode round                    |
+//! | `cache_insert`     | `cache`         | instant   | chunk became resident (id = chunk key)      |
+//! | `cache_hit`        | `cache`         | instant   | lookup matched a resident chunk             |
+//! | `cache_evict`      | `cache`         | instant   | victim chunk left its last tier             |
+//! | `cache_promote`    | `cache`         | instant   | chunk copied up a tier                      |
+//! | `cache_demote`     | `cache`         | instant   | chunk dropped down / out of a tier          |
+//! | `cache_quarantine` | `cache`         | instant   | corrupt subtree cut after a failed read     |
+//! | `io_submit`        | `lane:prefetch` | instant   | prefetch enqueued (id = tree node)          |
+//! | `io_complete`      | `lane:prefetch` | instant   | prefetch landed, chunk promoted             |
+//! | `io_cancel`        | `lane:prefetch` | instant   | stale prefetch cancelled before start       |
+//! | `io_upgrade`       | `lane:demand`   | instant   | demand fetch upgraded an in-flight prefetch |
+//! | `route`            | `router`        | instant   | request routed to this replica              |
+//! | `failover`         | `router`        | instant   | open request re-routed off a dead replica   |
+//!
+//! In the Chrome export: `pid` = replica index, `tid` = track name,
+//! `ts`/`dur` = virtual seconds × 1e6 (the format's µs unit), and
+//! `args.id` carries the request/chunk id in hex.
+//!
+//! # Adding a new trace event
+//!
+//! 1. Add a variant to [`trace::Kind`] and its `name()` /
+//!    `category()` arms, and a row to the table above.
+//! 2. At the instrumentation site, call
+//!    `tracer.emit(|| TraceEvent { t, track, kind, id, phase })` —
+//!    always through the closure so the disabled path stays free.
+//!    Timestamps must come from the virtual clock (never wall time),
+//!    or same-seed traces stop being byte-identical and the
+//!    determinism tests in `serve::engine` fail.
+//! 3. If the event should feed the flight recorder, nothing else is
+//!    needed — snapshots copy the tracer's recent tail wholesale.
+//!
+//! # Adding a new metric
+//!
+//! * A per-request stage: extend [`breakdown::RequestBreakdown`] and
+//!   keep `stage_sum` exact — the reconciliation proptest will fail
+//!   the build if the stages stop summing to TTFT.
+//! * A gauge: extend [`timeline::TimelineSample`] and the CSV/JSON
+//!   writers; sample it where the engine fills the struct.
+//! * A served counter: extend the Prometheus rendering in
+//!   `serve::server` (`/metrics`), which follows the text exposition
+//!   format — one `# TYPE` line plus one sample line per series.
+//!
+//! # Viewing a trace in Perfetto
+//!
+//! ```sh
+//! cargo run --release -- sim --system pcr --trace-out trace.json
+//! # or a fleet view, one pid per replica:
+//! cargo run --release -- cluster --replicas 4 --trace-out trace.json
+//! ```
+//!
+//! Open <https://ui.perfetto.dev>, drag `trace.json` in (or use
+//! `chrome://tracing`). Request stages appear as async spans on the
+//! `engine` track, lane transfers as duration slices on
+//! `lane:demand` / `lane:prefetch`, and cache/router ticks as
+//! instants. The ring keeps the newest `obs.trace_capacity` events;
+//! the export notes nothing beyond what the ring retained (check
+//! `trace_dropped` in the run summary when tuning capacity).
+
+pub mod breakdown;
+pub mod timeline;
+pub mod trace;
+
+pub use breakdown::{BreakdownSummary, RequestBreakdown, TtftAttribution};
+pub use timeline::{FlightRecorder, FlightSnapshot, TimelineSample, TimelineSampler};
+pub use trace::{chrome_trace, Kind, Phase, TraceEvent, TraceSink, Track, Tracer};

@@ -1,0 +1,244 @@
+//! Periodic virtual-time gauge sampling and the flight recorder.
+//!
+//! [`TimelineSampler`] snapshots the engine's gauges (tier occupancy,
+//! queue depth, inflight prefetches, windowed hit ratio) every
+//! `interval` virtual seconds — the data behind occupancy/queue plots
+//! (paper Figs 14–16 style). Dumpable as CSV or JSON.
+//!
+//! [`FlightRecorder`] captures the last-N trace events whenever a
+//! degrade or failover counter fires, so a rare fault leaves behind
+//! the exact event context that led up to it even when the full trace
+//! ring has long since wrapped.
+
+use crate::obs::trace::TraceEvent;
+use crate::util::json::Json;
+
+/// One gauge snapshot (all fields at virtual time `t`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TimelineSample {
+    pub t: f64,
+    pub gpu_bytes: u64,
+    pub dram_bytes: u64,
+    pub ssd_bytes: u64,
+    /// Requests waiting for a prefill slot.
+    pub queue_depth: usize,
+    /// Requests in their decode phase.
+    pub decoding: usize,
+    /// Prefetch transfers in flight.
+    pub inflight_prefetch: usize,
+    /// Chunk hit ratio over the window since the previous sample.
+    pub hit_ratio_window: f64,
+}
+
+/// Samples gauges at a fixed virtual-time cadence. The engine asks
+/// `due(now)` at the top of each step and pushes a sample when it
+/// fires; `windowed_hit_ratio` turns the cache's monotonic counters
+/// into a per-window ratio.
+#[derive(Clone, Debug)]
+pub struct TimelineSampler {
+    interval: f64,
+    next_due: f64,
+    last_hits: u64,
+    last_missed: u64,
+    pub samples: Vec<TimelineSample>,
+}
+
+impl TimelineSampler {
+    /// `interval` is virtual seconds between samples (must be > 0).
+    pub fn new(interval: f64) -> Self {
+        assert!(interval > 0.0, "timeline interval must be positive");
+        TimelineSampler {
+            interval,
+            next_due: 0.0,
+            last_hits: 0,
+            last_missed: 0,
+            samples: Vec::new(),
+        }
+    }
+
+    pub fn due(&self, now: f64) -> bool {
+        now >= self.next_due
+    }
+
+    /// Delta hit ratio since the last call, given the cache's
+    /// monotonic total-hit / total-miss chunk counters.
+    pub fn windowed_hit_ratio(&mut self, hits: u64, missed: u64) -> f64 {
+        let dh = hits.saturating_sub(self.last_hits);
+        let dm = missed.saturating_sub(self.last_missed);
+        self.last_hits = hits;
+        self.last_missed = missed;
+        if dh + dm == 0 {
+            0.0
+        } else {
+            dh as f64 / (dh + dm) as f64
+        }
+    }
+
+    /// Record a sample and schedule the next one `interval` later.
+    pub fn push(&mut self, s: TimelineSample) {
+        self.next_due = s.t + self.interval;
+        self.samples.push(s);
+    }
+
+    pub fn to_csv(&self) -> String {
+        samples_to_csv(&self.samples)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("interval_s", self.interval.into()),
+            ("samples", samples_to_json(&self.samples)),
+        ])
+    }
+}
+
+/// CSV dump of a bare sample slice (the form `RunOutcome::timeline`
+/// carries once the sampler is consumed).
+pub fn samples_to_csv(samples: &[TimelineSample]) -> String {
+    let mut out = String::from(
+        "t,gpu_bytes,dram_bytes,ssd_bytes,queue_depth,decoding,inflight_prefetch,hit_ratio_window\n",
+    );
+    for s in samples {
+        out.push_str(&format!(
+            "{},{},{},{},{},{},{},{}\n",
+            s.t,
+            s.gpu_bytes,
+            s.dram_bytes,
+            s.ssd_bytes,
+            s.queue_depth,
+            s.decoding,
+            s.inflight_prefetch,
+            s.hit_ratio_window
+        ));
+    }
+    out
+}
+
+/// JSON array of a bare sample slice.
+pub fn samples_to_json(samples: &[TimelineSample]) -> Json {
+    let rows: Vec<Json> = samples
+        .iter()
+        .map(|s| {
+            Json::from_pairs(vec![
+                ("t", s.t.into()),
+                ("gpu_bytes", s.gpu_bytes.into()),
+                ("dram_bytes", s.dram_bytes.into()),
+                ("ssd_bytes", s.ssd_bytes.into()),
+                ("queue_depth", s.queue_depth.into()),
+                ("decoding", s.decoding.into()),
+                ("inflight_prefetch", s.inflight_prefetch.into()),
+                ("hit_ratio_window", s.hit_ratio_window.into()),
+            ])
+        })
+        .collect();
+    rows.into()
+}
+
+/// Why a flight snapshot was taken.
+pub const REASON_DEGRADE: &str = "degrade";
+/// A replica was killed and its open requests re-routed.
+pub const REASON_FAILOVER: &str = "failover";
+
+/// The last-N trace events at the moment a degrade/failover fired.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlightSnapshot {
+    pub t: f64,
+    pub reason: &'static str,
+    pub events: Vec<TraceEvent>,
+}
+
+/// Ring-of-snapshots: each trigger stores the tracer's recent tail.
+/// Only meaningful when tracing is on (a null sink has no tail).
+#[derive(Clone, Debug, Default)]
+pub struct FlightRecorder {
+    /// How many trailing events each snapshot keeps.
+    pub depth: usize,
+    pub snapshots: Vec<FlightSnapshot>,
+}
+
+impl FlightRecorder {
+    pub fn new(depth: usize) -> Self {
+        FlightRecorder { depth, snapshots: Vec::new() }
+    }
+
+    pub fn snapshot(&mut self, t: f64, reason: &'static str, events: Vec<TraceEvent>) {
+        self.snapshots.push(FlightSnapshot { t, reason, events });
+    }
+
+    pub fn to_json(&self) -> Json {
+        let snaps: Vec<Json> = self
+            .snapshots
+            .iter()
+            .map(|s| {
+                Json::from_pairs(vec![
+                    ("t", s.t.into()),
+                    ("reason", s.reason.into()),
+                    ("n_events", s.events.len().into()),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![("depth", self.depth.into()), ("snapshots", snaps.into())])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{Kind, Phase, Track};
+
+    #[test]
+    fn sampler_fires_on_cadence() {
+        let mut tl = TimelineSampler::new(0.5);
+        assert!(tl.due(0.0));
+        tl.push(TimelineSample { t: 0.0, ..Default::default() });
+        assert!(!tl.due(0.4));
+        assert!(tl.due(0.5));
+        tl.push(TimelineSample { t: 0.7, ..Default::default() });
+        assert!(!tl.due(1.1));
+        assert!(tl.due(1.2));
+        assert_eq!(tl.samples.len(), 2);
+    }
+
+    #[test]
+    fn windowed_hit_ratio_uses_deltas() {
+        let mut tl = TimelineSampler::new(1.0);
+        assert_eq!(tl.windowed_hit_ratio(0, 0), 0.0);
+        assert!((tl.windowed_hit_ratio(8, 2) - 0.8).abs() < 1e-12);
+        // next window: +2 hits, +2 misses
+        assert!((tl.windowed_hit_ratio(10, 4) - 0.5).abs() < 1e-12);
+        // idle window
+        assert_eq!(tl.windowed_hit_ratio(10, 4), 0.0);
+    }
+
+    #[test]
+    fn csv_and_json_carry_every_sample() {
+        let mut tl = TimelineSampler::new(1.0);
+        tl.push(TimelineSample { t: 0.0, gpu_bytes: 10, queue_depth: 3, ..Default::default() });
+        tl.push(TimelineSample { t: 1.0, dram_bytes: 20, decoding: 2, ..Default::default() });
+        let csv = tl.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("t,gpu_bytes"));
+        assert!(csv.contains("0,10,0,0,3,0,0,0"));
+        let j = tl.to_json();
+        assert_eq!(j.get("samples").and_then(|s| s.as_arr()).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn flight_recorder_stores_reason_and_tail() {
+        let mut fr = FlightRecorder::new(4);
+        let evs = vec![TraceEvent {
+            t: 1.0,
+            track: Track::Cache,
+            kind: Kind::CacheQuarantine,
+            id: 5,
+            phase: Phase::Instant,
+        }];
+        fr.snapshot(1.0, REASON_DEGRADE, evs.clone());
+        fr.snapshot(2.0, REASON_FAILOVER, evs);
+        assert_eq!(fr.snapshots.len(), 2);
+        assert_eq!(fr.snapshots[0].reason, "degrade");
+        assert_eq!(fr.snapshots[1].reason, "failover");
+        let j = fr.to_json();
+        assert_eq!(j.get("snapshots").and_then(|s| s.as_arr()).unwrap().len(), 2);
+    }
+}

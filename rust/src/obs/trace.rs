@@ -1,0 +1,435 @@
+//! Bounded ring-buffer span/event recorder for the serving pipeline.
+//!
+//! Everything here runs in *virtual time* (the engine's deterministic
+//! f64 clock), so a trace captured at a fixed seed is byte-identical
+//! across runs — the determinism tests in `serve::engine` pin that.
+//!
+//! The recorder is zero-cost when disabled: [`Tracer::emit`] takes a
+//! closure and never calls it unless tracing is on, so the off path is
+//! a single branch on a bool and no event is ever constructed.
+//!
+//! Export is Chrome trace-event JSON (see [`chrome_trace`]) rendered
+//! with the vendored deterministic [`Json`] writer — load the file at
+//! <https://ui.perfetto.dev> or `chrome://tracing`.
+
+use crate::util::json::Json;
+use std::collections::VecDeque;
+
+/// Which track (Perfetto `tid`) an event renders on. One process
+/// (`pid`) per replica, one track per pipeline lane within it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Track {
+    /// The request lifecycle: retrieval/queue spans, prefill, decode.
+    Engine,
+    /// Demand-lane transfers (KV loads the scheduled request needs now).
+    LaneDemand,
+    /// Prefetch-lane transfers (speculative SSD→DRAM promotions).
+    LanePrefetch,
+    /// Cache residency events (insert/hit/evict/promote/demote/...).
+    Cache,
+    /// Cluster routing and failover decisions.
+    Router,
+}
+
+impl Track {
+    pub fn name(self) -> &'static str {
+        match self {
+            Track::Engine => "engine",
+            Track::LaneDemand => "lane:demand",
+            Track::LanePrefetch => "lane:prefetch",
+            Track::Cache => "cache",
+            Track::Router => "router",
+        }
+    }
+}
+
+/// The event taxonomy — every span/instant the pipeline can emit.
+/// The table in [`crate::obs`] documents each one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    // request-stage spans (track: engine)
+    Retrieval,
+    Queue,
+    FaultPrepass,
+    KvLoad,
+    Prefill,
+    DecodeRound,
+    // cache events (track: cache)
+    CacheInsert,
+    CacheHit,
+    CacheEvict,
+    CachePromote,
+    CacheDemote,
+    CacheQuarantine,
+    // io-lane events (track: lane:demand / lane:prefetch)
+    IoSubmit,
+    IoComplete,
+    IoCancel,
+    IoUpgrade,
+    // cluster events (track: router)
+    Route,
+    Failover,
+}
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Retrieval => "retrieval",
+            Kind::Queue => "queue",
+            Kind::FaultPrepass => "fault_prepass",
+            Kind::KvLoad => "kv_load",
+            Kind::Prefill => "prefill",
+            Kind::DecodeRound => "decode_round",
+            Kind::CacheInsert => "cache_insert",
+            Kind::CacheHit => "cache_hit",
+            Kind::CacheEvict => "cache_evict",
+            Kind::CachePromote => "cache_promote",
+            Kind::CacheDemote => "cache_demote",
+            Kind::CacheQuarantine => "cache_quarantine",
+            Kind::IoSubmit => "io_submit",
+            Kind::IoComplete => "io_complete",
+            Kind::IoCancel => "io_cancel",
+            Kind::IoUpgrade => "io_upgrade",
+            Kind::Route => "route",
+            Kind::Failover => "failover",
+        }
+    }
+
+    /// Chrome trace-event `cat` field: groups tracks when filtering.
+    pub fn category(self) -> &'static str {
+        match self {
+            Kind::Retrieval
+            | Kind::Queue
+            | Kind::FaultPrepass
+            | Kind::KvLoad
+            | Kind::Prefill
+            | Kind::DecodeRound => "stage",
+            Kind::CacheInsert
+            | Kind::CacheHit
+            | Kind::CacheEvict
+            | Kind::CachePromote
+            | Kind::CacheDemote
+            | Kind::CacheQuarantine => "cache",
+            Kind::IoSubmit | Kind::IoComplete | Kind::IoCancel | Kind::IoUpgrade => "io",
+            Kind::Route | Kind::Failover => "cluster",
+        }
+    }
+}
+
+/// How the event renders in the Chrome trace: async begin/end pairs
+/// (overlapping request stages), complete spans with a duration
+/// (serialized work), or zero-width instants (cache/io/router ticks).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Phase {
+    /// Async span open (`ph: "b"`), matched by id.
+    Begin,
+    /// Async span close (`ph: "e"`), matched by id.
+    End,
+    /// Complete span (`ph: "X"`) with a duration in virtual seconds.
+    Complete(f64),
+    /// Instant event (`ph: "i"`).
+    Instant,
+}
+
+/// One recorded event. `t` is virtual seconds; `id` carries the
+/// request id for stage spans, the chunk-key/node payload for
+/// cache/io events, and the replica/request id for cluster events.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub t: f64,
+    pub track: Track,
+    pub kind: Kind,
+    pub id: u64,
+    pub phase: Phase,
+}
+
+/// Destination for recorded events. The engine only ever talks to the
+/// sink through [`Tracer`], which guards every call behind the
+/// enabled flag — a disabled tracer never constructs an event.
+pub trait TraceSink: Send {
+    fn record(&mut self, ev: TraceEvent);
+    /// Drain everything recorded so far (oldest first).
+    fn take(&mut self) -> Vec<TraceEvent>;
+    /// Copy of the most recent `n` events (oldest first) — the flight
+    /// recorder's snapshot source.
+    fn recent(&self, n: usize) -> Vec<TraceEvent>;
+    /// Events discarded because the ring was full.
+    fn dropped(&self) -> u64;
+}
+
+/// Sink that discards everything — the disabled path.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn record(&mut self, _ev: TraceEvent) {}
+    fn take(&mut self) -> Vec<TraceEvent> {
+        Vec::new()
+    }
+    fn recent(&self, _n: usize) -> Vec<TraceEvent> {
+        Vec::new()
+    }
+    fn dropped(&self) -> u64 {
+        0
+    }
+}
+
+/// Bounded FIFO ring: keeps the newest `cap` events, counts drops.
+#[derive(Clone, Debug)]
+pub struct RingSink {
+    buf: VecDeque<TraceEvent>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl RingSink {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        RingSink { buf: VecDeque::with_capacity(cap.min(4096)), cap, dropped: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+impl TraceSink for RingSink {
+    fn record(&mut self, ev: TraceEvent) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(ev);
+    }
+
+    fn take(&mut self) -> Vec<TraceEvent> {
+        self.buf.drain(..).collect()
+    }
+
+    fn recent(&self, n: usize) -> Vec<TraceEvent> {
+        let skip = self.buf.len().saturating_sub(n);
+        self.buf.iter().skip(skip).copied().collect()
+    }
+
+    fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// The handle instrumentation sites hold. `emit` takes a closure so
+/// the disabled path never builds the event — the whole call folds to
+/// one predictable branch, which is what keeps the null-sink overhead
+/// inside the hot-path budget.
+pub struct Tracer {
+    sink: Box<dyn TraceSink>,
+    on: bool,
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Tracer").field("on", &self.on).finish()
+    }
+}
+
+impl Tracer {
+    /// Disabled tracer (null sink) — the default everywhere.
+    pub fn off() -> Self {
+        Tracer { sink: Box::new(NullSink), on: false }
+    }
+
+    /// Enabled tracer over a bounded ring of `cap` events.
+    pub fn ring(cap: usize) -> Self {
+        Tracer { sink: Box::new(RingSink::new(cap)), on: true }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.on
+    }
+
+    /// Record an event. The closure is only called when tracing is on.
+    #[inline]
+    pub fn emit(&mut self, ev: impl FnOnce() -> TraceEvent) {
+        if self.on {
+            self.sink.record(ev());
+        }
+    }
+
+    pub fn take(&mut self) -> Vec<TraceEvent> {
+        self.sink.take()
+    }
+
+    pub fn recent(&self, n: usize) -> Vec<TraceEvent> {
+        self.sink.recent(n)
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.sink.dropped()
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::off()
+    }
+}
+
+/// Render `(pid, events)` groups as Chrome trace-event JSON — one
+/// `pid` per replica, one `tid` per [`Track`]. Timestamps are virtual
+/// seconds scaled to microseconds (the format's unit). The output is
+/// deterministic: object keys are sorted by the vendored writer and
+/// array order is recording order.
+pub fn chrome_trace(replicas: &[(usize, &[TraceEvent])]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    for &(pid, evs) in replicas {
+        for ev in evs {
+            let mut pairs: Vec<(&str, Json)> = vec![
+                ("name", ev.kind.name().into()),
+                ("cat", ev.kind.category().into()),
+                ("pid", pid.into()),
+                ("tid", ev.track.name().into()),
+                ("ts", (ev.t * 1e6).into()),
+                ("args", Json::from_pairs(vec![("id", format!("{:x}", ev.id).into())])),
+            ];
+            match ev.phase {
+                Phase::Begin => {
+                    pairs.push(("ph", "b".into()));
+                    pairs.push(("id", format!("{:x}", ev.id).into()));
+                }
+                Phase::End => {
+                    pairs.push(("ph", "e".into()));
+                    pairs.push(("id", format!("{:x}", ev.id).into()));
+                }
+                Phase::Complete(dur) => {
+                    pairs.push(("ph", "X".into()));
+                    pairs.push(("dur", (dur * 1e6).into()));
+                }
+                Phase::Instant => {
+                    pairs.push(("ph", "i".into()));
+                    pairs.push(("s", "t".into()));
+                }
+            }
+            events.push(Json::from_pairs(pairs));
+        }
+    }
+    Json::from_pairs(vec![
+        ("traceEvents", events.into()),
+        ("displayTimeUnit", "ms".into()),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64, id: u64) -> TraceEvent {
+        TraceEvent { t, track: Track::Engine, kind: Kind::Prefill, id, phase: Phase::Complete(0.5) }
+    }
+
+    #[test]
+    fn ring_sink_bounds_and_counts_drops() {
+        let mut s = RingSink::new(3);
+        for i in 0..5 {
+            s.record(ev(i as f64, i));
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.dropped(), 2);
+        let out = s.take();
+        assert_eq!(out.iter().map(|e| e.id).collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn recent_returns_tail_oldest_first() {
+        let mut s = RingSink::new(10);
+        for i in 0..6 {
+            s.record(ev(i as f64, i));
+        }
+        let tail = s.recent(2);
+        assert_eq!(tail.iter().map(|e| e.id).collect::<Vec<_>>(), vec![4, 5]);
+        // asking for more than recorded returns everything
+        assert_eq!(s.recent(100).len(), 6);
+    }
+
+    #[test]
+    fn disabled_tracer_never_builds_the_event() {
+        let mut t = Tracer::off();
+        let mut built = 0u32;
+        t.emit(|| {
+            built += 1;
+            ev(0.0, 1)
+        });
+        assert_eq!(built, 0);
+        assert!(!t.enabled());
+        assert!(t.take().is_empty());
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn enabled_tracer_records_in_order() {
+        let mut t = Tracer::ring(16);
+        t.emit(|| ev(1.0, 7));
+        t.emit(|| TraceEvent {
+            t: 2.0,
+            track: Track::Cache,
+            kind: Kind::CacheHit,
+            id: 9,
+            phase: Phase::Instant,
+        });
+        let out = t.take();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].id, 7);
+        assert_eq!(out[1].kind, Kind::CacheHit);
+    }
+
+    #[test]
+    fn chrome_export_is_valid_and_complete() {
+        let span = |t, phase| TraceEvent {
+            t,
+            track: Track::Engine,
+            kind: Kind::Retrieval,
+            id: 1,
+            phase,
+        };
+        let evs = vec![
+            span(0.0, Phase::Begin),
+            span(0.5, Phase::End),
+            ev(1.0, 1),
+            TraceEvent {
+                t: 1.5,
+                track: Track::Cache,
+                kind: Kind::CacheEvict,
+                id: 42,
+                phase: Phase::Instant,
+            },
+        ];
+        let doc = chrome_trace(&[(0, &evs)]);
+        let text = doc.dump();
+        let parsed = Json::parse(&text).expect("export must be valid json");
+        let arr = parsed.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+        assert_eq!(arr.len(), 4);
+        assert_eq!(arr[0].get("ph").and_then(|p| p.as_str()), Some("b"));
+        assert_eq!(arr[1].get("ph").and_then(|p| p.as_str()), Some("e"));
+        assert_eq!(arr[2].get("ph").and_then(|p| p.as_str()), Some("X"));
+        assert_eq!(arr[3].get("ph").and_then(|p| p.as_str()), Some("i"));
+        // µs scaling and track naming
+        assert_eq!(arr[2].get("ts").and_then(|t| t.as_f64()), Some(1e6));
+        assert_eq!(arr[2].get("dur").and_then(|d| d.as_f64()), Some(0.5e6));
+        assert_eq!(arr[3].get("tid").and_then(|t| t.as_str()), Some("cache"));
+        assert_eq!(arr[3].get("cat").and_then(|c| c.as_str()), Some("cache"));
+    }
+
+    #[test]
+    fn chrome_export_separates_replica_pids() {
+        let a = vec![ev(0.0, 1)];
+        let b = vec![ev(0.0, 2)];
+        let doc = chrome_trace(&[(0, &a), (1, &b)]);
+        let arr = doc.get("traceEvents").and_then(|e| e.as_arr()).unwrap().clone();
+        assert_eq!(arr[0].get("pid").and_then(|p| p.as_f64()), Some(0.0));
+        assert_eq!(arr[1].get("pid").and_then(|p| p.as_f64()), Some(1.0));
+    }
+}

@@ -17,6 +17,10 @@ use crate::hw::spec::{model_spec, platform_spec, ModelSpec, PlatformSpec};
 use crate::hw::transfer::TransferFabric;
 use crate::io::fault::{FaultSession, Injected, Transient};
 use crate::io::{IoStats, Lane, VirtualLanes};
+use crate::obs::breakdown::{RequestBreakdown, TtftAttribution};
+use crate::obs::timeline::{FlightRecorder, FlightSnapshot, TimelineSample, TimelineSampler};
+use crate::obs::timeline::{REASON_DEGRADE, REASON_FAILOVER};
+use crate::obs::trace::{Kind, Phase, TraceEvent, Tracer, Track};
 use crate::serve::executor::SimExecutor;
 use crate::serve::metrics::{MetricsCollector, Report};
 use crate::serve::prefetcher::SimPrefetcher;
@@ -59,6 +63,16 @@ pub struct RunOutcome {
     pub reused_gpu_chunks: u64,
     pub reused_dram_chunks: u64,
     pub reused_ssd_chunks: u64,
+    /// Recorded trace events (empty unless `obs.trace` is on).
+    pub trace: Vec<TraceEvent>,
+    /// Events the bounded trace ring had to discard.
+    pub trace_dropped: u64,
+    /// Periodic gauge samples (empty unless `obs.timeline` is on).
+    pub timeline: Vec<TimelineSample>,
+    /// Flight-recorder snapshots taken on degrade/failover triggers.
+    pub flight: Vec<FlightSnapshot>,
+    /// Per-prefill TTFT attribution rows (always recorded).
+    pub attribution: TtftAttribution,
 }
 
 /// Derive the cache geometry for (config, system, model, platform).
@@ -136,6 +150,13 @@ pub struct EngineCore {
     /// Virtual retry budget for transient SSD read errors (mirrors
     /// `IoConfig::retries` on the real path).
     io_retry_limit: u32,
+    /// Span/event recorder (null sink unless `obs.trace` is on; the
+    /// cluster layer emits routing events through it, so it is pub).
+    pub tracer: Tracer,
+    /// Periodic gauge sampler (None unless `obs.timeline` is on).
+    timeline: Option<TimelineSampler>,
+    /// Last-N event snapshots on degrade/failover (needs tracing on).
+    flight: Option<FlightRecorder>,
 }
 
 impl EngineCore {
@@ -149,6 +170,16 @@ impl EngineCore {
         // fused O(n) scan (`cache.indexed_eviction = false` — the A/B
         // knob the eviction-pressure bench and replay-parity test flip).
         cache.use_indexed_eviction = cfg.indexed_eviction;
+        let tracer = if cfg.obs_trace {
+            Tracer::ring(cfg.obs_trace_capacity)
+        } else {
+            Tracer::off()
+        };
+        // cache residency events only buffer when tracing is on — the
+        // disabled path stays one `Option` check per hook site
+        if tracer.enabled() {
+            cache.obs = Some(Vec::new());
+        }
         let fabric = TransferFabric::new(&platform);
         // Dual-lane virtual-time view of the SSD read resource: demand
         // reads preempt queued prefetch work for async-I/O systems; for
@@ -195,11 +226,37 @@ impl EngineCore {
                 .filter(|p| p.enabled())
                 .map(FaultSession::new),
             io_retry_limit: cfg.io_retries,
+            timeline: cfg.obs_timeline.then(|| TimelineSampler::new(cfg.obs_timeline_interval)),
+            flight: (cfg.obs_trace && cfg.obs_flight_depth > 0)
+                .then(|| FlightRecorder::new(cfg.obs_flight_depth)),
+            tracer,
         }
     }
 
     /// Admit a request whose retrieval has completed.
     pub fn enqueue(&mut self, req: Request) {
+        let (id, arrival, queued_at) = (req.id, req.arrival, req.queued_at);
+        self.tracer.emit(|| TraceEvent {
+            t: arrival,
+            track: Track::Engine,
+            kind: Kind::Retrieval,
+            id,
+            phase: Phase::Begin,
+        });
+        self.tracer.emit(|| TraceEvent {
+            t: queued_at,
+            track: Track::Engine,
+            kind: Kind::Retrieval,
+            id,
+            phase: Phase::End,
+        });
+        self.tracer.emit(|| TraceEvent {
+            t: queued_at,
+            track: Track::Engine,
+            kind: Kind::Queue,
+            id,
+            phase: Phase::Begin,
+        });
         self.waiting.push(req);
     }
 
@@ -229,6 +286,23 @@ impl EngineCore {
         for r in &mut out {
             r.reset_for_retry();
         }
+        let clock = self.clock;
+        for r in &out {
+            let id = r.id;
+            self.tracer.emit(|| TraceEvent {
+                t: clock,
+                track: Track::Router,
+                kind: Kind::Failover,
+                id,
+                phase: Phase::Instant,
+            });
+        }
+        if self.tracer.enabled() {
+            if let Some(fr) = self.flight.as_mut() {
+                let depth = fr.depth;
+                fr.snapshot(clock, REASON_FAILOVER, self.tracer.recent(depth));
+            }
+        }
         out
     }
 
@@ -240,6 +314,25 @@ impl EngineCore {
     /// decode round.
     pub fn step(&mut self) {
         let clock = self.clock;
+
+        // 0. periodic telemetry sample (virtual-time cadence)
+        if let Some(tl) = self.timeline.as_mut() {
+            if tl.due(clock) {
+                let hits = self.cache.stats.total_hits();
+                let missed = self.cache.stats.missed_chunks;
+                let hit_ratio_window = tl.windowed_hit_ratio(hits, missed);
+                tl.push(TimelineSample {
+                    t: clock,
+                    gpu_bytes: self.cache.used(Tier::Gpu),
+                    dram_bytes: self.cache.used(Tier::Dram),
+                    ssd_bytes: self.cache.used(Tier::Ssd),
+                    queue_depth: self.waiting.len(),
+                    decoding: self.decoding.len(),
+                    inflight_prefetch: self.prefetcher.inflight_count(),
+                    hit_ratio_window,
+                });
+            }
+        }
 
         // 1. Algorithm 1 prefetch-hint loop over the look-ahead window,
         // in reverse order (soonest-served request gets the freshest
@@ -267,17 +360,28 @@ impl EngineCore {
                 clock,
                 &targets,
                 self.io_prefetch_depth,
+                &mut self.tracer,
             );
         }
         // drop queued loads whose target was evicted or promoted since
         // submission (the engine's cancellation tokens, in virtual time)
-        self.prefetcher.cancel_stale(&self.cache, &mut self.lanes, clock);
-        self.prefetcher.drain(&mut self.cache, &mut self.lanes, clock);
+        self.prefetcher
+            .cancel_stale(&self.cache, &mut self.lanes, clock, &mut self.tracer);
+        self.prefetcher
+            .drain(&mut self.cache, &mut self.lanes, clock, &mut self.tracer);
 
         // 2. serve the head request's prefill (one pass), or a decode
         // round if nothing is waiting.
         if let Some(mut req) = self.waiting.pop() {
             req.started_at = Some(clock);
+            let req_id = req.id;
+            self.tracer.emit(|| TraceEvent {
+                t: clock,
+                track: Track::Engine,
+                kind: Kind::Queue,
+                id: req_id,
+                phase: Phase::End,
+            });
             let mut plan = plan_movement(&mut self.cache, &req.chain);
             if let Some(predicted) = req.routed_matched {
                 // the cluster directory promised `predicted` matched
@@ -341,6 +445,29 @@ impl EngineCore {
                     self.cache.quarantine(cid);
                     plan = plan_movement(&mut self.cache, &req.chain);
                     load_extra.retain(|(id, _)| plan.ssd_nodes.contains(id));
+                    self.tracer.emit(|| TraceEvent {
+                        t: clock,
+                        track: Track::Engine,
+                        kind: Kind::FaultPrepass,
+                        id: req_id,
+                        phase: Phase::Instant,
+                    });
+                    // a degrade counter fired: snapshot the event tail
+                    if self.tracer.enabled() {
+                        self.drain_cache_obs();
+                        if let Some(fr) = self.flight.as_mut() {
+                            let depth = fr.depth;
+                            fr.snapshot(clock, REASON_DEGRADE, self.tracer.recent(depth));
+                        }
+                    }
+                } else if !load_extra.is_empty() {
+                    self.tracer.emit(|| TraceEvent {
+                        t: clock,
+                        track: Track::Engine,
+                        kind: Kind::FaultPrepass,
+                        id: req_id,
+                        phase: Phase::Instant,
+                    });
                 }
             }
 
@@ -352,13 +479,27 @@ impl EngineCore {
             // backlog delays them — the contention PCR removes.
             let mut ssd_ready = clock;
             for id in &plan.ssd_nodes {
+                let node_id = id.0 as u64;
                 let t = if self.spec.async_io {
-                    match self.prefetcher.upgrade(&self.cache, &mut self.lanes, clock, *id) {
+                    match self.prefetcher.upgrade(
+                        &self.cache,
+                        &mut self.lanes,
+                        clock,
+                        *id,
+                        &mut self.tracer,
+                    ) {
                         Some(t) => t,
                         None => {
                             let bytes = self.cache.tree.node(*id).bytes;
-                            let (_, f) = self.lanes.enqueue(Lane::Demand, clock, bytes);
+                            let (s, f) = self.lanes.enqueue(Lane::Demand, clock, bytes);
                             self.lanes.stats.demand.completed += 1;
+                            self.tracer.emit(|| TraceEvent {
+                                t: s,
+                                track: Track::LaneDemand,
+                                kind: Kind::KvLoad,
+                                id: node_id,
+                                phase: Phase::Complete(f - s),
+                            });
                             f
                         }
                     }
@@ -375,6 +516,13 @@ impl EngineCore {
                             st.bytes_moved += bytes;
                             st.wait_seconds += s - clock;
                             st.serve_seconds += f - s;
+                            self.tracer.emit(|| TraceEvent {
+                                t: s,
+                                track: Track::LaneDemand,
+                                kind: Kind::KvLoad,
+                                id: node_id,
+                                phase: Phase::Complete(f - s),
+                            });
                             f
                         }
                     }
@@ -412,6 +560,30 @@ impl EngineCore {
             self.clock += dur;
             req.first_token_at = Some(self.clock);
             req.generated = 1;
+            self.tracer.emit(|| TraceEvent {
+                t: clock,
+                track: Track::Engine,
+                kind: Kind::Prefill,
+                id: req_id,
+                phase: Phase::Complete(dur),
+            });
+            // TTFT attribution: the stages sum to this attempt's TTFT
+            // exactly — `dur = ssd_wait + pipeline` and the span from
+            // arrival to first token telescopes through queued_at and
+            // started_at (= `clock`). `hidden` is the transfer time the
+            // layer-wise overlap absorbed; it never reached TTFT, so it
+            // is reported but excluded from the reconciling sum.
+            let exposed = step.pipeline - step.compute;
+            self.metrics.attribution.record(RequestBreakdown {
+                request: req_id,
+                retrieval: req.queued_at - req.arrival,
+                queue: clock - req.queued_at,
+                load_stall: step.ssd_wait,
+                compute: step.compute,
+                exposed,
+                hidden: (step.upload + step.offload - exposed).max(0.0),
+                ttft: self.clock - req.arrival,
+            });
             req.reused_tokens = plan.reused_tokens;
             req.computed_tokens = plan.computed_tokens;
             req.reused_from_gpu = plan.from_gpu;
@@ -480,11 +652,36 @@ impl EngineCore {
             let dt = self.exec.decode_round(ctx);
             self.clock += dt;
             self.breakdown.decode += dt;
+            let batch = self.decoding.len() as u64;
+            self.tracer.emit(|| TraceEvent {
+                t: clock,
+                track: Track::Engine,
+                kind: Kind::DecodeRound,
+                id: batch,
+                phase: Phase::Complete(dt),
+            });
             for r in self.decoding.iter_mut() {
                 r.generated += 1;
                 r.itl.push(dt);
             }
             retire_finished(&mut self.decoding, self.clock, &mut self.metrics);
+        }
+
+        // forward cache residency events buffered during this step,
+        // stamped with the post-step clock (strict no-op when off)
+        self.drain_cache_obs();
+    }
+
+    /// Move the cache's buffered residency events into the trace,
+    /// stamping them with the current virtual clock. The buffer only
+    /// exists while tracing is on.
+    fn drain_cache_obs(&mut self) {
+        if let Some(buf) = self.cache.obs.as_mut() {
+            let t = self.clock;
+            for mut ev in buf.drain(..) {
+                ev.t = t;
+                self.tracer.emit(|| ev);
+            }
         }
     }
 
@@ -496,6 +693,9 @@ impl EngineCore {
             .faults
             .as_ref()
             .map_or(Injected::default(), |f| f.injected());
+        self.drain_cache_obs();
+        let trace_dropped = self.tracer.dropped();
+        let trace = self.tracer.take();
         RunOutcome {
             system: self.spec.name,
             report: self.metrics.report(),
@@ -511,6 +711,11 @@ impl EngineCore {
             reused_gpu_chunks: self.reused_gpu,
             reused_dram_chunks: self.reused_dram,
             reused_ssd_chunks: self.reused_ssd,
+            trace,
+            trace_dropped,
+            timeline: self.timeline.map(|tl| tl.samples).unwrap_or_default(),
+            flight: self.flight.map(|fr| fr.snapshots).unwrap_or_default(),
+            attribution: self.metrics.attribution.clone(),
         }
     }
 }
@@ -887,5 +1092,151 @@ mod tests {
         assert!(out.breakdown.compute > 0.0);
         assert!(out.breakdown.pipeline >= out.breakdown.compute * 0.99);
         assert!(out.breakdown.ssd_wait >= 0.0);
+    }
+
+    #[test]
+    fn trace_disabled_by_default_and_records_nothing() {
+        let out = run_system("pcr", 0.8);
+        assert!(out.trace.is_empty());
+        assert!(out.timeline.is_empty());
+        assert!(out.flight.is_empty());
+        assert_eq!(out.trace_dropped, 0);
+    }
+
+    #[test]
+    fn null_sink_is_a_strict_noop() {
+        // satellite invariant: with tracing (and the timeline) enabled,
+        // the serving outcome is bit-identical to the disabled run —
+        // obs must observe, never perturb
+        let cfg = test_cfg("pcr", 0.8);
+        let wl = Workload::build(&cfg);
+        let spec = SystemSpec::named("pcr", cfg.prefetch_window).unwrap();
+        let off = run(&cfg, &spec, &wl);
+        let mut traced = test_cfg("pcr", 0.8);
+        traced.obs_trace = true;
+        traced.obs_timeline = true;
+        let on = run(&traced, &spec, &wl);
+        assert!(!on.trace.is_empty(), "tracing on must record events");
+        assert!(!on.timeline.is_empty(), "timeline on must sample");
+        assert_eq!(off.report.ttft.mean, on.report.ttft.mean);
+        assert_eq!(off.report.e2el.p99, on.report.e2el.p99);
+        assert_eq!(off.report.itl.n, on.report.itl.n);
+        assert_eq!(off.virtual_duration, on.virtual_duration);
+        assert_eq!(off.cache.total_hits(), on.cache.total_hits());
+        assert_eq!(off.cache.evicted_chunks, on.cache.evicted_chunks);
+        assert_eq!(off.io.demand.submitted, on.io.demand.submitted);
+        assert_eq!(off.prefetch_submitted, on.prefetch_submitted);
+    }
+
+    #[test]
+    fn traces_replay_byte_identically() {
+        use crate::obs::chrome_trace;
+        let mut cfg = test_cfg("pcr", 0.8);
+        cfg.obs_trace = true;
+        cfg.obs_timeline = true;
+        let wl = Workload::build(&cfg);
+        let spec = SystemSpec::named("pcr", cfg.prefetch_window).unwrap();
+        let a = run(&cfg, &spec, &wl);
+        let b = run(&cfg, &spec, &wl);
+        assert!(!a.trace.is_empty());
+        assert_eq!(a.trace, b.trace, "event streams diverged at a fixed seed");
+        assert_eq!(a.timeline, b.timeline);
+        let ja = chrome_trace(&[(0, &a.trace)]).dump();
+        let jb = chrome_trace(&[(0, &b.trace)]).dump();
+        assert_eq!(ja, jb, "chrome trace JSON must be byte-identical");
+    }
+
+    #[test]
+    fn trace_covers_stage_cache_and_io_layers() {
+        let mut cfg = test_cfg("pcr", 0.8);
+        cfg.obs_trace = true;
+        let wl = Workload::build(&cfg);
+        let spec = SystemSpec::named("pcr", cfg.prefetch_window).unwrap();
+        let out = run(&cfg, &spec, &wl);
+        let cats: std::collections::BTreeSet<&str> =
+            out.trace.iter().map(|e| e.kind.category()).collect();
+        for cat in ["stage", "cache", "io"] {
+            assert!(cats.contains(cat), "no {cat} events in the trace");
+        }
+        let kinds: std::collections::BTreeSet<&str> =
+            out.trace.iter().map(|e| e.kind.name()).collect();
+        for kind in ["retrieval", "queue", "prefill", "kv_load", "cache_insert", "io_submit"] {
+            assert!(kinds.contains(kind), "no {kind} events in the trace");
+        }
+    }
+
+    #[test]
+    fn flight_recorder_snapshots_on_degrade() {
+        let mut cfg = test_cfg("pcr", 0.8);
+        cfg.obs_trace = true;
+        cfg.fault_loss = 1.0;
+        let wl = Workload::build(&cfg);
+        let spec = SystemSpec::named("pcr", cfg.prefetch_window).unwrap();
+        let out = run(&cfg, &spec, &wl);
+        assert!(out.report.degrade.degraded_loads > 0, "loss plan must degrade");
+        assert!(!out.flight.is_empty(), "degrade must trigger a flight snapshot");
+        assert!(out.flight.iter().all(|s| s.reason == "degrade"));
+        assert!(out.flight.iter().any(|s| !s.events.is_empty()));
+    }
+
+    #[test]
+    fn timeline_samples_are_monotonic_and_bounded() {
+        let mut cfg = test_cfg("pcr", 0.8);
+        cfg.obs_timeline = true;
+        cfg.obs_timeline_interval = 0.25;
+        let wl = Workload::build(&cfg);
+        let spec = SystemSpec::named("pcr", cfg.prefetch_window).unwrap();
+        let out = run(&cfg, &spec, &wl);
+        assert!(out.timeline.len() > 1, "expected multiple samples");
+        for w in out.timeline.windows(2) {
+            assert!(w[1].t > w[0].t, "sample times must strictly increase");
+        }
+        for s in &out.timeline {
+            assert!(s.gpu_bytes <= cfg.gpu_bytes);
+            assert!(s.dram_bytes <= cfg.dram_bytes);
+            assert!(s.ssd_bytes <= cfg.ssd_bytes);
+            assert!((0.0..=1.0).contains(&s.hit_ratio_window));
+        }
+    }
+
+    #[test]
+    fn breakdown_rows_reconcile_with_ttft() {
+        // acceptance invariant: the attributed stages sum to the
+        // recorded TTFT within 1e-9, over random rates and fault mixes
+        use crate::util::proptest::{check, forall};
+        use crate::util::rng::splitmix64;
+        let spec = SystemSpec::named("pcr", 4).unwrap();
+        forall(
+            0x0B5EC0DE,
+            4,
+            |rng| rng.below(1 << 32),
+            |&s| {
+                let mut st = s;
+                let rate = 0.4 + (splitmix64(&mut st) % 16) as f64 / 10.0;
+                let mut cfg = test_cfg("pcr", rate);
+                cfg.fault_seed = splitmix64(&mut st);
+                cfg.fault_loss = (splitmix64(&mut st) % 6) as f64 / 100.0;
+                cfg.fault_transient = (splitmix64(&mut st) % 10) as f64 / 100.0;
+                cfg.fault_spike = (splitmix64(&mut st) % 10) as f64 / 100.0;
+                let wl = Workload::build(&cfg);
+                let out = run(&cfg, &spec, &wl);
+                check(
+                    out.attribution.rows.len() == out.report.finished,
+                    "single-engine runs record one row per finished request",
+                )?;
+                let residual = out.attribution.max_residual();
+                check(residual < 1e-9, format!("stage sum residual {residual}"))?;
+                check(out.report.ttft_breakdown.any(), "summary missing from report")?;
+                check(
+                    (out.report.ttft_breakdown.ttft - out.report.ttft.mean).abs() < 1e-9,
+                    "breakdown mean TTFT diverged from the recorded metric",
+                )?;
+                check(
+                    out.report.pretty().contains("ttft ="),
+                    "pretty report lost the breakdown block",
+                )?;
+                Ok(())
+            },
+        );
     }
 }

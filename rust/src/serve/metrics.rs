@@ -2,6 +2,7 @@
 //! per-run report every bench prints (the paper's Figs 14–16 rows).
 
 use crate::io::IoStats;
+use crate::obs::breakdown::{BreakdownSummary, TtftAttribution};
 use crate::serve::request::Request;
 use crate::util::stats::{Samples, Summary};
 
@@ -58,6 +59,9 @@ pub struct MetricsCollector {
     pub io: IoStats,
     /// Graceful-degradation counters (all zero on a healthy run).
     pub degrade: DegradeStats,
+    /// Per-prefill TTFT attribution rows (always recorded — the
+    /// stage split is exact and costs one push per prefill).
+    pub attribution: TtftAttribution,
 }
 
 impl MetricsCollector {
@@ -113,6 +117,7 @@ impl MetricsCollector {
         self.finished += other.finished;
         self.io.absorb(&other.io);
         self.degrade.absorb(&other.degrade);
+        self.attribution.absorb(&other.attribution);
     }
 
     pub fn report(&mut self) -> Report {
@@ -127,6 +132,7 @@ impl MetricsCollector {
             mean_reuse_ratio: self.reuse_ratio.mean(),
             io: self.io,
             degrade: self.degrade,
+            ttft_breakdown: self.attribution.summary(),
         }
     }
 }
@@ -147,6 +153,8 @@ pub struct Report {
     pub io: IoStats,
     /// Graceful-degradation counters (all zero on a healthy run).
     pub degrade: DegradeStats,
+    /// Mean TTFT attribution over all prefills (paper Table 1 analog).
+    pub ttft_breakdown: BreakdownSummary,
 }
 
 impl Report {
@@ -173,6 +181,10 @@ impl Report {
                 "\n  degrade loads={} quarantined={} retries={} failovers={} store_errors={}",
                 d.degraded_loads, d.quarantined_chunks, d.retries, d.failovers, d.store_errors
             ));
+        }
+        if self.ttft_breakdown.any() {
+            s.push_str("\n  ");
+            s.push_str(&self.ttft_breakdown.pretty());
         }
         s
     }
@@ -272,6 +284,32 @@ mod tests {
         assert_eq!(rep.degrade.store_errors, 4);
         assert!(rep.degrade.any());
         assert!(rep.pretty().contains("degrade loads=3"));
+    }
+
+    #[test]
+    fn breakdown_block_prints_and_absorbs() {
+        use crate::obs::breakdown::RequestBreakdown;
+        let row = RequestBreakdown {
+            request: 0,
+            retrieval: 0.01,
+            queue: 0.2,
+            load_stall: 0.05,
+            compute: 0.7,
+            exposed: 0.04,
+            hidden: 0.1,
+            ttft: 1.0,
+        };
+        let mut a = MetricsCollector::new();
+        a.record(&finished_request(0.0, 1.0, 2.0));
+        assert!(!a.report().pretty().contains("ttft ="), "no rows, no block");
+        let mut b = MetricsCollector::new();
+        b.attribution.record(row);
+        a.absorb(&b);
+        let rep = a.report();
+        assert!(rep.ttft_breakdown.any());
+        assert_eq!(rep.ttft_breakdown.n, 1);
+        assert!((rep.ttft_breakdown.ttft - 1.0).abs() < 1e-12);
+        assert!(rep.pretty().contains("ttft ="));
     }
 
     #[test]

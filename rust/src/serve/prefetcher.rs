@@ -19,6 +19,7 @@ use crate::cache::engine::CacheEngine;
 use crate::cache::prefix_tree::NodeId;
 use crate::cache::tier::Tier;
 use crate::io::{Lane, VirtualLanes};
+use crate::obs::trace::{Kind, Phase, TraceEvent, Tracer, Track};
 use std::collections::BTreeMap;
 
 #[derive(Clone, Copy, Debug)]
@@ -59,6 +60,7 @@ impl SimPrefetcher {
         now: f64,
         targets: &[NodeId],
         depth: usize,
+        tracer: &mut Tracer,
     ) -> usize {
         let mut n = 0;
         for &id in targets {
@@ -78,6 +80,20 @@ impl SimPrefetcher {
             self.inflight.insert(id, Inflight { start, finish });
             self.submitted += 1;
             n += 1;
+            tracer.emit(|| TraceEvent {
+                t: now,
+                track: Track::LanePrefetch,
+                kind: Kind::IoSubmit,
+                id: id.0 as u64,
+                phase: Phase::Instant,
+            });
+            tracer.emit(|| TraceEvent {
+                t: start,
+                track: Track::LanePrefetch,
+                kind: Kind::KvLoad,
+                id: id.0 as u64,
+                phase: Phase::Complete(finish - start),
+            });
         }
         n
     }
@@ -92,9 +108,10 @@ impl SimPrefetcher {
         now: f64,
         chain: &[crate::cache::chunk::ChunkKey],
         depth: usize,
+        tracer: &mut Tracer,
     ) -> usize {
         let targets = cache.prefetch_targets(chain);
-        self.submit_targets(cache, lanes, now, &targets, depth)
+        self.submit_targets(cache, lanes, now, &targets, depth, tracer)
     }
 
     /// If `id` is being prefetched, when will it land in DRAM?
@@ -115,14 +132,29 @@ impl SimPrefetcher {
         lanes: &mut VirtualLanes,
         now: f64,
         id: NodeId,
+        tracer: &mut Tracer,
     ) -> Option<f64> {
         let entry = self.inflight.get_mut(&id)?;
         lanes.stats.upgraded += 1;
+        tracer.emit(|| TraceEvent {
+            t: now,
+            track: Track::LaneDemand,
+            kind: Kind::IoUpgrade,
+            id: id.0 as u64,
+            phase: Phase::Instant,
+        });
         if entry.start > now {
             let bytes = cache.tree.node(id).bytes;
             let (start, finish) = lanes.reserve(Lane::Demand, now, bytes);
             entry.start = start;
             entry.finish = finish;
+            tracer.emit(|| TraceEvent {
+                t: start,
+                track: Track::LaneDemand,
+                kind: Kind::KvLoad,
+                id: id.0 as u64,
+                phase: Phase::Complete(finish - start),
+            });
         }
         Some(entry.finish)
     }
@@ -137,6 +169,7 @@ impl SimPrefetcher {
         cache: &CacheEngine,
         lanes: &mut VirtualLanes,
         now: f64,
+        tracer: &mut Tracer,
     ) -> usize {
         let stale: Vec<NodeId> = self
             .inflight
@@ -154,6 +187,13 @@ impl SimPrefetcher {
             self.inflight.remove(id);
             self.cancelled += 1;
             lanes.stats.prefetch.cancelled += 1;
+            tracer.emit(|| TraceEvent {
+                t: now,
+                track: Track::LanePrefetch,
+                kind: Kind::IoCancel,
+                id: id.0 as u64,
+                phase: Phase::Instant,
+            });
         }
         stale.len()
     }
@@ -161,17 +201,30 @@ impl SimPrefetcher {
     /// Promote every load that has completed by `now` into DRAM
     /// (Algorithm 1's `DrainCompletedSSDLoads`). Chunks that no longer
     /// fit (DRAM pressure) stay on SSD and count as `dropped`.
-    pub fn drain(&mut self, cache: &mut CacheEngine, lanes: &mut VirtualLanes, now: f64) {
-        let done: Vec<NodeId> = self
+    pub fn drain(
+        &mut self,
+        cache: &mut CacheEngine,
+        lanes: &mut VirtualLanes,
+        now: f64,
+        tracer: &mut Tracer,
+    ) {
+        let done: Vec<(NodeId, f64)> = self
             .inflight
             .iter()
             .filter(|(_, f)| f.finish <= now)
-            .map(|(id, _)| *id)
+            .map(|(id, f)| (*id, f.finish))
             .collect();
-        for id in done {
+        for (id, finish) in done {
             self.inflight.remove(&id);
             self.completed += 1;
             lanes.stats.prefetch.completed += 1;
+            tracer.emit(|| TraceEvent {
+                t: finish,
+                track: Track::LanePrefetch,
+                kind: Kind::IoComplete,
+                id: id.0 as u64,
+                phase: Phase::Instant,
+            });
             // The chunk may have been evicted from SSD meanwhile; only
             // promote if it is still resident somewhere.
             if cache.tree.node(id).tiers.contains(Tier::Ssd)
@@ -198,7 +251,7 @@ mod tests {
     const CB: u64 = 1_000_000; // 1 MB chunks
     const DEEP: usize = usize::MAX; // unbounded depth for legacy cases
 
-    fn setup() -> (CacheEngine, VirtualLanes) {
+    fn setup() -> (CacheEngine, VirtualLanes, Tracer) {
         let cache = CacheEngine::new(CacheConfig {
             chunk_tokens: 256,
             gpu_capacity: 100 * CB,
@@ -206,7 +259,8 @@ mod tests {
             ssd_capacity: 100 * CB,
             policy: "lookahead-lru".into(),
         });
-        (cache, VirtualLanes::new(0.001, 0.0)) // 1 MB/s => 1s per chunk
+        // 1 MB/s => 1s per chunk
+        (cache, VirtualLanes::new(0.001, 0.0), Tracer::off())
     }
 
     fn chain(cache: &mut CacheEngine, tag: u32, n: usize) -> Vec<ChunkKey> {
@@ -224,21 +278,21 @@ mod tests {
 
     #[test]
     fn submits_and_drains_in_order() {
-        let (mut cache, mut lanes) = setup();
+        let (mut cache, mut lanes, mut tr) = setup();
         let keys = chain(&mut cache, 1, 2);
         let mut pf = SimPrefetcher::new();
-        let n = pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP);
+        let n = pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP, &mut tr);
         assert_eq!(n, 2);
         assert_eq!(pf.inflight_count(), 2);
         // nothing ready at t=0.5
-        pf.drain(&mut cache, &mut lanes, 0.5);
+        pf.drain(&mut cache, &mut lanes, 0.5, &mut tr);
         assert_eq!(pf.completed, 0);
         // first chunk lands at 1.0, second at 2.0 (FIFO lane)
-        pf.drain(&mut cache, &mut lanes, 1.0);
+        pf.drain(&mut cache, &mut lanes, 1.0, &mut tr);
         assert_eq!(pf.completed, 1);
         let id0 = cache.tree.get(keys[0]).unwrap();
         assert!(cache.tree.node(id0).tiers.contains(Tier::Dram));
-        pf.drain(&mut cache, &mut lanes, 2.0);
+        pf.drain(&mut cache, &mut lanes, 2.0, &mut tr);
         assert_eq!(pf.completed, 2);
         assert_eq!(lanes.stats.prefetch.completed, 2);
         cache.check_accounting().unwrap();
@@ -246,33 +300,33 @@ mod tests {
 
     #[test]
     fn no_duplicate_submission() {
-        let (mut cache, mut lanes) = setup();
+        let (mut cache, mut lanes, mut tr) = setup();
         let keys = chain(&mut cache, 2, 2);
         let mut pf = SimPrefetcher::new();
-        assert_eq!(pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP), 2);
-        assert_eq!(pf.submit_chain(&cache, &mut lanes, 0.1, &keys, DEEP), 0);
+        assert_eq!(pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP, &mut tr), 2);
+        assert_eq!(pf.submit_chain(&cache, &mut lanes, 0.1, &keys, DEEP, &mut tr), 0);
         assert_eq!(pf.submitted, 2);
         assert_eq!(lanes.stats.prefetch.submitted, 2);
     }
 
     #[test]
     fn ready_at_reports_lane_finish() {
-        let (mut cache, mut lanes) = setup();
+        let (mut cache, mut lanes, mut tr) = setup();
         let keys = chain(&mut cache, 3, 1);
         let mut pf = SimPrefetcher::new();
-        pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP);
+        pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP, &mut tr);
         let id = cache.tree.get(keys[0]).unwrap();
         assert!((pf.ready_at(id).unwrap() - 1.0).abs() < 1e-9);
     }
 
     #[test]
     fn dram_pressure_counts_drops() {
-        let (mut cache, mut lanes) = setup();
+        let (mut cache, mut lanes, mut tr) = setup();
         // DRAM fits 3 chunks; chain of 5 on SSD
         let keys = chain(&mut cache, 4, 5);
         let mut pf = SimPrefetcher::new();
-        pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP);
-        pf.drain(&mut cache, &mut lanes, 100.0);
+        pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP, &mut tr);
+        pf.drain(&mut cache, &mut lanes, 100.0, &mut tr);
         assert_eq!(pf.completed, 5);
         // DRAM holds at most 3 chunks; later promotions may evict
         // earlier ones (legal — they keep their SSD copies), so the
@@ -295,7 +349,7 @@ mod tests {
 
     #[test]
     fn stale_and_duplicate_targets_are_skipped() {
-        let (mut cache, mut lanes) = setup();
+        let (mut cache, mut lanes, mut tr) = setup();
         let keys = chain(&mut cache, 6, 2);
         let ids: Vec<NodeId> = keys
             .iter()
@@ -303,63 +357,64 @@ mod tests {
             .collect();
         cache.promote(ids[0], Tier::Dram); // no longer SSD-only
         let mut pf = SimPrefetcher::new();
-        let n = pf.submit_targets(&cache, &mut lanes, 0.0, &[ids[0], ids[1], ids[1]], DEEP);
+        let n =
+            pf.submit_targets(&cache, &mut lanes, 0.0, &[ids[0], ids[1], ids[1]], DEEP, &mut tr);
         assert_eq!(n, 1, "stale + in-call duplicate must be skipped");
         assert_eq!(pf.submitted, 1);
     }
 
     #[test]
     fn dram_resident_chunks_not_prefetched() {
-        let (mut cache, mut lanes) = setup();
+        let (mut cache, mut lanes, mut tr) = setup();
         let keys = chain(&mut cache, 5, 2);
         let id0 = cache.tree.get(keys[0]).unwrap();
         cache.promote(id0, Tier::Dram);
         let mut pf = SimPrefetcher::new();
-        assert_eq!(pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP), 1);
+        assert_eq!(pf.submit_chain(&cache, &mut lanes, 0.0, &keys, DEEP, &mut tr), 1);
     }
 
     #[test]
     fn bounded_depth_applies_backpressure() {
-        let (mut cache, mut lanes) = setup();
+        let (mut cache, mut lanes, mut tr) = setup();
         let keys = chain(&mut cache, 7, 5);
         let mut pf = SimPrefetcher::new();
-        let n = pf.submit_chain(&cache, &mut lanes, 0.0, &keys, 2);
+        let n = pf.submit_chain(&cache, &mut lanes, 0.0, &keys, 2, &mut tr);
         assert_eq!(n, 2, "depth 2 admits two loads");
         assert_eq!(lanes.stats.prefetch.rejected, 3);
         // drain frees slots: resubmission admits the rest
-        pf.drain(&mut cache, &mut lanes, 10.0);
-        let n2 = pf.submit_chain(&cache, &mut lanes, 10.0, &keys, 2);
+        pf.drain(&mut cache, &mut lanes, 10.0, &mut tr);
+        let n2 = pf.submit_chain(&cache, &mut lanes, 10.0, &keys, 2, &mut tr);
         assert_eq!(n2, 2);
     }
 
     #[test]
     fn upgrade_claims_queued_load_at_demand_priority() {
-        let (mut cache, mut lanes) = setup();
+        let (mut cache, mut lanes, mut tr) = setup();
         let keys = chain(&mut cache, 8, 3);
         let ids: Vec<NodeId> = keys.iter().map(|k| cache.tree.get(*k).unwrap()).collect();
         let mut pf = SimPrefetcher::new();
-        pf.submit_targets(&cache, &mut lanes, 0.0, &ids, DEEP);
+        pf.submit_targets(&cache, &mut lanes, 0.0, &ids, DEEP, &mut tr);
         // third load queues behind two others: starts at 2.0
         assert!((pf.ready_at(ids[2]).unwrap() - 3.0).abs() < 1e-9);
         // a demand claim at t=0 re-issues it on the demand lane (1s)
-        let t = pf.upgrade(&cache, &mut lanes, 0.0, ids[2]).unwrap();
+        let t = pf.upgrade(&cache, &mut lanes, 0.0, ids[2], &mut tr).unwrap();
         assert!((t - 1.0).abs() < 1e-9, "upgraded ready {t}");
         assert_eq!(lanes.stats.upgraded, 1);
         // a load already on the device keeps its schedule
-        let t0 = pf.upgrade(&cache, &mut lanes, 0.5, ids[0]).unwrap();
+        let t0 = pf.upgrade(&cache, &mut lanes, 0.5, ids[0], &mut tr).unwrap();
         assert!((t0 - 1.0).abs() < 1e-9);
         // unknown node: no upgrade
-        pf.drain(&mut cache, &mut lanes, 10.0);
-        assert!(pf.upgrade(&cache, &mut lanes, 10.0, ids[0]).is_none());
+        pf.drain(&mut cache, &mut lanes, 10.0, &mut tr);
+        assert!(pf.upgrade(&cache, &mut lanes, 10.0, ids[0], &mut tr).is_none());
     }
 
     #[test]
     fn quarantined_targets_are_cancelled_not_promoted() {
-        let (mut cache, mut lanes) = setup();
+        let (mut cache, mut lanes, mut tr) = setup();
         let keys = chain(&mut cache, 10, 3);
         let ids: Vec<NodeId> = keys.iter().map(|k| cache.tree.get(*k).unwrap()).collect();
         let mut pf = SimPrefetcher::new();
-        pf.submit_targets(&cache, &mut lanes, 0.0, &ids, DEEP);
+        pf.submit_targets(&cache, &mut lanes, 0.0, &ids, DEEP, &mut tr);
         assert_eq!(pf.inflight_count(), 3);
         // the middle chunk's stored copy turned out unreadable: the
         // engine quarantines it and its resident subtree (ids[2] goes
@@ -367,11 +422,11 @@ mod tests {
         cache.quarantine(ids[1]);
         // loads start at 0/1/2s; at t=0.5 the reads for ids[1..] have
         // not started — they cancel instead of promoting ghosts
-        let n = pf.cancel_stale(&cache, &mut lanes, 0.5);
+        let n = pf.cancel_stale(&cache, &mut lanes, 0.5, &mut tr);
         assert_eq!(n, 2);
         assert_eq!(pf.inflight_count(), 1);
         // the started load for the still-resident ids[0] lands fine
-        pf.drain(&mut cache, &mut lanes, 10.0);
+        pf.drain(&mut cache, &mut lanes, 10.0, &mut tr);
         assert_eq!(pf.completed, 1);
         assert_eq!(pf.dropped, 0);
         cache.check_accounting().unwrap();
@@ -379,23 +434,42 @@ mod tests {
 
     #[test]
     fn cancel_stale_drops_unstarted_loads_only() {
-        let (mut cache, mut lanes) = setup();
+        let (mut cache, mut lanes, mut tr) = setup();
         let keys = chain(&mut cache, 9, 3);
         let ids: Vec<NodeId> = keys.iter().map(|k| cache.tree.get(*k).unwrap()).collect();
         let mut pf = SimPrefetcher::new();
-        pf.submit_targets(&cache, &mut lanes, 0.0, &ids, DEEP);
+        pf.submit_targets(&cache, &mut lanes, 0.0, &ids, DEEP, &mut tr);
         // loads start at 0.0 / 1.0 / 2.0; make all targets stale
         for &id in &ids {
             cache.promote(id, Tier::Dram);
         }
         // at t=0.5 only the 2nd and 3rd loads haven't started
-        let n = pf.cancel_stale(&cache, &mut lanes, 0.5);
+        let n = pf.cancel_stale(&cache, &mut lanes, 0.5, &mut tr);
         assert_eq!(n, 2);
         assert_eq!(pf.cancelled, 2);
         assert_eq!(lanes.stats.prefetch.cancelled, 2);
         assert_eq!(pf.inflight_count(), 1, "started load keeps going");
-        pf.drain(&mut cache, &mut lanes, 10.0);
+        pf.drain(&mut cache, &mut lanes, 10.0, &mut tr);
         assert_eq!(pf.completed, 1);
         cache.check_accounting().unwrap();
+    }
+
+    #[test]
+    fn enabled_tracer_sees_the_full_io_lifecycle() {
+        let (mut cache, mut lanes, _) = setup();
+        let mut tr = Tracer::ring(64);
+        let keys = chain(&mut cache, 11, 3);
+        let ids: Vec<NodeId> = keys.iter().map(|k| cache.tree.get(*k).unwrap()).collect();
+        let mut pf = SimPrefetcher::new();
+        pf.submit_targets(&cache, &mut lanes, 0.0, &ids, DEEP, &mut tr);
+        pf.upgrade(&cache, &mut lanes, 0.0, ids[2], &mut tr);
+        cache.promote(ids[1], Tier::Dram); // stale before its read starts
+        pf.cancel_stale(&cache, &mut lanes, 0.5, &mut tr);
+        pf.drain(&mut cache, &mut lanes, 10.0, &mut tr);
+        let kinds: std::collections::BTreeSet<&str> =
+            tr.take().iter().map(|e| e.kind.name()).collect();
+        for want in ["io_submit", "io_complete", "io_cancel", "io_upgrade", "kv_load"] {
+            assert!(kinds.contains(want), "missing {want} in {kinds:?}");
+        }
     }
 }

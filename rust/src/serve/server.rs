@@ -4,12 +4,16 @@
 //!   POST /generate  {"tokens": [...]}            -> generation + timing
 //!   POST /rag       {"query": "free text"}       -> retrieve + generate
 //!   GET  /stats                                  -> cache/latency stats
+//!   GET  /metrics                                -> Prometheus text format
 //!   GET  /healthz                                -> 200 ok
 //!
 //! One acceptor thread + a worker pool; the PJRT executor is behind a
 //! mutex (single CPU "GPU"), which is exactly the paper's one-executor
 //! regime — batching happens upstream in the scheduler.
 
+use crate::cache::engine::CacheStats;
+use crate::cache::tier::Tier;
+use crate::io::IoStats;
 use crate::rag::retriever::Retriever;
 use crate::rag::tokenizer::Tokenizer;
 use crate::runtime::executor::ExecutorHandle;
@@ -117,14 +121,24 @@ fn handle_connection(stream: TcpStream, state: &ServerState) -> Result<()> {
     }
     let body_text = String::from_utf8_lossy(&body).to_string();
 
-    let (code, response) = route(&method, &path, &body_text, state);
+    // /metrics speaks the Prometheus text exposition format; every
+    // other route answers JSON.
+    let (code, payload, ctype) = if method == "GET" && path == "/metrics" {
+        match metrics_text(state) {
+            Ok(text) => (200u16, text, "text/plain; version=0.0.4"),
+            Err(e) => (500, err_json(&e).dump(), "application/json"),
+        }
+    } else {
+        let (code, response) = route(&method, &path, &body_text, state);
+        (code, response.dump(), "application/json")
+    };
     let mut stream = reader.into_inner();
-    let payload = response.dump();
     write!(
         stream,
-        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
         code,
         status_text(code),
+        ctype,
         payload.len(),
         payload
     )?;
@@ -189,6 +203,76 @@ fn stats_json(state: &ServerState) -> Json {
     ])
 }
 
+/// Gather the live counters and render them for a Prometheus scrape.
+fn metrics_text(state: &ServerState) -> Result<String> {
+    let requests = *state.requests.lock().unwrap();
+    let mut ttft = state.ttft.lock().unwrap();
+    let ttft_s = if ttft.is_empty() {
+        None
+    } else {
+        Some((ttft.mean(), ttft.percentile(99.0)))
+    };
+    let exec = state.executor.stats()?;
+    Ok(prometheus_text(
+        requests,
+        ttft_s,
+        &exec.cache,
+        &exec.io.unwrap_or_default(),
+        exec.store_errors,
+    ))
+}
+
+/// Render the Prometheus text exposition format (version 0.0.4): a
+/// `# TYPE` line followed by the samples for each series. Pure so the
+/// format can be pinned by a unit test without binding a socket.
+/// `ttft` is `(mean_s, p99_s)` — `None` before the first request, in
+/// which case the TTFT gauges are omitted (Prometheus treats an
+/// absent series as "no data", which is more honest than 0).
+pub fn prometheus_text(
+    requests: u64,
+    ttft: Option<(f64, f64)>,
+    cache: &CacheStats,
+    io: &IoStats,
+    store_errors: u64,
+) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(s, "# TYPE pcr_requests_total counter");
+    let _ = writeln!(s, "pcr_requests_total {requests}");
+    if let Some((mean, p99)) = ttft {
+        let _ = writeln!(s, "# TYPE pcr_ttft_seconds_mean gauge");
+        let _ = writeln!(s, "pcr_ttft_seconds_mean {mean}");
+        let _ = writeln!(s, "# TYPE pcr_ttft_seconds_p99 gauge");
+        let _ = writeln!(s, "pcr_ttft_seconds_p99 {p99}");
+    }
+    let _ = writeln!(s, "# TYPE pcr_cache_hit_ratio gauge");
+    let _ = writeln!(s, "pcr_cache_hit_ratio {}", cache.hit_ratio());
+    let _ = writeln!(s, "# TYPE pcr_cache_hits_total counter");
+    for t in Tier::ALL {
+        let hits = cache.hit_chunks[t.idx()];
+        let _ = writeln!(s, "pcr_cache_hits_total{{tier=\"{}\"}} {}", t.name(), hits);
+    }
+    let _ = writeln!(s, "# TYPE pcr_cache_misses_total counter");
+    let _ = writeln!(s, "pcr_cache_misses_total {}", cache.missed_chunks);
+    let _ = writeln!(s, "# TYPE pcr_cache_evictions_total counter");
+    for t in Tier::ALL {
+        let ev = cache.evicted_chunks[t.idx()];
+        let _ = writeln!(s, "pcr_cache_evictions_total{{tier=\"{}\"}} {}", t.name(), ev);
+    }
+    let _ = writeln!(s, "# TYPE pcr_io_completed_total counter");
+    let _ = writeln!(s, "pcr_io_completed_total{{lane=\"demand\"}} {}", io.demand.completed);
+    let _ = writeln!(s, "pcr_io_completed_total{{lane=\"prefetch\"}} {}", io.prefetch.completed);
+    let _ = writeln!(s, "# TYPE pcr_io_cancelled_total counter");
+    let _ = writeln!(s, "pcr_io_cancelled_total{{lane=\"prefetch\"}} {}", io.prefetch.cancelled);
+    let _ = writeln!(s, "# TYPE pcr_io_upgraded_total counter");
+    let _ = writeln!(s, "pcr_io_upgraded_total {}", io.upgraded);
+    // the degrade series: store-level errors absorbed by the
+    // graceful-degradation path (nonzero means recompute fallbacks)
+    let _ = writeln!(s, "# TYPE pcr_degrade_store_errors_total counter");
+    let _ = writeln!(s, "pcr_degrade_store_errors_total {store_errors}");
+    s
+}
+
 fn parse_tokens(j: &Json, vocab: u32) -> Result<Vec<u32>> {
     let arr = j
         .get("tokens")
@@ -251,6 +335,19 @@ fn serve_tokens(tokens: &[u32], state: &ServerState) -> Result<Json> {
 
 /// Tiny blocking HTTP client for tests and the load-driver example.
 pub fn http_request(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, Json)> {
+    let (code, text) = http_request_text(addr, method, path, body)?;
+    let j = Json::parse(text.trim()).map_err(|e| anyhow!("{e}"))?;
+    Ok((code, j))
+}
+
+/// Like [`http_request`] but returns the raw response body — needed
+/// for non-JSON routes such as the Prometheus `/metrics` scrape.
+pub fn http_request_text(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: &str,
+) -> Result<(u16, String)> {
     let mut stream = TcpStream::connect(addr)?;
     write!(
         stream,
@@ -268,14 +365,54 @@ pub fn http_request(addr: &str, method: &str, path: &str, body: &str) -> Result<
     let body_start = response
         .find("\r\n\r\n")
         .ok_or_else(|| anyhow!("no body"))?;
-    let j = Json::parse(response[body_start..].trim()).map_err(|e| anyhow!("{e}"))?;
-    Ok((code, j))
+    Ok((code, response[body_start + 4..].to_string()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::runtime::manifest::{default_artifacts_dir, Manifest};
+
+    #[test]
+    fn prometheus_text_renders_every_series_with_a_type_line() {
+        use crate::io::LaneStats;
+        let cache = CacheStats {
+            hit_chunks: [1, 2, 3],
+            missed_chunks: 6,
+            evicted_chunks: [0, 4, 0],
+            ..Default::default()
+        };
+        let io = IoStats {
+            demand: LaneStats { completed: 9, ..Default::default() },
+            prefetch: LaneStats { completed: 5, cancelled: 2, ..Default::default() },
+            upgraded: 4,
+            ..Default::default()
+        };
+        let text = prometheus_text(7, Some((0.25, 0.5)), &cache, &io, 2);
+        assert!(text.contains("pcr_requests_total 7"));
+        assert!(text.contains("pcr_ttft_seconds_mean 0.25"));
+        assert!(text.contains("pcr_ttft_seconds_p99 0.5"));
+        assert!(text.contains("pcr_cache_hit_ratio 0.5"), "{text}");
+        assert!(text.contains("pcr_cache_hits_total{tier=\"dram\"} 2"));
+        assert!(text.contains("pcr_cache_hits_total{tier=\"ssd\"} 3"));
+        assert!(text.contains("pcr_cache_evictions_total{tier=\"dram\"} 4"));
+        assert!(text.contains("pcr_io_completed_total{lane=\"demand\"} 9"));
+        assert!(text.contains("pcr_io_cancelled_total{lane=\"prefetch\"} 2"));
+        assert!(text.contains("pcr_io_upgraded_total 4"));
+        assert!(text.contains("pcr_degrade_store_errors_total 2"));
+        // every emitted sample line belongs to a `# TYPE`-declared series
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let name = line.split(['{', ' ']).next().unwrap();
+            assert!(
+                text.contains(&format!("# TYPE {name} ")),
+                "series {name} has no TYPE line"
+            );
+        }
+        // before the first request the TTFT gauges are absent entirely
+        let cold = prometheus_text(0, None, &cache, &io, 0);
+        assert!(!cold.contains("pcr_ttft_seconds"));
+        assert!(cold.contains("pcr_requests_total 0"));
+    }
 
     /// Spin a real server (if artifacts exist) and poke every route.
     #[test]
@@ -329,6 +466,16 @@ mod tests {
         // both requests hit DRAM)
         assert!(stats.get("io_upgraded").is_some());
         assert!(stats.get("io_demand_completed").is_some());
+
+        // Prometheus scrape: text content, TTFT + hit-ratio + degrade
+        // series all present after two served requests
+        let (code, scrape) = http_request_text(&addr, "GET", "/metrics", "").unwrap();
+        assert_eq!(code, 200);
+        assert!(scrape.contains("pcr_requests_total 2"), "{scrape}");
+        assert!(scrape.contains("pcr_ttft_seconds_mean "), "{scrape}");
+        assert!(scrape.contains("pcr_ttft_seconds_p99 "), "{scrape}");
+        assert!(scrape.contains("pcr_cache_hit_ratio "), "{scrape}");
+        assert!(scrape.contains("pcr_degrade_store_errors_total "), "{scrape}");
 
         // error paths
         let (code, _) = http_request(&addr, "POST", "/generate", "{}").unwrap();

@@ -39,10 +39,16 @@ impl Samples {
     }
 
     pub fn min(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
         self.xs.iter().copied().fold(f64::INFINITY, f64::min)
     }
 
     pub fn max(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
         self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
@@ -90,7 +96,7 @@ impl Samples {
             p90: self.percentile(90.0),
             p95: self.percentile(95.0),
             p99: self.percentile(99.0),
-            max: if self.is_empty() { f64::NAN } else { self.max() },
+            max: self.max(),
         }
     }
 }
@@ -236,6 +242,21 @@ mod tests {
         let mut s = Samples::new();
         assert!(s.mean().is_nan());
         assert!(s.percentile(50.0).is_nan());
+    }
+
+    #[test]
+    fn empty_min_max_are_nan_not_inf() {
+        // regression: min/max used to fold from ±inf on empty sets,
+        // leaking "inf" into pretty reports and bench JSON
+        let s = Samples::new();
+        assert!(s.min().is_nan());
+        assert!(s.max().is_nan());
+        assert!(s.clone().summary().max.is_nan());
+        let mut s = s;
+        s.push(2.0);
+        s.push(-1.0);
+        assert_eq!(s.min(), -1.0);
+        assert_eq!(s.max(), 2.0);
     }
 
     #[test]
